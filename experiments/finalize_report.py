@@ -1,0 +1,21 @@
+"""Inject the generated dry-run/roofline tables into EXPERIMENTS.md."""
+
+import io
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.analysis import report  # noqa: E402
+
+recs = report.load("experiments/dryrun")
+dr = report.dryrun_table(recs)
+rf = report.roofline_table(recs)
+
+with open("EXPERIMENTS.md") as f:
+    text = f.read()
+text = text.replace("<!-- DRYRUN_TABLE -->", dr)
+text = text.replace("<!-- ROOFLINE_TABLE -->", rf)
+with open("EXPERIMENTS.md", "w") as f:
+    f.write(text)
+print("tables injected:",
+      dr.count("\n") + 1, "dryrun rows;", rf.count("\n") + 1, "roofline rows")

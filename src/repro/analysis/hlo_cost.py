@@ -1,0 +1,342 @@
+"""Loop-aware cost accounting over compiled HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE, which makes
+it useless for scan-over-layers models (a 94-layer scan reports one layer).
+The compiled HLO text, however, carries ``known_trip_count`` annotations on
+every static-trip-count loop — so we reconstruct exact per-step totals by
+parsing the module and recursively multiplying loop bodies:
+
+    cost(computation) = sum(op costs) + sum_{while w} trip(w) * cost(body(w))
+
+Accounted per instruction:
+* ``dot``: FLOPs = 2 * numel(result) * prod(lhs contracting dims); bytes =
+  operands + result.  (On the CPU/SPMD dry-run target dots are never fused
+  away; we assert none hide inside fusion bodies.)
+* fusions / other compute ops: bytes = operands + result (the standard
+  HloCostAnalysis convention); elementwise FLOPs are ignored — consistent
+  with the MODEL_FLOPS = 6·N·D convention used for the usefulness ratio.
+* collectives: transferred bytes by result type, split per op kind.
+* free ops (parameter, constant, tuple plumbing, bitcast) cost nothing.
+
+Outputs feed ``repro.analysis.roofline``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_TYPE_RE = re.compile(
+    r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w-]+)\((.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*(?:\([^)]*\))?\s*"
+                            r"\(.*\)\s*->.*{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*([0-9]+)')
+_BODY_RE = re.compile(r'body=%?([\w.-]+)')
+_COND_RE = re.compile(r'condition=%?([\w.-]+)')
+_CALLS_RE = re.compile(r'calls=%?([\w.-]+)')
+_LHS_CONTRACT_RE = re.compile(r'lhs_contracting_dims=\{([0-9,]*)\}')
+
+
+def _type_numel_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _TYPE_RE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dtype, 0)
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * nb
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _TYPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str                 # operand list + attributes (raw tail)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] += v
+        return self
+
+    def scaled(self, factor: float) -> "Cost":
+        c = Cost(self.flops * factor, self.bytes * factor)
+        for k, v in self.coll.items():
+            c.coll[k] = v * factor
+        return c
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.types: dict[str, str] = {}      # instr name -> result type str
+        self.entry: str | None = None
+        self._parse(text)
+        self._cost_memo: dict[str, Cost] = {}
+
+    _COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+    def _parse(self, text: str):
+        current: list[Instr] | None = None
+        for raw in text.splitlines():
+            # tuple types embed /*index=N*/ comments whose '=' breaks the
+            # instruction regex — strip all comments first.
+            line = self._COMMENT_RE.sub("", raw).rstrip()
+            if not line:
+                continue
+            if current is None or not line.startswith(" "):
+                m = _COMP_START_RE.match(line.strip()) if "{" in line else None
+                if m and "->" in line:
+                    name = m.group(1)
+                    current = []
+                    self.computations[name] = current
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = name
+                    continue
+            if line.strip() == "}":
+                current = None
+                continue
+            if current is None:
+                continue
+            im = _INSTR_RE.match(line)
+            if im:
+                name, rtype, op, rest = im.groups()
+                instr = Instr(name=name, result_type=rtype, op=op, rest=rest)
+                current.append(instr)
+                self.types[name] = rtype
+
+    # -- costing -------------------------------------------------------------
+
+    def _operand_names(self, rest: str) -> list[str]:
+        cut = rest.find(")")
+        return _OPERAND_RE.findall(rest[:cut if cut >= 0 else len(rest)])
+
+    def _fusion_bytes(self, instr: Instr) -> float:
+        """HBM bytes for a fusion: result + operands, but an operand that is
+        only touched through dynamic-slice / dynamic-update-slice inside the
+        fusion contributes the slice size, not the full buffer — this is how
+        XLA actually executes loop-carried stacks (in-place aliasing), and
+        the naive full-operand convention overcounts them by the trip count.
+        """
+        cm = _CALLS_RE.search(instr.rest)
+        comp = self.computations.get(cm.group(1)) if cm else None
+        operands = self._operand_names(instr.rest)
+        if comp is None:
+            return (_type_numel_bytes(instr.result_type)
+                    + sum(_type_numel_bytes(self.types.get(o, ""))
+                          for o in operands))
+        # parameter index -> name, and access mode
+        param_names: dict[int, str] = {}
+        for i_ in comp:
+            if i_.op == "parameter":
+                m = re.match(r"\s*(\d+)", i_.rest)
+                if m:
+                    param_names[int(m.group(1))] = i_.name
+        access: dict[str, float | str] = {}      # param name -> bytes|"full"
+        root = comp[-1] if comp else None
+        pset = set(param_names.values())
+        # dtype converts of a whole param are transparent for aliasing
+        # analysis: XLA emits convert(DUS(convert(stack), upd)) for mixed-
+        # precision stashes; the untouched elements round-trip losslessly so
+        # real traffic is the update slice. Track convert aliases.
+        alias: dict[str, str] = {}               # instr name -> param name
+        dus_results: set[str] = set()
+        for i_ in comp:
+            if i_.op == "parameter":
+                continue
+            ops_ = self._operand_names(i_.rest)
+            if i_.op == "convert" and len(ops_) == 1:
+                src = alias.get(ops_[0], ops_[0])
+                if src in pset:
+                    alias[i_.name] = src
+                    continue
+                if ops_[0] in dus_results:       # convert-of-DUS (root case)
+                    dus_results.add(i_.name)
+                    continue
+            if i_.op == "dynamic-update-slice":
+                dus_results.add(i_.name)
+            for j, o in enumerate(ops_):
+                src = alias.get(o, o)
+                if src not in pset:
+                    continue
+                if i_.op == "dynamic-slice" and j == 0:
+                    b = _type_numel_bytes(i_.result_type)
+                elif i_.op == "dynamic-update-slice" and j == 0:
+                    upd = ops_[1] if len(ops_) > 1 else None
+                    b = _type_numel_bytes(self.types.get(upd, ""))
+                else:
+                    access[src] = "full"
+                    continue
+                if access.get(src) != "full":
+                    access[src] = max(float(access.get(src, 0.0)), b)
+        total = 0.0
+        for idx, o in enumerate(operands):
+            pname = param_names.get(idx)
+            mode = access.get(pname, 0.0)
+            if mode == "full" or pname is None:
+                total += _type_numel_bytes(self.types.get(o, ""))
+            else:
+                total += float(mode)
+        # in-place DUS root (possibly behind a convert): written bytes are
+        # the update slice, not the whole stack.
+        if root is not None and root.name in dus_results:
+            dus = root
+            if dus.op != "dynamic-update-slice":
+                for i_ in comp:
+                    if i_.op == "dynamic-update-slice":
+                        dus = i_
+                        break
+            ops_ = self._operand_names(dus.rest)
+            upd = ops_[1] if len(ops_) > 1 else None
+            total += 2 * _type_numel_bytes(self.types.get(upd, ""))
+        else:
+            total += _type_numel_bytes(instr.result_type)
+        return total
+
+    def _operand_bytes(self, rest: str) -> float:
+        # operands are the %refs before the closing paren of the op call;
+        # attributes after may also contain %comp refs — cut at first "),".
+        cut = rest.find(")")
+        segment = rest[:cut if cut >= 0 else len(rest)]
+        total = 0.0
+        for name in _OPERAND_RE.findall(segment):
+            t = self.types.get(name)
+            if t:
+                total += _type_numel_bytes(t)
+        return total
+
+    def _dot_flops(self, instr: Instr) -> float:
+        out_numel_bytes = _type_numel_bytes(instr.result_type)
+        out_dims = _shape_dims(instr.result_type)
+        out_numel = math.prod(out_dims) if out_dims else 1
+        m = _LHS_CONTRACT_RE.search(instr.rest)
+        contract = 1
+        if m and m.group(1):
+            # operand 0 type
+            ops = _OPERAND_RE.findall(instr.rest[:instr.rest.find(")")])
+            if ops:
+                lhs_dims = _shape_dims(self.types.get(ops[0], ""))
+                for d in m.group(1).split(","):
+                    di = int(d)
+                    if di < len(lhs_dims):
+                        contract *= lhs_dims[di]
+        del out_numel_bytes
+        return 2.0 * out_numel * contract
+
+    def cost(self, comp_name: str | None = None) -> Cost:
+        comp_name = comp_name or self.entry
+        if comp_name in self._cost_memo:
+            return self._cost_memo[comp_name]
+        total = Cost()
+        self._cost_memo[comp_name] = total      # break cycles defensively
+        for instr in self.computations.get(comp_name, []):
+            op = instr.op
+            if op in _FREE_OPS:
+                continue
+            base_coll = None
+            for c in COLLECTIVES:
+                if op == c or op == c + "-start":
+                    base_coll = c
+                    break
+            if op.endswith("-done"):
+                continue
+            if op == "while":
+                trip_m = _TRIP_RE.search(instr.rest)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                body_m = _BODY_RE.search(instr.rest)
+                cond_m = _COND_RE.search(instr.rest)
+                if body_m:
+                    total += self.cost(body_m.group(1)).scaled(trip)
+                if cond_m:
+                    total += self.cost(cond_m.group(1)).scaled(trip)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                cm = _CALLS_RE.search(instr.rest)
+                if cm:
+                    total += self.cost(cm.group(1))
+                for branch in re.findall(r'branch_computations=\{([^}]*)\}',
+                                         instr.rest):
+                    for b in _OPERAND_RE.findall(branch):
+                        total += self.cost(b)
+                continue
+            out_bytes = _type_numel_bytes(instr.result_type)
+            if base_coll is not None:
+                total.coll[base_coll] += out_bytes
+                total.bytes += out_bytes + self._operand_bytes(instr.rest)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(instr)
+            if op == "fusion":
+                # dots never hide in CPU-target fusions; validated by the
+                # module-level check in `dots_inside_fusions`.
+                total.bytes += self._fusion_bytes(instr)
+                continue
+            if op == "dynamic-update-slice":
+                # in-place: read+write of the update region only
+                ops_ = self._operand_names(instr.rest)
+                upd = ops_[1] if len(ops_) > 1 else None
+                total.bytes += 2 * _type_numel_bytes(self.types.get(upd, ""))
+                continue
+            if op == "dynamic-slice":
+                total.bytes += 2 * out_bytes
+                continue
+            total.bytes += out_bytes + self._operand_bytes(instr.rest)
+        self._cost_memo[comp_name] = total
+        return total
+
+    def dots_inside_fusions(self) -> int:
+        """Sanity check: count dot ops in fusion computations (should be 0
+        on the CPU dry-run target; if TPU-target fusions ever embed dots,
+        their FLOPs must be attributed to the fusion)."""
+        n = 0
+        for name, instrs in self.computations.items():
+            if "fused" in name:
+                n += sum(1 for i in instrs if i.op == "dot")
+        return n
+
+
+def module_cost(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).cost()

@@ -1,0 +1,117 @@
+"""Assemble EXPERIMENTS.md tables from experiments/dryrun/*.json records.
+
+Usage: PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+Prints the §Dry-run and §Roofline markdown; the EXPERIMENTS.md checked into
+the repo is generated from this plus the hand-written §Perf log.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import ARCH_IDS, SHAPES
+
+
+def load(dir_: str) -> dict:
+    recs = {}
+    for path in glob.glob(os.path.join(dir_, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        key = (r["arch"], r["shape"], r["mesh"], r.get("tnn", False))
+        recs[key] = r
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.2f}"
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile_s | args_GB | temp_GB | "
+        "fits16G | mb | rg |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("1pod", "2pod"):
+                r = recs.get((arch, shape, mesh, False))
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | "
+                                 "| | | | | |")
+                    continue
+                if r["status"] == "SKIP":
+                    lines.append(f"| {arch} | {shape} | {mesh} | SKIP | "
+                                 "| | | | | |")
+                    continue
+                m = r["memory"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | OK | "
+                    f"{r['compile_s']:.0f} | {m['argument_gb']:.2f} | "
+                    f"{m['temp_gb']:.2f} | "
+                    f"{'Y' if r['fits_16g_hbm'] else 'N'} | "
+                    f"{r.get('microbatches', 1)} | "
+                    f"{r.get('remat_group', 1)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="1pod") -> str:
+    lines = [
+        "| arch | shape | C (ms) | M (ms) | X (ms) | dominant | "
+        "MODEL/HLO | roofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh, False))
+            if r is None or r["status"] != "OK":
+                reason = "SKIP (full attention @512Ki)" if r else "—"
+                lines.append(f"| {arch} | {shape} | — | — | — | {reason} "
+                             "| — | — |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {fmt_ms(r['compute_s'])} | "
+                f"{fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} | "
+                f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+                f"{r['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def interesting_cells(recs, mesh="1pod") -> str:
+    """Rank cells for the hillclimb selection."""
+    rows = [r for (a, s, m, t), r in recs.items()
+            if m == mesh and not t and r["status"] == "OK"]
+    worst = sorted((r for r in rows if r["shape"] == "train_4k"),
+                   key=lambda r: r["roofline_fraction"])[:3]
+    coll = sorted(rows, key=lambda r: -(r["collective_s"]
+                                        / max(r["compute_s"]
+                                              + r["memory_s"], 1e-12)))[:3]
+    out = ["worst roofline fraction (train):"]
+    out += [f"  {r['arch']} x {r['shape']}: {r['roofline_fraction']:.4f} "
+            f"(dom={r['dominant']})" for r in worst]
+    out += ["most collective-bound:"]
+    out += [f"  {r['arch']} x {r['shape']}: X/{'{C+M}'}="
+            f"{r['collective_s'] / max(r['compute_s'] + r['memory_s'], 1e-12):.2f}"
+            for r in coll]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"))
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Dry-run (both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs))
+    print("\n## Hillclimb candidates\n")
+    print(interesting_cells(recs))
+
+
+if __name__ == "__main__":
+    main()

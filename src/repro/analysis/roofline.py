@@ -1,0 +1,196 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell we derive, from ``compiled.cost_analysis()``
+and the HLO text (collective ops are not in cost_analysis):
+
+    compute term   = per-device HLO FLOPs / peak_FLOP/s
+    memory term    = per-device HLO bytes / HBM bandwidth
+    collective term= per-device collective bytes / ICI link bandwidth
+
+(cost_analysis reports the per-device partitioned module, so dividing by a
+single chip's peak equals the spec's HLO_total / (chips x peak).)
+
+Plus MODEL_FLOPS (6·N_active·D for training, 2·N_active·tokens for
+inference) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs that catches
+remat/redundant compute.
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_TYPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    numel = 1
+    if dims:
+        for d in dims.split(","):
+            numel *= int(d)
+    return numel * nb
+
+
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum transferred bytes of every collective op in the post-SPMD HLO.
+
+    Post-optimisation HLO omits operand types, so we size each collective by
+    its RESULT type(s) — equal to the operand for all-reduce / all-to-all /
+    collective-permute, the full gathered tensor for all-gather, and the
+    reduced shard for reduce-scatter.  ``-done`` halves of async pairs are
+    skipped (counted at ``-start``).
+
+    NOTE: ops inside a ``while`` body appear once in the text; use the
+    dry-run's layer delta-probe (see launch/dryrun.py) for per-step totals —
+    this function is the primitive it sums with.
+    """
+    out: dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group(3) == "-done":
+            continue
+        for dtype, dims in _TYPE_RE.findall(m.group(1)):
+            out[m.group(2)] += _type_bytes(dtype, dims)
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict[str, int]
+    model_flops_per_device: float
+    peak_memory_bytes: int | None = None
+    xla_flops_once: float = 0.0         # cost_analysis (loop bodies once)
+    xla_bytes_once: float = 0.0
+    dots_in_fusions: int = 0            # must stay 0 for exact dot FLOPs
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops_per_device / max(self.flops_per_device, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of chip peak the step would achieve if it ran exactly at
+        the max() of the three terms: MODEL_FLOPS / (bound_s * peak)."""
+        return self.model_flops_per_device / (max(self.bound_s, 1e-12)
+                                              * PEAK_FLOPS)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops_per_device": self.model_flops_per_device,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "xla_flops_once": self.xla_flops_once,
+            "xla_bytes_once": self.xla_bytes_once,
+            "dots_in_fusions": self.dots_in_fusions,
+        }
+
+    def summary(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:9s} "
+                f"C={self.compute_s*1e3:9.3f}ms "
+                f"M={self.memory_s*1e3:9.3f}ms "
+                f"X={self.collective_s*1e3:9.3f}ms "
+                f"dom={self.dominant:10s} "
+                f"useful={self.useful_ratio:6.3f} "
+                f"roofline={self.roofline_fraction:6.3f}")
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, num_devices: int,
+            model_flops_total: float, hlo_text: str | None = None) -> Roofline:
+    """Primary terms come from the loop-aware HLO analyzer
+    (``repro.analysis.hlo_cost``) — XLA's cost_analysis counts while bodies
+    once and is kept only as the lower-bound cross-check in the record."""
+    from repro.analysis import hlo_cost
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    mod = hlo_cost.HloModule(text)
+    mine = mod.cost()
+    coll = dict(mine.coll)
+    coll["total"] = mine.coll_total
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        peak_mem = int(ma.temp_size_in_bytes + ma.output_size_in_bytes
+                       + ma.argument_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_device=mine.flops, bytes_per_device=mine.bytes,
+        coll_bytes_per_device=mine.coll_total,
+        coll_breakdown=coll,
+        model_flops_per_device=model_flops_total / num_devices,
+        peak_memory_bytes=peak_mem,
+        xla_flops_once=float(cost.get("flops", 0.0)),
+        xla_bytes_once=float(cost.get("bytes accessed", 0.0)),
+        dots_in_fusions=mod.dots_inside_fusions(),
+    )
+
+
+def save(report: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report.to_dict(), f, indent=2)

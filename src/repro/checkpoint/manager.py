@@ -1,0 +1,62 @@
+"""Async checkpoint manager: snapshot off the critical path + retention.
+
+The training loop calls ``maybe_save(step, state)``; the manager device_gets
+the state (cheap host copy of this process's shards) and hands the file I/O
+to a background thread, so the TPUs keep stepping while the previous
+checkpoint serialises.  ``wait()`` drains pending writes (call before exit
+and before restore-after-failure tests)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+
+from repro.checkpoint import store
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, every: int = 100, keep: int = 3):
+        self.root = root
+        self.every = every
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: list[BaseException] = []
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, state, extra = item
+            try:
+                store.save(self.root, step, state, extra=extra)
+                store.retain(self.root, self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def maybe_save(self, step: int, state, *, extra: dict | None = None,
+                   force: bool = False) -> bool:
+        if self._err:
+            raise RuntimeError("checkpoint writer failed") from self._err[0]
+        if not force and (step == 0 or step % self.every != 0):
+            return False
+        # Host snapshot now (so later mutations don't race the writer).
+        snapshot = jax.tree.map(lambda x: jax.device_get(x), state)
+        self._q.put((step, snapshot, extra))
+        return True
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise RuntimeError("checkpoint writer failed") from self._err[0]
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._worker.join(timeout=10)

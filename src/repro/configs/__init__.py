@@ -1,0 +1,7 @@
+"""Architecture configs — one module per assigned architecture.
+
+Import side registers into the registry; ``base.get(id)`` lazy-imports.
+"""
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS, PAPER_IDS, SHAPES, ArchConfig, ShapeSpec, all_archs, get,
+)

@@ -1,0 +1,30 @@
+"""llava-next-34b backbone — 60L d=7168 56H (GQA kv=8, head_dim 128)
+d_ff=20480 vocab=64000.  [hf:llava-hf/llava-v1.6; unverified]
+Vision frontend is a STUB: inputs are precomputed anyres patch embeddings
+[B, T, d_model] (repro.models.modality.patch_embeddings)."""
+from repro.configs.base import ArchConfig, register
+from repro.core.tensorized import TNNConfig
+from repro.models.lm import LMConfig
+
+
+def make_model(tnn=None):
+    return LMConfig(
+        name="llava-next-34b", num_layers=60, d_model=7168, num_heads=56,
+        num_kv_heads=8, head_dim=128, d_ff=20480, vocab=64000,
+        tnn=tnn or TNNConfig())
+
+
+def make_smoke(tnn=None):
+    return LMConfig(
+        name="llava-smoke", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        remat=False, tnn=tnn or TNNConfig())
+
+
+CONFIG = register(ArchConfig(
+    id="llava_next_34b", family="vlm", model_kind="lm",
+    make_model=make_model, make_smoke=make_smoke,
+    input_kind="embeds",
+    notes="anyres tiling lives in the stubbed frontend; backbone consumes "
+          "patch embeddings; long_500k skipped (full attention)",
+))

@@ -1,0 +1,28 @@
+"""olmoe-1b-7b — 16L d=2048 16H (kv=16) MoE 64e top-8, d_ff_expert=1024,
+vocab=50304.  [arXiv:2409.02060; hf]"""
+from repro.configs.base import ArchConfig, register
+from repro.core.tensorized import TNNConfig
+from repro.models.lm import LMConfig, MoESpec
+
+
+def make_model(tnn=None):
+    return LMConfig(
+        name="olmoe-1b-7b", num_layers=16, d_model=2048, num_heads=16,
+        num_kv_heads=16, head_dim=128, d_ff=1024, vocab=50304,
+        moe=MoESpec(num_experts=64, top_k=8, d_ff_expert=1024),
+        tnn=tnn or TNNConfig())
+
+
+def make_smoke(tnn=None):
+    return LMConfig(
+        name="olmoe-smoke", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, head_dim=16, d_ff=64, vocab=256,
+        moe=MoESpec(num_experts=4, top_k=2, d_ff_expert=64),
+        remat=False, tnn=tnn or TNNConfig())
+
+
+CONFIG = register(ArchConfig(
+    id="olmoe_1b_7b", family="moe", model_kind="lm",
+    make_model=make_model, make_smoke=make_smoke,
+    notes="64 experts top-8; long_500k skipped (full attention)",
+))

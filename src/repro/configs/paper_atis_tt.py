@@ -1,0 +1,37 @@
+"""The paper's own Transformer-on-ATIS benchmark (Table II row 1) as a
+runnable config: a small transformer whose MLP+QKV projections are
+TT-compressed at the paper's shapes ([56]: d=768, TT rank 8).
+
+Train it:  PYTHONPATH=src python -m repro.launch.train --arch paper_atis_tt \
+               --smoke --tnn --steps 100
+"""
+from repro.configs.base import ArchConfig, register
+from repro.core.tensorized import TNNConfig
+from repro.models.lm import LMConfig
+
+_TNN = TNNConfig(enabled=True, method="tt", rank=8, num_factors=3,
+                 targets=("mlp", "qkv", "out"))
+
+
+def make_model(tnn=None):
+    return LMConfig(
+        name="paper-atis-tt", num_layers=2, d_model=768, num_heads=12,
+        num_kv_heads=12, head_dim=64, d_ff=3072, vocab=1024,
+        tnn=tnn if tnn is not None else _TNN)
+
+
+def make_smoke(tnn=None):
+    return LMConfig(
+        name="paper-atis-smoke", num_layers=2, d_model=96, num_heads=4,
+        num_kv_heads=4, head_dim=24, d_ff=192, vocab=256, remat=False,
+        tnn=tnn if tnn is not None else TNNConfig(
+            enabled=True, method="tt", rank=4, num_factors=2,
+            targets=("mlp",)))
+
+
+CONFIG = register(ArchConfig(
+    id="paper_atis_tt", family="dense", model_kind="lm",
+    make_model=make_model, make_smoke=make_smoke,
+    tnn_default=_TNN,
+    notes="the paper's Table II ATIS transformer; TNN on by default",
+))

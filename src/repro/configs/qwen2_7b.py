@@ -1,0 +1,26 @@
+"""qwen2-7b — 28L d=3584 28H (GQA kv=4, head_dim 128) d_ff=18944
+vocab=152064, QKV bias.  [arXiv:2407.10671; hf]"""
+from repro.configs.base import ArchConfig, register
+from repro.core.tensorized import TNNConfig
+from repro.models.lm import LMConfig
+
+
+def make_model(tnn=None):
+    return LMConfig(
+        name="qwen2-7b", num_layers=28, d_model=3584, num_heads=28,
+        num_kv_heads=4, head_dim=128, d_ff=18944, vocab=152064,
+        qkv_bias=True, tnn=tnn or TNNConfig())
+
+
+def make_smoke(tnn=None):
+    return LMConfig(
+        name="qwen2-smoke", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        qkv_bias=True, remat=False, tnn=tnn or TNNConfig())
+
+
+CONFIG = register(ArchConfig(
+    id="qwen2_7b", family="dense", model_kind="lm",
+    make_model=make_model, make_smoke=make_smoke,
+    notes="QKV bias kept dense under TNN; long_500k skipped (full attention)",
+))

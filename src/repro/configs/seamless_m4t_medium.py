@@ -1,0 +1,32 @@
+"""seamless-m4t-medium — enc-dec, 12L+12L d=1024 16H (kv=16) d_ff=4096
+vocab=256206 (padded to 256256 = 16*16016 so the vocab dim shards over the
+16-way model axis; padded rows are never targeted).  [arXiv:2308.11596; hf]
+Speech frontend is a STUB: encoder consumes frame embeddings."""
+from repro.configs.base import ArchConfig, register
+from repro.core.tensorized import TNNConfig
+from repro.models.encdec import EncDecConfig
+
+VOCAB_PADDED = 256256   # 256206 rounded up to a multiple of 16
+
+
+def make_model(tnn=None):
+    return EncDecConfig(
+        name="seamless-m4t-medium", num_enc_layers=12, num_dec_layers=12,
+        d_model=1024, num_heads=16, num_kv_heads=16, head_dim=64,
+        d_ff=4096, vocab=VOCAB_PADDED, tnn=tnn or TNNConfig())
+
+
+def make_smoke(tnn=None):
+    return EncDecConfig(
+        name="seamless-smoke", num_enc_layers=2, num_dec_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256, remat=False, tnn=tnn or TNNConfig())
+
+
+CONFIG = register(ArchConfig(
+    id="seamless_m4t_medium", family="audio", model_kind="encdec",
+    make_model=make_model, make_smoke=make_smoke,
+    input_kind="embeds",
+    notes="enc-dec; decode shapes exercise the decoder with a fixed "
+          "1024-frame encoder stub; long_500k skipped (full attention)",
+))

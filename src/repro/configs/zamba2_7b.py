@@ -1,0 +1,36 @@
+"""zamba2-7b — hybrid: 81 Mamba-2 backbone blocks (ssm_state=64) with a
+parameter-shared attention block (32H MHA kv=32, d=3584, d_ff=14336) applied
+every 27 layers, vocab=32000.  [arXiv:2411.15242; unverified]
+Simplifications vs the HF release (documented in DESIGN.md): one shared
+block (not two alternating), no per-application LoRA on the shared weights,
+no concat-with-embedding input to the shared block."""
+from repro.configs.base import ArchConfig, register
+from repro.core.tensorized import TNNConfig
+from repro.models.lm import HybridSpec, LMConfig
+
+
+def make_model(tnn=None):
+    return LMConfig(
+        name="zamba2-7b", num_layers=81, d_model=3584, num_heads=32,
+        num_kv_heads=32, head_dim=112, d_ff=14336, vocab=32000,
+        block="mamba2", ssm_state=64,
+        hybrid=HybridSpec(shared_every=27, d_ff_shared=14336),
+        tnn=tnn or TNNConfig())
+
+
+def make_smoke(tnn=None):
+    return LMConfig(
+        name="zamba2-smoke", num_layers=4, d_model=64, num_heads=4,
+        num_kv_heads=4, head_dim=16, d_ff=128, vocab=256,
+        block="mamba2", ssm_state=16,
+        hybrid=HybridSpec(shared_every=2, d_ff_shared=128),
+        remat=False, tnn=tnn or TNNConfig())
+
+
+CONFIG = register(ArchConfig(
+    id="zamba2_7b", family="hybrid", model_kind="lm",
+    make_model=make_model, make_smoke=make_smoke,
+    sub_quadratic=True,
+    notes="long_500k runs: Mamba-2 state + shared-attn KV sharded over "
+          "`model`",
+))

@@ -1,0 +1,99 @@
+"""Contraction-plan executor: lowers a ContractionPlan to jax ops.
+
+Each :class:`~repro.core.tnetwork.ContractionStep` becomes one
+``jnp.einsum`` with bf16 inputs and f32 accumulation
+(``preferred_element_type``), matching TPU MXU semantics.  Axis orders in
+the plan were chosen by ``plan_from_tree`` so consecutive steps feed each
+other without explicit transposes — XLA folds any residual layout change
+into the dot itself (we assert this in the lowering tests).
+
+Perf-critical inner steps can be routed to the Pallas fused-contraction
+kernel via ``use_kernel`` (see ``repro.kernels``); the default einsum path
+is the reference semantics for it.
+"""
+
+from __future__ import annotations
+
+import string
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# CPU backend cannot run batched bf16 x bf16 -> f32 dots; upcast there.
+# (skipped under REPRO_ASSUME_TPU_DOTS — see repro.models.blocks)
+import os as _os
+_CPU = (jax.default_backend() == "cpu"
+        and not _os.environ.get("REPRO_ASSUME_TPU_DOTS"))
+
+from repro.core.tnetwork import ContractionPlan, ContractionStep
+
+_LETTERS = string.ascii_lowercase + string.ascii_uppercase
+
+
+def _einsum_spec(step: ContractionStep) -> str:
+    axes = []
+    for a in step.lhs_axes + step.rhs_axes + step.out_axes:
+        if a not in axes:
+            axes.append(a)
+    assert len(axes) <= len(_LETTERS), f"too many axes in one step: {len(axes)}"
+    sym = {a: _LETTERS[i] for i, a in enumerate(axes)}
+    lhs = "".join(sym[a] for a in step.lhs_axes)
+    rhs = "".join(sym[a] for a in step.rhs_axes)
+    out = "".join(sym[a] for a in step.out_axes)
+    return f"{lhs},{rhs}->{out}"
+
+
+def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
+            accum_dtype=jnp.float32, out_dtype=None) -> jax.Array:
+    """Run the plan over concrete arrays (one per network node, in order)."""
+    net = plan.network
+    assert len(tensors) == net.num_nodes
+    for i, t in enumerate(tensors):
+        assert tuple(t.shape) == net.node_shape(i), (
+            f"node {net.node_names[i]}: expected {net.node_shape(i)}, "
+            f"got {tuple(t.shape)}")
+    if out_dtype is None:
+        out_dtype = tensors[0].dtype
+
+    if not plan.steps:                      # single-node network
+        out = tensors[0]
+    else:
+        slots: dict[int, jax.Array] = dict(enumerate(tensors))
+        for step in plan.steps:
+            lhs, rhs = slots[step.lhs], slots[step.rhs]
+            if _CPU and lhs.dtype == jnp.bfloat16:
+                lhs, rhs = lhs.astype(accum_dtype), rhs.astype(accum_dtype)
+            res = jnp.einsum(_einsum_spec(step), lhs, rhs,
+                             preferred_element_type=accum_dtype)
+            # Keep intermediates in the working dtype: f32 accumulation
+            # within a step, storage dtype between steps (TPU MXU semantics).
+            slots[step.out] = res.astype(out_dtype)
+            # free operands no longer needed
+            for op in (step.lhs, step.rhs):
+                if op in slots and not _used_later(plan, step, op):
+                    del slots[op]
+        out = slots[plan.steps[-1].out]
+        # Final transpose to the declared output order (usually a no-op).
+        last_axes = plan.steps[-1].out_axes
+        if last_axes != net.output:
+            perm = tuple(last_axes.index(a) for a in net.output)
+            out = jnp.transpose(out, perm)
+    return out.astype(out_dtype)
+
+
+def _used_later(plan: ContractionPlan, current: ContractionStep, slot: int
+                ) -> bool:
+    after = False
+    for s in plan.steps:
+        if after and slot in (s.lhs, s.rhs):
+            return True
+        if s is current:
+            after = True
+    return False
+
+
+def execute_fn(plan: ContractionPlan, **kw):
+    """Partially-applied executor, convenient for jit/grad composition."""
+    return partial(execute, plan, **kw)

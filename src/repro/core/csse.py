@@ -1,0 +1,412 @@
+"""CSSE — Contraction Sequence Search Engine (paper §IV, Algorithm 1).
+
+Two-stage search over contraction sequences of a tensor network:
+
+* **Stage 1** enumerates sequences under the cheap FLOPs metric and keeps the
+  best ``num_candidates``.  Two engines are provided:
+
+  - ``dfs`` — the paper's Algorithm 1, verbatim: depth-first recursion over
+    *all* node pairs (the enlarged search space, outer products included)
+    with accumulated-FLOPs branch-and-bound against the current worst
+    candidate.  Exhaustive, exponential; right for the node counts the paper
+    targets (K <= ~8).
+
+  - ``dp`` — beyond-paper: exact k-best dynamic programming over node
+    subsets (O(3^K) splits, bitmask-encoded).  Guarantees the stage-1
+    FLOPs-optimum even where pruned DFS would blow the time budget
+    (K up to ~14, e.g. deep TR layers), and still returns a top-k candidate
+    list for stage 2.  Outer products remain in-space (any subset split is
+    considered).
+
+* **Stage 2** reranks the candidates under the analytic TPU performance
+  model (:mod:`repro.core.perf_model`) on the requested objective
+  (``latency`` / ``energy`` / ``edp`` — "CSSE-Model"), or keeps the FLOPs
+  order ("CSSE-FLOPs").
+
+Results are memoised in-process and on disk (keyed by the network signature
+and search options) so model building never pays the search twice — the
+training step compiles with sequences baked in.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.core import perf_model
+from repro.core.tnetwork import (
+    ContractionPlan, TensorNetwork, TreeT, canonical_tree, plan_from_tree,
+)
+
+_CACHE_DIR = os.environ.get(
+    "REPRO_CSSE_CACHE", os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                                     ".cache", "csse"))
+_MEMO: dict[str, "SearchResult"] = {}
+
+
+@dataclass(frozen=True)
+class SearchOptions:
+    objective: str = "edp"            # stage-2 metric: latency|energy|edp|flops
+    num_candidates: int = 8           # paper's N
+    engine: str = "auto"              # auto|dfs|dp
+    dfs_max_nodes: int = 7            # auto: dfs up to here, dp beyond
+    fused_chain: bool = False         # stage-2 models Pallas fused execution
+    allow_outer: bool = True          # enlarged space (paper); False = Tetrix-ish
+    anchor_input: bool = False        # True = Tetrix-style: X merges every step
+
+
+@dataclass
+class SearchResult:
+    tree: TreeT
+    plan: ContractionPlan
+    cost: perf_model.PlanCost
+    candidates: list[tuple[int, TreeT]]          # stage-1 (flops, tree)
+    stage2_costs: list[tuple[float, TreeT]]      # (objective value, tree)
+    stats: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Bitmask scaffolding shared by both engines
+# ---------------------------------------------------------------------------
+
+
+class _Graph:
+    """Bitmask view of a TensorNetwork for fast subset algebra."""
+
+    def __init__(self, net: TensorNetwork):
+        self.net = net
+        axes = sorted({a for node in net.nodes for a in node})
+        self.axis_bit = {a: i for i, a in enumerate(axes)}
+        self.axis_size = [net.sizes[a] for a in axes]
+        self.node_mask = [
+            self._mask(node) for node in net.nodes
+        ]
+        self.out_mask = self._mask([a for a in net.output if a in self.axis_bit])
+        self.K = len(net.nodes)
+        self.full = (1 << self.K) - 1
+        # union of node axis masks per node subset, computed lazily
+        self._union: dict[int, int] = {0: 0}
+        self._prod: dict[int, int] = {0: 1}
+
+    def _mask(self, axes) -> int:
+        m = 0
+        for a in axes:
+            m |= 1 << self.axis_bit[a]
+        return m
+
+    def union(self, subset: int) -> int:
+        got = self._union.get(subset)
+        if got is not None:
+            return got
+        low = subset & -subset
+        m = self.union(subset ^ low) | self.node_mask[low.bit_length() - 1]
+        self._union[subset] = m
+        return m
+
+    def prod(self, axis_mask: int) -> int:
+        got = self._prod.get(axis_mask)
+        if got is not None:
+            return got
+        low = axis_mask & -axis_mask
+        p = self.prod(axis_mask ^ low) * self.axis_size[low.bit_length() - 1]
+        self._prod[axis_mask] = p
+        return p
+
+    def live(self, subset: int) -> int:
+        """Axis mask of the tensor produced by contracting ``subset``."""
+        outside = self.union(self.full ^ subset) | self.out_mask
+        return self.union(subset) & outside
+
+    def pair_flops(self, live_a: int, live_b: int) -> int:
+        return 2 * self.prod(live_a | live_b)
+
+    def connected(self, live_a: int, live_b: int) -> bool:
+        return bool(live_a & live_b)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 — DFS (paper Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def _dfs_candidates(g: _Graph, opts: SearchOptions) -> list[tuple[int, TreeT]]:
+    """Exhaustive DFS with accumulated-FLOPs branch-and-bound (Alg. 1)."""
+    best: list[tuple[int, str, TreeT]] = []     # (flops, key, tree) heap-ish
+    seen_keys: set[str] = set()
+    N = opts.num_candidates
+
+    # Seed the bound with a greedy solution so pruning bites immediately.
+    greedy = _greedy_tree(g, opts)
+    if greedy is not None:
+        flops, tree = greedy
+        key = repr(canonical_tree(tree))
+        best.append((flops, key, tree))
+        seen_keys.add(key)
+
+    def worst() -> int:
+        return best[-1][0] if len(best) >= N else (1 << 62)
+
+    def insert(flops: int, tree: TreeT):
+        key = repr(canonical_tree(tree))
+        if key in seen_keys:
+            return
+        seen_keys.add(key)
+        best.append((flops, key, tree))
+        best.sort(key=lambda x: x[0])
+        del best[N:]
+
+    stats = {"visited": 0}
+
+    def recurse(nodes: list[tuple[int, int, TreeT]], acc: int):
+        # nodes: list of (subset_mask, live_axis_mask, tree)
+        stats["visited"] += 1
+        if len(nodes) == 1:
+            if acc < worst():
+                insert(acc, nodes[0][2])
+            return
+        n = len(nodes)
+        pairs = []
+        for i in range(n):
+            for j in range(i + 1, n):
+                if opts.anchor_input and 0 not in (i, j):
+                    continue   # Tetrix-style: input node anchors every merge
+                la, lb = nodes[i][1], nodes[j][1]
+                if not opts.allow_outer and not g.connected(la, lb):
+                    continue
+                pairs.append((g.pair_flops(la, lb), i, j))
+        pairs.sort()
+        for cost, i, j in pairs:
+            new_acc = acc + cost
+            if new_acc >= worst():
+                # pairs are sorted: every later pair at this level costs more,
+                # but deeper completions might still beat — cannot break the
+                # whole loop, only skip (bound is on the *accumulated* cost,
+                # which is monotone along a path).
+                continue
+            sub = nodes[i][0] | nodes[j][0]
+            merged = (sub, g.live(sub), (nodes[i][2], nodes[j][2]))
+            rest = [merged if k == i else nodes[k]
+                    for k in range(n) if k != j]
+            # keep merged node at position 0 when anchoring on the input
+            if opts.anchor_input:
+                rest = [merged] + [x for x in rest if x is not merged]
+            recurse(rest, new_acc)
+
+    leaves = [(1 << i, g.live(1 << i), i) for i in range(g.K)]
+    recurse(leaves, 0)
+    return [(f, t) for f, _, t in best], stats
+
+
+def _greedy_tree(g: _Graph, opts: SearchOptions) -> tuple[int, TreeT] | None:
+    """Cheapest-pair-first greedy; seeds the DFS bound."""
+    nodes: list[tuple[int, int, TreeT]] = [
+        (1 << i, g.live(1 << i), i) for i in range(g.K)]
+    total = 0
+    while len(nodes) > 1:
+        best = None
+        n = len(nodes)
+        for i in range(n):
+            for j in range(i + 1, n):
+                la, lb = nodes[i][1], nodes[j][1]
+                if not opts.allow_outer and not g.connected(la, lb):
+                    continue
+                c = g.pair_flops(la, lb)
+                if best is None or c < best[0]:
+                    best = (c, i, j)
+        if best is None:
+            return None
+        c, i, j = best
+        total += c
+        sub = nodes[i][0] | nodes[j][0]
+        merged = (sub, g.live(sub), (nodes[i][2], nodes[j][2]))
+        nodes = [merged] + [nodes[k] for k in range(n) if k not in (i, j)]
+    return total, nodes[0][2]
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 — exact k-best subset DP (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+def _dp_candidates(g: _Graph, opts: SearchOptions) -> list[tuple[int, TreeT]]:
+    """k-best contraction trees by total FLOPs via subset DP.
+
+    cand[S] holds up to k (flops, tree) pairs for fully contracting subset S.
+    Splits iterate A ∋ lowbit(S) over proper submasks — every unordered
+    partition once.  Complexity O(3^K · k^2); exact within the full enlarged
+    space (outer products = disconnected splits are included).
+    """
+    K, full = g.K, g.full
+    k = max(1, opts.num_candidates)
+    cand: list[list[tuple[int, TreeT]]] = [[] for _ in range(full + 1)]
+    for i in range(K):
+        cand[1 << i] = [(0, i)]
+
+    # Enumerate subsets in increasing popcount order.
+    by_pop: list[list[int]] = [[] for _ in range(K + 1)]
+    for s in range(1, full + 1):
+        by_pop[s.bit_count()].append(s)
+
+    live = [0] * (full + 1)
+    for s in range(1, full + 1):
+        live[s] = g.live(s)
+
+    for pop in range(2, K + 1):
+        for S in by_pop[pop]:
+            low = S & -S
+            rest = S ^ low
+            out: list[tuple[int, TreeT]] = []
+            seen: set[str] = set()
+            # iterate submasks T of rest; A = low | T, B = S \ A
+            T = rest
+            while True:
+                A = low | T
+                B = S ^ A
+                if B:
+                    ca, cb = cand[A], cand[B]
+                    if ca and cb:
+                        la, lb = live[A], live[B]
+                        if opts.allow_outer or g.connected(la, lb):
+                            step = g.pair_flops(la, lb)
+                            for fa, ta in ca:
+                                for fb, tb in cb:
+                                    f = fa + fb + step
+                                    if len(out) >= k and f >= out[-1][0]:
+                                        continue
+                                    tree = canonical_tree((ta, tb))
+                                    key = repr(tree)
+                                    if key in seen:
+                                        continue
+                                    seen.add(key)
+                                    out.append((f, tree))
+                                    out.sort(key=lambda x: x[0])
+                                    del out[k:]
+                if T == 0:
+                    break
+                T = (T - 1) & rest
+            cand[S] = out
+    return cand[full], {"subsets": full}
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def _signature(net: TensorNetwork, opts: SearchOptions,
+               hw: perf_model.HardwareModel) -> str:
+    payload = {
+        "sizes": sorted(net.sizes.items()),
+        "nodes": net.nodes, "output": net.output,
+        "opts": (opts.objective, opts.num_candidates, opts.engine,
+                 opts.dfs_max_nodes, opts.fused_chain, opts.allow_outer,
+                 opts.anchor_input),
+        "hw": (hw.name, hw.peak_flops, hw.hbm_bw, hw.dtype_bytes,
+               hw.step_overhead_s),
+    }
+    return hashlib.sha256(json.dumps(payload, default=str).encode()).hexdigest()
+
+
+def _disk_load(sig: str) -> TreeT | None:
+    path = os.path.join(_CACHE_DIR, sig + ".json")
+    try:
+        with open(path) as f:
+            return _untuple(json.load(f)["tree"])
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+def _disk_store(sig: str, tree: TreeT) -> None:
+    try:
+        os.makedirs(_CACHE_DIR, exist_ok=True)
+        with open(os.path.join(_CACHE_DIR, sig + ".json"), "w") as f:
+            json.dump({"tree": tree}, f)
+    except OSError:
+        pass
+
+
+def _untuple(x):
+    return tuple(_untuple(v) for v in x) if isinstance(x, list) else x
+
+
+def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
+           hw: perf_model.HardwareModel = perf_model.TPU_V5E) -> SearchResult:
+    """Run the two-stage CSSE on ``net`` and return the best plan."""
+    sig = _signature(net, opts, hw)
+    memo = _MEMO.get(sig)
+    if memo is not None:
+        return memo
+
+    if net.num_nodes == 1:
+        plan = plan_from_tree(net, 0)
+        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain)
+        res = SearchResult(0, plan, cost, [(0, 0)], [(0.0, 0)], {})
+        _MEMO[sig] = res
+        return res
+
+    cached_tree = _disk_load(sig)
+    if cached_tree is not None:
+        plan = plan_from_tree(net, cached_tree)
+        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain)
+        res = SearchResult(cached_tree, plan, cost,
+                           [(plan.total_flops, cached_tree)],
+                           [(cost.metric(opts.objective), cached_tree)],
+                           {"cache": "disk"})
+        _MEMO[sig] = res
+        return res
+
+    g = _Graph(net)
+    t0 = time.perf_counter()
+    engine = opts.engine
+    if engine == "auto":
+        engine = "dfs" if g.K <= opts.dfs_max_nodes else "dp"
+    if engine == "dfs":
+        candidates, stats = _dfs_candidates(g, opts)
+    elif engine == "dp":
+        candidates, stats = _dp_candidates(g, opts)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    stats = dict(stats)
+    stats["engine"] = engine
+    stats["stage1_s"] = time.perf_counter() - t0
+
+    assert candidates, "stage 1 found no complete contraction sequence"
+
+    # Stage 2: rerank under the hardware model.
+    scored: list[tuple[float, TreeT, ContractionPlan, perf_model.PlanCost]] = []
+    for flops, tree in candidates:
+        plan = plan_from_tree(net, tree)
+        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain)
+        scored.append((cost.metric(opts.objective), tree, plan, cost))
+    scored.sort(key=lambda x: x[0])
+    best_metric, tree, plan, cost = scored[0]
+    stats["stage2_s"] = time.perf_counter() - t0 - stats["stage1_s"]
+
+    res = SearchResult(
+        tree=tree, plan=plan, cost=cost,
+        candidates=candidates,
+        stage2_costs=[(m, t) for m, t, _, _ in scored],
+        stats=stats,
+    )
+    _MEMO[sig] = res
+    _disk_store(sig, tree)
+    return res
+
+
+def fixed_plan(net: TensorNetwork, tree: TreeT,
+               hw: perf_model.HardwareModel = perf_model.TPU_V5E,
+               fused_chain: bool = False) -> SearchResult:
+    """Wrap a hard-coded sequence (prior-work baselines) as a SearchResult."""
+    plan = plan_from_tree(net, tree)
+    cost = perf_model.evaluate(plan, hw, fused_chain=fused_chain)
+    return SearchResult(tree, plan, cost, [(plan.total_flops, tree)],
+                        [(cost.metric("edp"), tree)], {"engine": "fixed"})
+
+
+def clear_memo() -> None:
+    _MEMO.clear()

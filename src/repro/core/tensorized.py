@@ -1,0 +1,295 @@
+"""TensorizedLinear — the paper's technique as a composable JAX layer.
+
+A drop-in replacement for ``y = x @ W.T`` where ``W[M, N]`` is stored as
+TT / TTM / TR / HT / BT factor cores.  The training-specific contribution of
+the paper (§III-A, §IV) is realised through ``jax.custom_vjp``:
+
+* **FP** runs the CSSE-optimal sequence for the forward network
+  ``Y[b,m..] = X[b,n..] · cores``.
+* **BP** (dX) and **WG** (one network per core gradient) are *different*
+  tensor networks over the same cores; each gets its own CSSE search instead
+  of inheriting the autodiff transpose of the forward plan.  This is what
+  "training support" means in the paper — FP/BP/WG have different optimal
+  dataflows, and reusing the FP sequence for backward is exactly the
+  inefficiency Fig. 5/6 profiles.
+
+Set ``phase_paths=False`` to fall back to plain autodiff through the forward
+plan — that is the ablation baseline benchmarked in
+``benchmarks/bench_phase_paths.py``.
+
+Searches run at trace time on static shapes and are memoised process-wide
+(and on disk), so a jitted train step pays them once per distinct
+(batch, layer-signature) pair.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import lru_cache, partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import contraction, csse, factorizations, perf_model
+from repro.core.factorizations import Factorization
+from repro.core.tnetwork import TensorNetwork
+
+
+@dataclass(frozen=True)
+class TNNConfig:
+    """Config block attached to architecture configs (``cfg.tnn``)."""
+
+    enabled: bool = False
+    method: str = "tt"                    # tt|ttm|tr|ht|bt
+    rank: int = 16
+    num_factors: int = 3                  # how many factors to split M/N into
+    targets: tuple[str, ...] = ("mlp",)   # which projections to tensorize
+    phase_paths: bool = True              # per-phase CSSE (paper) vs autodiff
+    objective: str = "edp"                # CSSE stage-2 metric
+    fused_chain: bool = True              # model VMEM-resident chaining
+    num_blocks: int = 2                   # BT only
+
+    def search_options(self) -> csse.SearchOptions:
+        return csse.SearchOptions(objective=self.objective,
+                                  fused_chain=self.fused_chain)
+
+
+# ---------------------------------------------------------------------------
+# Gradient networks
+# ---------------------------------------------------------------------------
+
+
+def _bp_network(fact: Factorization, batch: int) -> TensorNetwork:
+    """dX[b, n..] = sum_m dY[b, m..] * W[m.., n..]."""
+    s, t = len(fact.out_dims), len(fact.in_dims)
+    sizes = dict(fact.sizes)
+    sizes["b"] = batch
+    dy_axes = ("b",) + tuple(f"m{i}" for i in range(s))
+    out = ("b",) + tuple(f"n{j}" for j in range(t))
+    return TensorNetwork(sizes=sizes, nodes=(dy_axes,) + fact.core_axes,
+                         node_names=("dY",) + fact.core_names, output=out)
+
+
+def _wg_network(fact: Factorization, batch: int, core_idx: int
+                ) -> TensorNetwork:
+    """dG_i = contraction of {X, dY, cores j != i} with output = core i axes.
+
+    Valid because W is multilinear in its cores:
+    dL/dG_i = d(sum_b X_b dY_b : W)/dG_i contracted through the other cores.
+    """
+    s, t = len(fact.out_dims), len(fact.in_dims)
+    sizes = dict(fact.sizes)
+    sizes["b"] = batch
+    x_axes = ("b",) + tuple(f"n{j}" for j in range(t))
+    dy_axes = ("b",) + tuple(f"m{i}" for i in range(s))
+    nodes = [x_axes, dy_axes]
+    names = ["X", "dY"]
+    for j, (nm, ax) in enumerate(zip(fact.core_names, fact.core_axes)):
+        if j != core_idx:
+            nodes.append(ax)
+            names.append(nm)
+    return TensorNetwork(sizes=sizes, nodes=tuple(nodes), node_names=tuple(names),
+                         output=fact.core_axes[core_idx])
+
+
+def _dw_network(fact: Factorization, batch: int) -> TensorNetwork:
+    """Shared WG intermediate: dW[m.., n..] = sum_b X[b,n..] dY[b,m..]."""
+    s, t = len(fact.out_dims), len(fact.in_dims)
+    sizes = dict(fact.sizes)
+    sizes["b"] = batch
+    x_axes = ("b",) + tuple(f"n{j}" for j in range(t))
+    dy_axes = ("b",) + tuple(f"m{i}" for i in range(s))
+    out = tuple(f"m{i}" for i in range(s)) + tuple(f"n{j}" for j in range(t))
+    return TensorNetwork(sizes=sizes, nodes=(x_axes, dy_axes),
+                         node_names=("X", "dY"), output=out)
+
+
+def _wg_from_dw_network(fact: Factorization, core_idx: int) -> TensorNetwork:
+    """dG_i from the stashed dW: contraction of {dW, cores j != i}."""
+    s, t = len(fact.out_dims), len(fact.in_dims)
+    dw_axes = tuple(f"m{i}" for i in range(s)) + tuple(
+        f"n{j}" for j in range(t))
+    nodes = [dw_axes]
+    names = ["dW"]
+    for j, (nm, ax) in enumerate(zip(fact.core_names, fact.core_axes)):
+        if j != core_idx:
+            nodes.append(ax)
+            names.append(nm)
+    return TensorNetwork(sizes=dict(fact.sizes), nodes=tuple(nodes),
+                         node_names=tuple(names),
+                         output=fact.core_axes[core_idx])
+
+
+# ---------------------------------------------------------------------------
+# Plan cache (per layer signature x batch)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _plans(fact: Factorization, batch: int, opts: csse.SearchOptions,
+           hw: perf_model.HardwareModel = perf_model.TPU_V5E):
+    """FP/BP plans plus the cheaper of two WG strategies:
+
+    * ``indep``  — one CSSE network per core gradient over {X, dY, others}
+      (recompute everything; memory-minimal);
+    * ``shared`` — stash dW = X·dY once, then per-core contractions over
+      {dW, others}: the paper's "store intermediates for WG" policy (§III),
+      which amortises the batch-sized contraction across all d cores.
+
+    Selection is by total modeled latency — CSSE's stage-2 cost decides the
+    stash policy, per layer and batch size.
+    """
+    fp = csse.search(fact.forward_network(batch_axes=(("b", batch),)), opts,
+                     hw)
+    bp = csse.search(_bp_network(fact, batch), opts, hw)
+    wg_indep = tuple(csse.search(_wg_network(fact, batch, i), opts, hw)
+                     for i in range(fact.num_cores))
+    dw = csse.search(_dw_network(fact, batch), opts, hw)
+    wg_shared = tuple(csse.search(_wg_from_dw_network(fact, i), opts, hw)
+                      for i in range(fact.num_cores))
+    cost_indep = sum(w.cost.latency_s for w in wg_indep)
+    cost_shared = dw.cost.latency_s + sum(w.cost.latency_s
+                                          for w in wg_shared)
+    if cost_shared < cost_indep:
+        wg = ("shared", dw, wg_shared)
+    else:
+        wg = ("indep", None, wg_indep)
+    return fp, bp, wg
+
+
+def layer_cost(fact: Factorization, batch: int,
+               opts: csse.SearchOptions | None = None,
+               hw: perf_model.HardwareModel = perf_model.TPU_V5E
+               ) -> dict[str, perf_model.PlanCost]:
+    """Modeled FP/BP/WG cost of one tensorized layer (benchmark helper)."""
+    opts = opts or csse.SearchOptions()
+    fp, bp, (wg_kind, dw, wg) = _plans(fact, batch, opts, hw)
+    results = ([dw] if wg_kind == "shared" else []) + list(wg)
+    ev = lambda r: perf_model.evaluate(  # noqa: E731
+        r.plan, hw, fused_chain=opts.fused_chain)
+    fp_c, bp_c = ev(fp), ev(bp)
+    wg_cs = [ev(r) for r in results]
+    return {"fp": fp_c, "bp": bp_c,
+            "wg": perf_model.PlanCost(
+                latency_s=sum(c.latency_s for c in wg_cs),
+                energy_j=sum(c.energy_j for c in wg_cs),
+                flops=sum(c.flops for c in wg_cs),
+                bytes_hbm=sum(c.bytes_hbm for c in wg_cs))}
+
+
+# ---------------------------------------------------------------------------
+# The layer
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TensorizedLinear:
+    """``x[..., N] -> y[..., M]`` with W factorized per ``fact``."""
+
+    fact: Factorization
+    use_bias: bool = False
+    phase_paths: bool = True
+    opts: csse.SearchOptions = csse.SearchOptions()
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    # -- params -------------------------------------------------------------
+
+    def init(self, key: jax.Array) -> dict:
+        std = self.fact.init_std(1.0 / math.sqrt(self.fact.N))
+        keys = jax.random.split(key, self.fact.num_cores)
+        cores = tuple(
+            (jax.random.normal(k, self.fact.core_shape(i), jnp.float32) * std
+             ).astype(self.param_dtype)
+            for i, k in enumerate(keys))
+        params = {"cores": cores}
+        if self.use_bias:
+            params["bias"] = jnp.zeros((self.fact.M,), self.param_dtype)
+        return params
+
+    def dense_weight(self, params: dict) -> jax.Array:
+        """Reconstruct W[M, N] (tests / export / Scheme-2 baseline)."""
+        net = self.fact.weight_network()
+        res = csse.search(net, self.opts)
+        w = contraction.execute(res.plan, [c.astype(jnp.float32)
+                                           for c in params["cores"]])
+        return w.reshape(self.fact.M, self.fact.N)
+
+    # -- forward ------------------------------------------------------------
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        *lead, n = x.shape
+        assert n == self.fact.N, f"input dim {n} != {self.fact.N}"
+        batch = math.prod(lead) if lead else 1
+        xt = x.reshape((batch,) + tuple(self.fact.in_dims))
+        xt = xt.astype(self.compute_dtype)
+        cores = tuple(c.astype(self.compute_dtype) for c in params["cores"])
+        if self.phase_paths:
+            y = _tnn_apply(self.fact, self.opts, xt, *cores)
+        else:
+            fp, _, _ = _plans(self.fact, batch, self.opts)
+            y = contraction.execute(fp.plan, [xt, *cores])
+        y = y.reshape(tuple(lead) + (self.fact.M,))
+        if self.use_bias:
+            y = y + params["bias"].astype(self.compute_dtype)
+        return y.astype(x.dtype)
+
+
+# custom_vjp core: functional over (x, *cores) so jax sees the cores as
+# differentiable leaves.  fact/opts are static (nondiff) arguments.
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _tnn_apply(fact: Factorization, opts: csse.SearchOptions,
+               x: jax.Array, *cores: jax.Array) -> jax.Array:
+    fp, _, _ = _plans(fact, x.shape[0], opts)
+    return contraction.execute(fp.plan, [x, *cores])
+
+
+def _tnn_fwd(fact, opts, x, *cores):
+    y = _tnn_apply(fact, opts, x, *cores)
+    return y, (x, cores)
+
+
+def _tnn_bwd(fact, opts, res, dy):
+    x, cores = res
+    batch = x.shape[0]
+    _, bp, (wg_kind, dw_res, wg) = _plans(fact, batch, opts)
+    dy = dy.astype(x.dtype)
+    dx = contraction.execute(bp.plan, [dy, *cores])
+    dcores = []
+    if wg_kind == "shared":
+        dw = contraction.execute(dw_res.plan, [x, dy])
+        for i, w in enumerate(wg):
+            others = tuple(c for j, c in enumerate(cores) if j != i)
+            dcores.append(contraction.execute(w.plan, [dw, *others]))
+    else:
+        for i, w in enumerate(wg):
+            others = tuple(c for j, c in enumerate(cores) if j != i)
+            dcores.append(contraction.execute(w.plan, [x, dy, *others]))
+    return (dx, *dcores)
+
+
+_tnn_apply.defvjp(_tnn_fwd, _tnn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructor used by model configs
+# ---------------------------------------------------------------------------
+
+
+def make_tensorized_linear(out_features: int, in_features: int,
+                           tnn: TNNConfig, use_bias: bool = False,
+                           param_dtype=jnp.float32,
+                           compute_dtype=jnp.bfloat16) -> TensorizedLinear:
+    out_dims = factorizations.factorize_dim(out_features, tnn.num_factors)
+    in_dims = factorizations.factorize_dim(in_features, tnn.num_factors)
+    kw = {"num_blocks": tnn.num_blocks} if tnn.method == "bt" else {}
+    fact = factorizations.make(tnn.method, out_dims, in_dims, tnn.rank, **kw)
+    return TensorizedLinear(fact=fact, use_bias=use_bias,
+                            phase_paths=tnn.phase_paths,
+                            opts=tnn.search_options(),
+                            param_dtype=param_dtype,
+                            compute_dtype=compute_dtype)

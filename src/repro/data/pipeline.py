@@ -1,0 +1,92 @@
+"""Deterministic synthetic LM data pipeline with sharded host loading.
+
+Serves three jobs:
+* smoke tests / examples — an infinite stream of (inputs, targets) batches
+  drawn from a synthetic Zipfian "language" with local n-gram structure, so
+  a real model demonstrably learns (loss drops well below uniform entropy);
+* multi-host posture — each host materialises only its slice of the global
+  batch (``host_batch_slice``) and ``jax.make_array_from_process_local_data``
+  assembles the sharded global array;
+* determinism / restart — batches are a pure function of (seed, step), so a
+  restored checkpoint resumes on exactly the data it would have seen; no
+  iterator state needs checkpointing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    kind: str = "ngram"          # ngram | uniform
+    embed_dim: int | None = None  # set for embeds-input archs (vlm/audio)
+
+
+class SyntheticLM:
+    """Synthetic corpus: Zipf unigrams + a deterministic bigram successor
+    table, giving nontrivial learnable structure (bigram entropy << unigram).
+    """
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab
+        # Zipfian unigram distribution.
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        self.unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        # Each token has 8 plausible successors (deterministic table).
+        self.successors = rng.integers(0, v, size=(v, 8), dtype=np.int32)
+
+    def _tokens(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        cfg = self.cfg
+        out = np.empty(n, dtype=np.int32)
+        out[0] = rng.choice(cfg.vocab, p=self.unigram)
+        # vectorised-ish chain: with p=0.8 follow the successor table,
+        # else resample from the unigram.
+        follow = rng.random(n) < 0.8
+        fresh = rng.choice(cfg.vocab, size=n, p=self.unigram)
+        pick = rng.integers(0, 8, size=n)
+        for i in range(1, n):
+            out[i] = (self.successors[out[i - 1], pick[i]]
+                      if follow[i] else fresh[i])
+        return out
+
+    def batch(self, step: int, *, host_index: int = 0, host_count: int = 1
+              ) -> dict[str, np.ndarray]:
+        """The host-local slice of global batch ``step`` (pure function)."""
+        cfg = self.cfg
+        assert cfg.global_batch % host_count == 0
+        rows = cfg.global_batch // host_count
+        rng = np.random.default_rng(
+            (cfg.seed, step, host_index))
+        if cfg.kind == "uniform":
+            toks = rng.integers(0, cfg.vocab,
+                                size=(rows, cfg.seq_len + 1), dtype=np.int32)
+        else:
+            toks = np.stack([self._tokens(np.random.default_rng(
+                (cfg.seed, step, host_index, r)), cfg.seq_len + 1)
+                for r in range(rows)])
+        batch = {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
+        if cfg.embed_dim:
+            # embeds-input archs: deterministic pseudo-embeddings of the ids
+            rngf = np.random.default_rng((cfg.seed, step, host_index, 10**6))
+            batch["inputs"] = rngf.standard_normal(
+                (rows, cfg.seq_len, cfg.embed_dim)).astype(np.float32) * 0.02
+        return batch
+
+    def make_global_batch(self, step: int, mesh, shardings) -> dict:
+        """Assemble the jax global batch for this process."""
+        local = self.batch(step, host_index=jax.process_index(),
+                           host_count=jax.process_count())
+        return {
+            k: jax.make_array_from_process_local_data(shardings[k], v)
+            for k, v in local.items()
+        }

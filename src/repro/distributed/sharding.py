@@ -1,0 +1,242 @@
+"""Logical-axis sharding rules -> concrete NamedShardings.
+
+Two surfaces:
+
+* **Activations** — models call ``shard(x, logical_axes)``;
+  :func:`make_sharder` resolves each logical name through the rules table
+  and applies ``with_sharding_constraint``, silently dropping any mesh axis
+  that does not divide the tensor dim (e.g. 4 KV heads on a 16-way model
+  axis) — the guard that lets one model code path serve every mesh.
+
+* **Parameters / states** — :func:`param_specs` walks a params pytree and
+  assigns PartitionSpecs from path+shape heuristics: column-parallel for
+  input-side projections, row-parallel for output-side, expert-parallel for
+  stacked expert weights, vocab-parallel embeddings, replicated norms and
+  (small) TNN cores.  ``fsdp=True`` additionally shards the largest
+  remaining dim of large params over ``data`` (ZeRO-3 style).
+
+Mesh axis names: ``("data", "model")`` single-pod, ``("pod", "data",
+"model")`` multi-pod; ``pod`` is outer data parallelism (hierarchical
+gradient reduction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical activation axis -> mesh axis (tuple = combined axes).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,                 # "data" under sequence parallelism
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "moe_groups": ("pod", "data"),   # MoE dispatch groups (= batch rows)
+    "vocab": "model",
+    "embed": None,
+}
+
+
+def _axes_in(mesh: Mesh, spec) -> tuple[str, ...]:
+    if spec is None:
+        return ()
+    axes = spec if isinstance(spec, tuple) else (spec,)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _mesh_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def make_sharder(mesh: Mesh | None, rules: dict[str, Any] | None = None):
+    """Build the ``shard(x, logical_axes)`` callback models consume."""
+    if mesh is None:
+        return lambda x, axes: x
+    rules = {**DEFAULT_RULES, **(rules or {})}
+
+    def shard(x: jax.Array, axes: tuple[Optional[str], ...]) -> jax.Array:
+        if len(axes) != x.ndim:
+            return x
+        parts = []
+        used: set[str] = set()
+        for dim, name in zip(x.shape, axes):
+            cand = _axes_in(mesh, rules.get(name)) if name else ()
+            cand = tuple(a for a in cand if a not in used)
+            if cand and dim % _mesh_size(mesh, cand) == 0:
+                parts.append(cand if len(cand) > 1 else cand[0])
+                used.update(cand)
+            else:
+                parts.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*parts)))
+
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+# Projections whose *output* dim shards over `model` (column parallel)...
+_COL_NAMES = {"q", "k", "v", "gate", "up", "cm_k", "in", "r", "g", "lm_head"}
+# ...and whose *input* dim shards over `model` (row parallel).
+_ROW_NAMES = {"o", "down", "cm_v", "out"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(str(p.idx))
+    return names
+
+
+def _spec_for(names: list[str], shape: tuple[int, ...], mesh: Mesh,
+              fsdp: bool, inference: bool = False) -> P:
+    msize = mesh.shape.get("model", 1)
+    # Leading layer-stack axis (present both under params/layers/... and
+    # under optimizer-state mirrors like opt/m/layers/...).
+    stacked = 1 if any(n in ("layers", "enc_layers", "dec_layers")
+                       for n in names) else 0
+    parts: list[Any] = [None] * len(shape)
+
+    def ok(dim_idx: int, size: int = msize) -> bool:
+        return 0 <= dim_idx < len(shape) and shape[dim_idx] % size == 0
+
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    path_str = "/".join(names)
+
+    if leaf == "embed" and len(shape) == 2:
+        if ok(0):
+            parts[0] = "model"                   # vocab-parallel table
+    elif "cores" in names:
+        # TNN factor cores: small; replicate except the expert axis of
+        # MoE-stacked cores ([L, E, ...]).
+        if "experts" in names and ok(stacked):
+            parts[stacked] = "model"
+    elif leaf == "w" and len(shape) >= 2:
+        if parent == "router":
+            pass                                  # replicated router
+        elif "experts" in names and len(shape) == stacked + 3:
+            if inference and "data" in mesh.axis_names \
+                    and shape[stacked] % (msize * mesh.shape["data"]) == 0:
+                # serving: 2D expert sharding (E over model x data) — no
+                # per-token weight gather, dispatch reshards instead
+                parts[stacked] = ("model", "data")
+            elif inference and "data" in mesh.axis_names \
+                    and shape[stacked] % mesh.shape["data"] == 0 and ok(stacked):
+                # E over data, d_ff over model: weights stay put; the MoE
+                # combine's partial sums all-reduce tiny activations.
+                # model goes on the expert FFN's wide dim: output side for
+                # gate/up ([E, D, F] -> F), contracted side for down
+                # ([E, F, D] -> F) so h stays F-sharded end to end.
+                parts[stacked] = "data"
+                wide = (len(shape) - 1 if parent in _COL_NAMES
+                        else len(shape) - 2)
+                if shape[wide] % msize == 0:
+                    parts[wide] = "model"
+            elif ok(stacked):
+                parts[stacked] = "model"          # expert parallelism
+        elif parent in _COL_NAMES and ok(len(shape) - 1):
+            parts[-1] = "model"
+        elif parent in _ROW_NAMES and ok(len(shape) - 2):
+            parts[-2] = "model"
+    elif leaf == "b" and parent in _COL_NAMES and ok(len(shape) - 1):
+        parts[-1] = "model"
+    # norms / scalars / mix coefficients / conv weights: replicated.
+
+    if fsdp and not inference:
+        daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dsize = 1
+        for a in daxes:
+            dsize *= mesh.shape[a]
+        numel = 1
+        for s in shape:
+            numel *= s
+        if numel >= (1 << 20):                   # only shard big tensors
+            for i in range(stacked, len(shape)):
+                if parts[i] is None and shape[i] % dsize == 0:
+                    parts[i] = daxes if len(daxes) > 1 else daxes[0]
+                    break
+    return P(*parts)
+
+
+def param_specs(params: Any, mesh: Mesh, fsdp: bool = False,
+                inference: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    ``inference=True`` switches to the serving layout: dense weights are
+    TP-sharded over `model` and replicated over `data` (no per-token FSDP
+    gathers), MoE experts shard over `data`/(model,data) so dispatch moves
+    activations, never weights."""
+    def assign(path, leaf):
+        return _spec_for(_path_names(path), tuple(leaf.shape), mesh, fsdp,
+                         inference)
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def named_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """[B, T, ...] host batch: B over (pod, data)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes)
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """Decode-cache sharding: batch dims over (pod, data); the KV length
+    dim over `model` (decode-time context parallelism — scores reduce with
+    tiny collectives instead of replicating multi-GB caches)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        parts: list[Any] = [None] * len(shape)
+        leaf_name = names[-1] if names else ""
+        if leaf_name in ("k", "v") and len(shape) >= 4:
+            # [L?, B, max_len, KV, hd]
+            b_idx = len(shape) - 4
+            if shape[b_idx] % _mesh_size(mesh, dp) == 0:
+                parts[b_idx] = dp if len(dp) > 1 else dp[0]
+            if shape[b_idx + 1] % mesh.shape.get("model", 1) == 0:
+                parts[b_idx + 1] = "model"
+        elif leaf_name in ("wkv", "ssm") and len(shape) >= 4:
+            # [L, B, H, dk, dv]: batch over dp, heads over model
+            if shape[1] % _mesh_size(mesh, dp) == 0:
+                parts[1] = dp if len(dp) > 1 else dp[0]
+            if shape[2] % mesh.shape.get("model", 1) == 0:
+                parts[2] = "model"
+        elif leaf_name in ("shift_tm", "shift_cm", "conv") and len(shape) >= 2:
+            if shape[1] % _mesh_size(mesh, dp) == 0:
+                parts[1] = dp if len(dp) > 1 else dp[0]
+        elif leaf_name == "enc_out" and len(shape) == 3:
+            if shape[0] % _mesh_size(mesh, dp) == 0:
+                parts[0] = dp if len(dp) > 1 else dp[0]
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(assign, cache)

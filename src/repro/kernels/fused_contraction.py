@@ -1,0 +1,163 @@
+"""Pallas TPU kernels for tensor-contraction hot spots.
+
+Two kernels realise FETTA's micro-architectural ideas on the TPU memory
+hierarchy (HBM -> VMEM -> MXU):
+
+* ``matmul_pallas`` — an MXU-tiled GEMM whose rhs may be stored transposed
+  (``[N, K]`` layout).  The transpose happens **in VMEM after the DMA**,
+  never as a standalone HBM kernel — the TPU analogue of FETTA's
+  transposable systolic datapath ("implicit data layout reordering during
+  computation", §V-B).  Grid = (M/bm, N/bn, K/bk) with a revisiting f32
+  accumulator, K innermost ("output-stationary": the Psum tile stays
+  resident while operand tiles stream, exactly the OS dataflow of Fig. 9).
+
+* ``chain_pallas`` — two chained contractions ``(X @ A) @ B`` with the
+  ``[bm, H]`` intermediate held in VMEM scratch, so the intermediate tensor
+  of a TT/TTM chain never round-trips HBM (FETTA's butterfly-fed CE array /
+  ETTE's look-ahead registers).  This is what ``fused_chain=True`` in the
+  CSSE stage-2 model assumes the runtime can do.
+
+Both use 128-aligned BlockSpecs (MXU edge) and f32 accumulation over bf16
+operands.  On CPU hosts they run under ``interpret=True`` (pure-Python
+execution of the kernel body) and are validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Tiled GEMM with fused rhs transpose
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int,
+                   transpose_rhs: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                       # [bm, bk]
+    w = w_ref[...]                       # [bk, bn] or [bn, bk] (stored-T)
+    if transpose_rhs:
+        w = w.T                          # VMEM-local transpose, fused
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(x: jax.Array, w: jax.Array, *, transpose_rhs: bool = False,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                  out_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """``C[M, N] = X[M, K] @ W`` with W stored ``[K, N]`` or ``[N, K]``."""
+    m, k = x.shape
+    if transpose_rhs:
+        n, k2 = w.shape
+    else:
+        k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    out_dtype = out_dtype or x.dtype
+    interpret = INTERPRET if interpret is None else interpret
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    # Pad to block multiples (zeros contribute nothing to the dot).
+    mp, np_, kp = (-m % bm), (-n % bn), (-k % bk)
+    if mp or kp:
+        x = jnp.pad(x, ((0, mp), (0, kp)))
+    if transpose_rhs and (np_ or kp):
+        w = jnp.pad(w, ((0, np_), (0, kp)))
+    elif not transpose_rhs and (np_ or kp):
+        w = jnp.pad(w, ((0, kp), (0, np_)))
+    M, K, N = m + mp, k + kp, n + np_
+    k_steps = K // bk
+
+    if transpose_rhs:
+        w_spec = pl.BlockSpec((bn, bk), lambda i, j, s: (j, s))
+    else:
+        w_spec = pl.BlockSpec((bk, bn), lambda i, j, s: (s, j))
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps,
+                          transpose_rhs=transpose_rhs),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)), w_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused two-step contraction chain
+# ---------------------------------------------------------------------------
+
+
+def _chain_kernel(x_ref, a_ref, b_ref, o_ref, t_ref, *, h_dtype):
+    # x: [bm, K], a: [K, H], b: [H, bn]; t (scratch): [bm, H] f32
+    t = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+    t_ref[...] = t
+    # Cast the VMEM-resident intermediate to the operand dtype before the
+    # second MXU pass (matches the non-fused two-einsum semantics).
+    o_ref[...] = jnp.dot(t_ref[...].astype(h_dtype), b_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def chain_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
+                 block_m: int = 128, block_n: int = 128,
+                 out_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """``Y[M, N] = (X[M, K] @ A[K, H]) @ B[H, N]`` — intermediate in VMEM.
+
+    K and H must fit in VMEM alongside the tiles (true for TNN cores, where
+    K = prod of a few factor dims and H = rank*factor products); the wrapper
+    asserts a conservative budget.
+    """
+    m, k = x.shape
+    k2, h = a.shape
+    h2, n = b.shape
+    assert k == k2 and h == h2
+    out_dtype = out_dtype or x.dtype
+    interpret = INTERPRET if interpret is None else interpret
+
+    bm, bn = min(block_m, m), min(block_n, n)
+    vmem_elems = (bm * k + k * h + h * bn + bm * h + bm * bn)
+    assert vmem_elems * 4 < 100 * 2 ** 20, (
+        f"chain operands exceed VMEM budget: {vmem_elems * 4} bytes")
+
+    mp, np_ = (-m % bm), (-n % bn)
+    if mp:
+        x = jnp.pad(x, ((0, mp), (0, 0)))
+    if np_:
+        b = jnp.pad(b, ((0, 0), (0, np_)))
+    M, N = m + mp, n + np_
+
+    out = pl.pallas_call(
+        functools.partial(_chain_kernel, h_dtype=x.dtype),
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, h), lambda i, j: (0, 0)),
+            pl.BlockSpec((h, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, h), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, a, b)
+    return out[:m, :n]

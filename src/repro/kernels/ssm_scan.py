@@ -1,0 +1,131 @@
+"""Chunked linear-recurrence Pallas kernel (RWKV-6 / Mamba-2 token mixing).
+
+The state-space hot loop shared by the rwkv6 and zamba2 architectures:
+
+    S_t = diag(d_t) S_{t-1} + k_t^T v_t          (state:  [dk, dv])
+    o_t = q_t (diag(a_t) S_{t-1} + diag(g_t) k_t^T v_t)
+
+with mode
+
+* ``ssd``   (Mamba-2): a_t = d_t, g_t = 1  ->  o_t = q_t S_t
+* ``rwkv6``          : a_t = 1,  g_t = u   (the "bonus" weight on the
+  current token; the state the output sees is the *un-decayed* S_{t-1})
+
+A naive ``lax.scan`` is a length-T sequential chain of rank-1 updates —
+memory-bound and MXU-hostile.  The kernel processes the sequence in chunks
+of C tokens: within a chunk the recurrence unrolls into two MXU GEMMs
+(an intra-chunk masked attention and a state projection), and only the
+[dk, dv] state crosses chunk boundaries — held in VMEM scratch across grid
+steps, never touching HBM.  Decay products are computed in log space so the
+intra-chunk ratio matrix exp(lc_i - lc_j) (j <= i) never overflows.
+
+Grid: (batch*heads, T/C); the chunk axis is ``arbitrary`` (sequential), the
+batch*head axis ``parallel``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_contraction import INTERPRET
+
+
+def _scan_kernel(q_ref, k_ref, v_ref, ld_ref, u_ref, o_ref, sout_ref,
+                 state_ref, *, mode: str, num_chunks: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # [C, dk]
+    k = k_ref[0].astype(jnp.float32)           # [C, dk]
+    v = v_ref[0].astype(jnp.float32)           # [C, dv]
+    ld = ld_ref[0].astype(jnp.float32)         # [C, dk] log-decay (<= 0)
+    c = q.shape[0]
+
+    lc = jnp.cumsum(ld, axis=0)                # inclusive log cumprod
+    if mode == "ssd":
+        ex = lc                                # output sees decayed state
+    else:                                      # rwkv6: output sees S_{t-1}
+        ex = lc - ld
+
+    q_t = q * jnp.exp(ex)                      # [C, dk]
+    k_t = k * jnp.exp(-lc)                     # [C, dk]
+    att = jnp.dot(q_t, k_t.T, preferred_element_type=jnp.float32)  # [C, C]
+    row = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    if mode == "ssd":
+        att = jnp.where(row >= col, att, 0.0)
+    else:
+        att = jnp.where(row > col, att, 0.0)
+        u = u_ref[0].astype(jnp.float32)       # [1, dk] bonus
+        diag = jnp.sum(q * u * k, axis=-1)     # [C]
+        att += jnp.diag(diag)
+
+    inter = jnp.dot(q_t, state_ref[...],
+                    preferred_element_type=jnp.float32)            # [C, dv]
+    o_ref[0] = (jnp.dot(att, v, preferred_element_type=jnp.float32)
+                + inter).astype(o_ref.dtype)
+
+    # State update: S_out = diag(exp(lc[-1])) S_in + (k*exp(lc[-1]-lc))^T v
+    k_s = k * jnp.exp(lc[-1:] - lc)            # [C, dk]
+    state_ref[...] = (state_ref[...] * jnp.exp(lc[-1])[:, None]
+                      + jnp.dot(k_s.T, v, preferred_element_type=jnp.float32))
+
+    @pl.when(pl.program_id(1) == num_chunks - 1)
+    def _flush_state():
+        sout_ref[0] = state_ref[...]
+
+
+def linear_scan_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                       log_decay: jax.Array, u: jax.Array | None = None, *,
+                       mode: str = "ssd", chunk: int = 128,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Batched chunked scan.
+
+    Shapes: q, k, log_decay: [BH, T, dk]; v: [BH, T, dv]; u: [BH, dk]
+    (required for mode="rwkv6").  T must be a multiple of ``chunk`` (pad
+    upstream; decode paths use the single-step recurrence instead).
+    Returns (o: [BH, T, dv] in v.dtype, final_state: [BH, dk, dv] f32) —
+    the state output is what prefill hands to the decode loop.
+    """
+    assert mode in ("ssd", "rwkv6")
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, f"T={t} not a multiple of chunk={chunk}"
+    if u is None:
+        assert mode == "ssd", "rwkv6 mode requires the u bonus vector"
+        u = jnp.zeros((bh, dk), q.dtype)
+    u3 = u[:, None, :]                          # [BH, 1, dk]
+    interpret = INTERPRET if interpret is None else interpret
+    num_chunks = t // chunk
+
+    out, state = pl.pallas_call(
+        functools.partial(_scan_kernel, mode=mode, num_chunks=num_chunks),
+        grid=(bh, num_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, s: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, s: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), v.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, log_decay, u3)
+    return out, state

@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# Lower dots with TPU semantics (bf16 operands, f32 accumulate) — the CPU
+# execution workaround would add phantom f32 operand copies to the roofline.
+os.environ.setdefault("REPRO_ASSUME_TPU_DOTS", "1")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the scale proof for the framework: ``train_step`` / ``serve_step``
+must lower and compile under the production meshes (16x16 single-pod and
+2x16x16 multi-pod) for all assigned architectures and input shapes, with
+real parameter/optimizer/batch/cache shardings.  The compiled artifact's
+``memory_analysis()`` proves the per-device footprint fits a TPU v5e and
+``cost_analysis()`` + HLO collective parsing feed the roofline table
+(EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun                       # all cells, both meshes
+  python -m repro.launch.dryrun --arch tinyllama_1_1b --shape train_4k
+  python -m repro.launch.dryrun --mesh single --tnn   # paper-technique variant
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline
+from repro.configs import base as cfgbase
+from repro.core.tensorized import TNNConfig
+from repro.distributed import sharding
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamW
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs accounting (6·N·D train / 2·N·tokens inference, MoE-active)
+# ---------------------------------------------------------------------------
+
+
+def _active_matmul_params(params_shape, top_k: int | None,
+                          num_experts: int | None, tied: bool) -> float:
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        if "embed" in names and not tied:
+            continue                       # gather, not a matmul
+        if "experts" in names and top_k and num_experts:
+            size = size * top_k / num_experts
+        total += size
+    return total
+
+
+def model_flops(kind: str, cfg, params_shape, B: int, T: int) -> float:
+    moe = getattr(cfg, "moe", None)
+    n = _active_matmul_params(
+        params_shape,
+        moe.top_k if moe else None,
+        moe.num_experts if moe else None,
+        getattr(cfg, "tie_embeddings", False))
+    if kind == "train":
+        return 6.0 * n * B * T
+    if kind == "prefill":
+        return 2.0 * n * B * T
+    # decode: one token through the stack + attention over the cache
+    attn_ctx = 0.0
+    if getattr(cfg, "block", "attn") == "attn" or getattr(cfg, "hybrid", None):
+        layers = getattr(cfg, "num_layers", 0)
+        if getattr(cfg, "hybrid", None):
+            layers = cfg.num_layers // cfg.hybrid.shared_every
+        kv = getattr(cfg, "num_kv_heads", 0)
+        heads = getattr(cfg, "num_heads", 0)
+        hd = cfg.hd
+        attn_ctx = 4.0 * B * T * heads * hd * layers
+    if hasattr(cfg, "num_dec_layers"):     # enc-dec decode
+        attn_ctx = 4.0 * B * T * cfg.num_heads * cfg.hd * cfg.num_dec_layers
+    return 2.0 * n * B + attn_ctx
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def pick_microbatches(cfg, shape, mesh) -> int:
+    """Split the global batch so the per-device layer-boundary activation
+    stash (L x rows x T x D bf16) stays under ~3 GB.  Bounded so each
+    microbatch still divides the data-parallel axis."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    L = getattr(cfg, "num_layers", None)
+    if L is None:
+        L = cfg.num_enc_layers + cfg.num_dec_layers
+    B, T = shape.global_batch, shape.seq_len
+    # budget 1.5 GB for the bf16 stash; XLA additionally hoists an f32
+    # upcast of the stash out of the backward loop (~2x more), so the real
+    # footprint is ~3x this estimate.
+    est = L * (B / dp) * T * cfg.d_model * 2.0
+    mb = 1
+    while est / mb > 1.5e9 and B // (mb * 2) >= dp and (B % (mb * 2)) == 0:
+        mb *= 2
+    # Once the batch split bottoms out (microbatch must still divide the DP
+    # axis), trade recompute for stash: remat groups of 2 layers.
+    group = 1
+    while (est / mb / group > 2.5e9 and group < 4
+           and L % (group * 2) == 0):
+        group *= 2
+    return mb, group
+
+
+def _batch_shardings(tree, mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def leaf_spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dp_size == 0 and dp:
+            return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(leaf_spec, tree)
+
+
+def _ns(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             tnn: bool = False, fsdp: bool = True,
+             seq_parallel: bool = False,
+             save_json: bool = True, verbose: bool = True) -> dict:
+    arch = cfgbase.get(arch_id)
+    shape = cfgbase.SHAPES[shape_name]
+    mesh_name = "2pod" if multi_pod else "1pod"
+    cell = f"{arch_id} x {shape_name} x {mesh_name}" + (" +tnn" if tnn else "")
+
+    ok, reason = arch.shape_supported(shape)
+    if not ok:
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "status": "SKIP", "reason": reason}
+        if verbose:
+            print(f"[dryrun] SKIP {cell}: {reason}")
+        if save_json:
+            _save(rec, arch_id, shape_name, mesh_name, tnn)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tnn_cfg = arch.tnn_default if tnn else None
+    model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg)
+    # Sequence "parallelism" via plain sharding constraints measured WORSE
+    # (collectives x5, temp +60%: XLA reshards at every dot instead of
+    # keeping norms seq-sharded) — kept as an opt-in flag; see
+    # EXPERIMENTS.md §Perf for the refuted-hypothesis record.
+    rules = {"seq": "model"} if (shape.kind == "train" and seq_parallel)         else None
+    shard = sharding.make_sharder(mesh, rules)
+    specs = steps_lib.input_specs(arch, shape, cfg)
+
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    if shape.kind != "train":
+        # serving runs bf16 weights (standard); halves weight bytes and HBM
+        params_shape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), params_shape)
+    # Serving layout choice: replicate-over-data (kills per-token FSDP
+    # weight gathers — EXPERIMENTS.md §Perf H5) only when the bf16 weights
+    # fit beside the caches; big archs (llava-34B, qwen3-235B) keep the
+    # FSDP layout and pay the gather.
+    import math as _math
+    _np = sum(_math.prod(l.shape) for l in jax.tree.leaves(params_shape))
+    inference_layout = (shape.kind != "train"
+                        and _np * 2 / mesh.shape.get("model", 1) <= 3.5e9)
+    pspecs = sharding.param_specs(params_shape, mesh, fsdp=fsdp,
+                                  inference=inference_layout)
+    pshard = _ns(pspecs, mesh)
+
+    microbatches = 1
+    if shape.kind == "train":
+        # bf16 moments (8 B/param optimizer) — the pod-scale default.
+        # When even f32 master params + grads cannot fit the pod's HBM
+        # (235B on 256 chips), fall back to bf16 params with the optimizer
+        # computing updates in f32 (bf16+SR-style training config; the
+        # 2-pod mesh keeps f32 masters).
+        import math as _math
+        n_params = sum(_math.prod(l.shape)
+                       for l in jax.tree.leaves(params_shape))
+        state_bytes = n_params * (4 + 2 + 2 + 4)      # p + m + v + grads
+        if state_bytes > 0.55 * 16e9 * mesh.size:
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, param_dtype=jnp.bfloat16)
+            model, _ = steps_lib.build_model(arch, tnn=tnn_cfg)
+            model.cfg = cfg
+            from repro.models.lm import LM as _LM
+            model = _LM(cfg)
+            params_shape = jax.eval_shape(model.init, jax.random.key(0))
+            pspecs = sharding.param_specs(params_shape, mesh, fsdp=fsdp)
+            pshard = _ns(pspecs, mesh)
+        opt = AdamW(moment_dtype=jnp.bfloat16)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        state_shape = {"params": params_shape, "opt": opt_shape}
+        state_shard = {"params": pshard,
+                       "opt": type(opt_shape)(m=pshard, v=pshard,
+                                              step=NamedSharding(mesh, P()))}
+        batch_shard = _batch_shardings(specs["batch"], mesh)
+        microbatches, remat_group = pick_microbatches(cfg, shape, mesh)
+        if remat_group > 1 and hasattr(cfg, "remat_group") and not cfg.hybrid:
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, remat_group=remat_group)
+            from repro.models.lm import LM as _LM
+            model = _LM(cfg)
+        step_fn = steps_lib.make_train_step(model, opt, shard,
+                                            microbatches=microbatches)
+        jitted = jax.jit(step_fn, in_shardings=(state_shard, batch_shard),
+                         donate_argnums=0)
+        lowered = jitted.lower(state_shape, specs["batch"])
+    elif shape.kind == "prefill":
+        step_fn = steps_lib.make_prefill_step(model, shard,
+                                              max_len=shape.seq_len + 128)
+        if arch.model_kind == "encdec":
+            args = (params_shape, specs["enc_embeds"], specs["dec_tokens"])
+            in_sh = (pshard, _batch_shardings(specs["enc_embeds"], mesh),
+                     _batch_shardings(specs["dec_tokens"], mesh))
+        else:
+            args = (params_shape, specs["inputs"])
+            in_sh = (pshard, _batch_shardings(specs["inputs"], mesh))
+        jitted = jax.jit(step_fn, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
+    else:  # decode
+        step_fn = steps_lib.make_decode_step(model, shard)
+        cache_shape = specs["cache"]
+        cache_shard = _ns(sharding.cache_specs(cache_shape, mesh), mesh)
+        tok_shard = _batch_shardings(specs["token"], mesh)
+        jitted = jax.jit(step_fn, in_shardings=(pshard, tok_shard,
+                                                cache_shard),
+                         donate_argnums=2)
+        lowered = jitted.lower(params_shape, specs["token"], cache_shape)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    mf = model_flops(shape.kind, cfg, params_shape,
+                     shape.global_batch, shape.seq_len)
+    report = roofline.analyze(
+        compiled, arch=arch_id, shape=shape_name, mesh_name=mesh_name,
+        num_devices=mesh.size, model_flops_total=mf, hlo_text=hlo)
+
+    rec = report.to_dict()
+    rec.update(
+        status="OK", tnn=tnn, fsdp=fsdp, microbatches=microbatches,
+        remat_group=getattr(cfg, "remat_group", 1),
+        seq_parallel=bool(shape.kind == "train" and seq_parallel),
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory={
+            "argument_gb": mem.argument_size_in_bytes / 2**30,
+            "output_gb": mem.output_size_in_bytes / 2**30,
+            "temp_gb": mem.temp_size_in_bytes / 2**30,
+            "code_mb": mem.generated_code_size_in_bytes / 2**20,
+        },
+    )
+    fits = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) < 16 * 2**30
+    rec["fits_16g_hbm"] = bool(fits)
+    if verbose:
+        print(f"[dryrun] OK   {cell}  lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s  "
+              f"args={rec['memory']['argument_gb']:.2f}G "
+              f"temp={rec['memory']['temp_gb']:.2f}G fits={fits}")
+        print("         " + report.summary())
+    if save_json:
+        _save(rec, arch_id, shape_name, mesh_name, tnn)
+    return rec
+
+
+def _save(rec, arch_id, shape_name, mesh_name, tnn):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = "__tnn" if tnn else ""
+    path = os.path.join(
+        OUT_DIR, f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(cfgbase.SHAPES),
+                    help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--tnn", action="store_true",
+                    help="enable the paper's tensorized layers")
+    ap.add_argument("--fsdp", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--keep-going", action="store_true", default=True)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else cfgbase.ARCH_IDS
+    shapes = [args.shape] if args.shape else list(cfgbase.SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch_id in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                try:
+                    run_cell(arch_id, shape_name, multi, tnn=args.tnn,
+                             fsdp=args.fsdp)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch_id, shape_name, multi, repr(e)))
+                    print(f"[dryrun] FAIL {arch_id} x {shape_name} x "
+                          f"{'2pod' if multi else '1pod'}: {e}")
+                    traceback.print_exc()
+                    if not args.keep_going:
+                        raise
+    print(f"\n[dryrun] done; {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

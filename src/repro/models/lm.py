@@ -1,0 +1,567 @@
+"""Unified decoder-only language model covering the assigned architectures.
+
+One `LM` class instantiates dense-attention (tinyllama/qwen2/phi4/internlm2/
+llava backbone), MoE (qwen3-moe, olmoe), attention-free (rwkv6), and hybrid
+(zamba2: Mamba-2 backbone + a parameter-shared attention block every k
+layers) families from an :class:`LMConfig`.
+
+Structure notes:
+* Homogeneous layer stacks are ``lax.scan``-ned over stacked params (HLO is
+  O(1 layer) — the 94-layer MoE compiles in minutes on the dry-run host),
+  with optional ``jax.checkpoint`` per layer (activation remat).
+* Inputs are token ids (``int``) or precomputed embeddings (``float`` —
+  the VLM/audio modality-frontend stubs feed these).
+* Three execution paths: ``__call__`` (teacher-forced training),
+  ``prefill`` (chunked-kernel prompt ingestion returning decode state),
+  ``decode_step`` (one token).
+* The paper's technique enters through ``cfg.tnn`` — every projection
+  consults it (see ``blocks.Dense``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tensorized import TNNConfig
+from repro.models import ssm
+from repro.models.blocks import (
+    Attention, Dense, KVCache, MoE, Shard, SwiGLU, einsum_f32, no_shard,
+    rmsnorm, rmsnorm_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridSpec:
+    """Zamba2-style: shared attention block applied every `shared_every`
+    backbone layers (same weights each application)."""
+    shared_every: int = 27
+    d_ff_shared: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None            # default d_model // num_heads
+    block: str = "attn"                    # attn | rwkv6 | mamba2
+    moe: MoESpec | None = None
+    hybrid: HybridSpec | None = None
+    ssm_state: int = 64
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    tnn: TNNConfig = TNNConfig()
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    remat: bool = True
+    remat_group: int = 1       # layers rematted together: stash shrinks by
+                               # this factor at +((g-1)/g) fwd recompute
+    scan_layers: bool = True
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def validate(self):
+        assert self.block in ("attn", "rwkv6", "mamba2")
+        if self.hybrid:
+            assert self.block == "mamba2", "hybrid = mamba2 backbone"
+            assert self.num_layers % self.hybrid.shared_every == 0, (
+                f"{self.num_layers} layers not divisible by shared_every="
+                f"{self.hybrid.shared_every}")
+
+
+class DecodeCache(NamedTuple):
+    """Per-model decode state: stacked per-layer caches + global position."""
+    layers: Any           # stacked KVCache / RWKVState / MambaState pytree
+    shared: Any           # hybrid only: stacked KVCache per shared-block app
+    length: jax.Array     # [] int32
+
+
+def _shift(z):
+    return jnp.pad(z, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _unrolled_scan(step, x, xs, n):
+    """Python-unrolled lax.scan twin (used by the dry-run cost probes —
+    cost_analysis counts while bodies once, so probes compile unrolled)."""
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda p: p[i], xs)
+        x, y = step(x, sl)
+        ys.append(y)
+    return x, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def _maybe_scan(step, x, xs, use_scan, n):
+    if use_scan:
+        return jax.lax.scan(step, x, xs)
+    return _unrolled_scan(step, x, xs, n)
+
+
+# ---------------------------------------------------------------------------
+
+
+class LM:
+    def __init__(self, cfg: LMConfig):
+        cfg.validate()
+        self.cfg = cfg
+        c = cfg
+        common = dict(param_dtype=c.param_dtype, compute_dtype=c.compute_dtype)
+        tnn = c.tnn if c.tnn.enabled else None
+        if c.block == "attn":
+            self.attn = Attention(c.d_model, c.num_heads, c.num_kv_heads,
+                                  c.hd, qkv_bias=c.qkv_bias,
+                                  rope_theta=c.rope_theta, q_chunk=c.q_chunk,
+                                  kv_chunk=c.kv_chunk, tnn=tnn, **common)
+            if c.moe:
+                self.mlp = MoE(c.d_model, c.moe.d_ff_expert, c.moe.num_experts,
+                               c.moe.top_k, c.moe.capacity_factor, tnn=tnn,
+                               **common)
+            else:
+                self.mlp = SwiGLU(c.d_model, c.d_ff, tnn=tnn, **common)
+        elif c.block == "rwkv6":
+            self.rwkv = ssm.RWKV6Block(c.d_model, head_dim=c.hd, d_ff=c.d_ff,
+                                       tnn=tnn, **common)
+        elif c.block == "mamba2":
+            self.mamba = ssm.Mamba2Block(c.d_model, d_state=c.ssm_state,
+                                         head_dim=c.hd, tnn=tnn, **common)
+            if c.hybrid:
+                self.shared_attn = Attention(
+                    c.d_model, c.num_heads, c.num_kv_heads, c.hd,
+                    rope_theta=c.rope_theta, q_chunk=c.q_chunk,
+                    kv_chunk=c.kv_chunk, tnn=tnn, **common)
+                self.shared_mlp = SwiGLU(
+                    c.d_model, c.hybrid.d_ff_shared or c.d_ff, tnn=tnn,
+                    **common)
+
+    # -- init -----------------------------------------------------------------
+
+    def _layer_init(self, key: jax.Array) -> dict:
+        c = self.cfg
+        if c.block == "attn":
+            k1, k2 = jax.random.split(key)
+            return {"ln1": rmsnorm_init(c.d_model),
+                    "attn": self.attn.init(k1),
+                    "ln2": rmsnorm_init(c.d_model),
+                    "mlp": self.mlp.init(k2)}
+        if c.block == "rwkv6":
+            return {"ln1": rmsnorm_init(c.d_model),
+                    "ln2": rmsnorm_init(c.d_model),
+                    "rwkv": self.rwkv.init(key)}
+        return {"ln": rmsnorm_init(c.d_model),
+                "mamba": self.mamba.init(key)}
+
+    def init(self, key: jax.Array) -> dict:
+        c = self.cfg
+        ke, kl, kh, ko = jax.random.split(key, 4)
+        std = 1.0 / math.sqrt(c.d_model)
+        params = {
+            "embed": (jax.random.normal(ke, (c.vocab, c.d_model), jnp.float32)
+                      * std).astype(c.param_dtype),
+            "ln_f": rmsnorm_init(c.d_model),
+            "layers": jax.vmap(self._layer_init)(
+                jax.random.split(kl, c.num_layers)),
+        }
+        if not c.tie_embeddings:
+            params["lm_head"] = Dense(
+                c.d_model, c.vocab, param_dtype=c.param_dtype,
+                compute_dtype=c.compute_dtype).init(ko)
+        if c.hybrid:
+            k1, k2 = jax.random.split(kh)
+            params["shared"] = {"ln1": rmsnorm_init(c.d_model),
+                                "attn": self.shared_attn.init(k1),
+                                "ln2": rmsnorm_init(c.d_model),
+                                "mlp": self.shared_mlp.init(k2)}
+        return params
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    # -- pieces ---------------------------------------------------------------
+
+    def _embed(self, params, inputs, shard: Shard):
+        c = self.cfg
+        if jnp.issubdtype(inputs.dtype, jnp.integer):
+            table = params["embed"].astype(c.compute_dtype)
+            x = jnp.take(table, inputs, axis=0)
+        else:
+            x = inputs.astype(c.compute_dtype)   # modality stub embeddings
+        return shard(x, ("batch", "seq", None))
+
+    def _logits(self, params, x):
+        c = self.cfg
+        if c.tie_embeddings:
+            w = params["embed"].astype(c.compute_dtype)
+            return einsum_f32("btd,vd->btv", x, w).astype(c.compute_dtype)
+        return Dense(c.d_model, c.vocab, param_dtype=c.param_dtype,
+                     compute_dtype=c.compute_dtype)(params["lm_head"], x)
+
+    def _moe_apply(self, lp_mlp, y, shard):
+        """Group tokens by batch row (groups shard over `data`)."""
+        c = self.cfg
+        B, T, D = y.shape
+        ym, aux = self.mlp(lp_mlp, y.reshape(B, T, D), shard)
+        return ym.reshape(y.shape), aux
+
+    # -- per-layer functions (train / prefill / decode) ------------------------
+
+    def _attn_layer(self, lp, x, positions, shard):
+        c = self.cfg
+        h = self.attn(lp["attn"], rmsnorm(lp["ln1"], x, c.norm_eps),
+                      positions, shard)
+        x = x + h
+        y = rmsnorm(lp["ln2"], x, c.norm_eps)
+        if c.moe:
+            ym, aux = self._moe_apply(lp["mlp"], y, shard)
+        else:
+            ym, aux = self.mlp(lp["mlp"], y, shard), {}
+        x = shard(x + ym, ("batch", "seq", None))
+        return x, aux
+
+    def _rwkv_layer(self, lp, x, shard, want_state: bool = False):
+        c = self.cfg
+        xn1 = rmsnorm(lp["ln1"], x, c.norm_eps)
+        tm, wkv = self.rwkv.time_mix(lp["rwkv"], xn1, shard)
+        x = x + tm
+        xn2 = rmsnorm(lp["ln2"], x, c.norm_eps)
+        x = x + self.rwkv.channel_mix(lp["rwkv"], xn2, _shift(xn2))
+        if want_state:
+            state = ssm.RWKVState(
+                wkv=wkv,
+                shift_tm=xn1[:, -1].astype(c.compute_dtype),
+                shift_cm=xn2[:, -1].astype(c.compute_dtype))
+            return x, state
+        return x, {}
+
+    def _mamba_layer(self, lp, x, shard, want_state: bool = False):
+        c = self.cfg
+        xn = rmsnorm(lp["ln"], x, c.norm_eps)
+        if want_state:
+            h, state = self.mamba(lp["mamba"], xn, shard, return_state=True)
+            return x + h, state
+        return x + self.mamba(lp["mamba"], xn, shard), {}
+
+    def _shared_block(self, sp, x, positions, shard):
+        c = self.cfg
+        x = x + self.shared_attn(sp["attn"], rmsnorm(sp["ln1"], x, c.norm_eps),
+                                 positions, shard)
+        x = x + self.shared_mlp(sp["mlp"], rmsnorm(sp["ln2"], x, c.norm_eps),
+                                shard)
+        return x
+
+    # -- full-sequence forward (training) --------------------------------------
+
+    def __call__(self, params: dict, inputs: jax.Array,
+                 shard: Shard = no_shard) -> tuple[jax.Array, dict]:
+        """inputs: [B, T] ids or [B, T, D] embeds -> (logits [B,T,V], aux)."""
+        c = self.cfg
+        B, T = inputs.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        x = self._embed(params, inputs, shard)
+
+        def layer_fn(x, lp):
+            if c.block == "attn":
+                return self._attn_layer(lp, x, positions, shard)
+            if c.block == "rwkv6":
+                return self._rwkv_layer(lp, x, shard)
+            return self._mamba_layer(lp, x, shard)
+
+        if c.remat:
+            layer_fn = jax.checkpoint(
+                layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+        if c.hybrid:
+            g = c.hybrid.shared_every
+            n_groups = c.num_layers // g
+            grouped = jax.tree.map(
+                lambda p: p.reshape((n_groups, g) + p.shape[1:]),
+                params["layers"])
+            for gi in range(n_groups):
+                gp = jax.tree.map(lambda p: p[gi], grouped)
+                x, _ = jax.lax.scan(layer_fn, x, gp)
+                x = self._shared_block(params["shared"], x, positions, shard)
+            aux = {}
+        elif c.scan_layers:
+            g = max(1, c.remat_group)
+            if g > 1 and c.num_layers % g == 0:
+                def group_fn(x, gp):
+                    aux = None
+                    for li in range(g):
+                        lp = jax.tree.map(lambda p: p[li], gp)
+                        x, aux = layer_fn(x, lp)
+                    return x, aux
+                if c.remat:
+                    group_fn = jax.checkpoint(
+                        group_fn,
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                grouped = jax.tree.map(
+                    lambda p: p.reshape((c.num_layers // g, g) + p.shape[1:]),
+                    params["layers"])
+                x, aux = jax.lax.scan(group_fn, x, grouped)
+            else:
+                x, aux = jax.lax.scan(layer_fn, x, params["layers"])
+        else:
+            auxes = []
+            for li in range(c.num_layers):
+                lp = jax.tree.map(lambda p: p[li], params["layers"])
+                x, a = layer_fn(x, lp)
+                auxes.append(a)
+            aux = (jax.tree.map(lambda *a: jnp.stack(a), *auxes)
+                   if auxes and auxes[0] else {})
+
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = self._logits(params, x)
+        return shard(logits, ("batch", "seq", "vocab")), aux
+
+    # -- loss -------------------------------------------------------------------
+
+    def loss(self, params: dict, batch: dict, shard: Shard = no_shard
+             ) -> tuple[jax.Array, dict]:
+        """batch: {"inputs": [B,T] or [B,T,D], "targets": [B,T], "mask": [B,T]}"""
+        logits, aux = self(params, batch["inputs"], shard)
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(targets.shape, jnp.float32)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        # gold logit via masked reduction, not take_along_axis: a gather
+        # along the vocab axis would force an all-gather of the
+        # vocab-sharded logits; the where+sum stays shard-local and reduces
+        # with a tiny all-reduce.
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape,
+                                              lf.ndim - 1)
+        gold = jnp.sum(jnp.where(vocab_iota == targets[..., None], lf, 0.0),
+                       axis=-1)
+        nll = (lse - gold) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll) / denom
+        metrics = {"nll": loss, "tokens": jnp.sum(mask)}
+        if aux and "lb_loss" in aux:
+            lb = jnp.mean(aux["lb_loss"])
+            zl = jnp.mean(aux["z_loss"])
+            loss = loss + 0.01 * lb + 1e-3 * zl
+            metrics.update(lb_loss=lb, z_loss=zl)
+        return loss, metrics
+
+    # -- caches -------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> DecodeCache:
+        c = self.cfg
+        L = c.num_layers
+
+        def stack(state):
+            return jax.tree.map(
+                lambda s: jnp.zeros((L,) + s.shape, s.dtype), state)
+
+        shared = None
+        if c.block == "attn":
+            layers = KVCache(
+                k=jnp.zeros((L, batch, max_len, c.num_kv_heads, c.hd),
+                            c.compute_dtype),
+                v=jnp.zeros((L, batch, max_len, c.num_kv_heads, c.hd),
+                            c.compute_dtype),
+                length=jnp.zeros((L,), jnp.int32))
+        elif c.block == "rwkv6":
+            layers = stack(self.rwkv.init_state(batch))
+        else:
+            layers = stack(self.mamba.init_state(batch))
+            if c.hybrid:
+                n_groups = c.num_layers // c.hybrid.shared_every
+                shared = KVCache(
+                    k=jnp.zeros((n_groups, batch, max_len, c.num_kv_heads,
+                                 c.hd), c.compute_dtype),
+                    v=jnp.zeros((n_groups, batch, max_len, c.num_kv_heads,
+                                 c.hd), c.compute_dtype),
+                    length=jnp.zeros((n_groups,), jnp.int32))
+        return DecodeCache(layers=layers, shared=shared,
+                           length=jnp.array(0, jnp.int32))
+
+    # -- decode -------------------------------------------------------------------
+
+    def decode_step(self, params: dict, token: jax.Array, cache: DecodeCache,
+                    shard: Shard = no_shard) -> tuple[jax.Array, DecodeCache]:
+        """token: [B] ids (or [B, D] embeds) -> (logits [B, V], new cache)."""
+        c = self.cfg
+        B = token.shape[0]
+        inputs = token[:, None] if token.ndim == 1 else token[:, None, :]
+        x = self._embed(params, inputs, shard)
+        pos = cache.length
+        new_shared = None
+
+        if c.block == "attn":
+            def step(x, scan_in):
+                lp, kv = scan_in
+                lkv = KVCache(kv.k, kv.v, pos)
+                h, new_kv = self.attn.decode_step(
+                    lp["attn"], rmsnorm(lp["ln1"], x, c.norm_eps), lkv, shard)
+                x = x + h
+                y = rmsnorm(lp["ln2"], x, c.norm_eps)
+                if c.moe:
+                    ym, _ = self._moe_apply(lp["mlp"], y, shard)
+                else:
+                    ym = self.mlp(lp["mlp"], y, shard)
+                return x + ym, KVCache(new_kv.k, new_kv.v,
+                                       jnp.zeros((), jnp.int32))
+            if c.scan_layers:
+                x, new_layers = jax.lax.scan(step, x, (params["layers"],
+                                                       cache.layers))
+            else:
+                x, new_layers = _unrolled_scan(step, x, (params["layers"],
+                                                         cache.layers),
+                                               c.num_layers)
+            new_layers = KVCache(new_layers.k, new_layers.v,
+                                 cache.layers.length + 1)
+        elif c.block == "rwkv6":
+            def step(x, scan_in):
+                lp, st = scan_in
+                tm, new_wkv, new_sh_tm = self.rwkv.time_mix_step(
+                    lp["rwkv"], rmsnorm(lp["ln1"], x, c.norm_eps),
+                    st.wkv, st.shift_tm)
+                x = x + tm
+                cm, new_sh_cm = self.rwkv.channel_mix_step(
+                    lp["rwkv"], rmsnorm(lp["ln2"], x, c.norm_eps), st.shift_cm)
+                return x + cm, ssm.RWKVState(new_wkv, new_sh_tm, new_sh_cm)
+            if c.scan_layers:
+                x, new_layers = jax.lax.scan(step, x, (params["layers"],
+                                                       cache.layers))
+            else:
+                x, new_layers = _unrolled_scan(step, x, (params["layers"],
+                                                         cache.layers),
+                                               c.num_layers)
+        else:
+            def step(x, scan_in):
+                lp, st = scan_in
+                h, new_st = self.mamba.decode_step(
+                    lp["mamba"], rmsnorm(lp["ln"], x, c.norm_eps), st)
+                return x + h, new_st
+
+            if c.hybrid:
+                g = c.hybrid.shared_every
+                n_groups = c.num_layers // g
+                grouped = jax.tree.map(
+                    lambda p: p.reshape((n_groups, g) + p.shape[1:]),
+                    params["layers"])
+                new_layer_states, new_shared_list = [], []
+                for gi in range(n_groups):
+                    gp = jax.tree.map(lambda p: p[gi], grouped)
+                    gs = jax.tree.map(lambda s: s[gi * g:(gi + 1) * g],
+                                      cache.layers)
+                    x, ns = jax.lax.scan(step, x, (gp, gs))
+                    new_layer_states.append(ns)
+                    kv = jax.tree.map(lambda s: s[gi], cache.shared)
+                    lkv = KVCache(kv.k, kv.v, pos)
+                    h, new_kv = self.shared_attn.decode_step(
+                        params["shared"]["attn"],
+                        rmsnorm(params["shared"]["ln1"], x, c.norm_eps),
+                        lkv, shard)
+                    x = x + h
+                    x = x + self.shared_mlp(
+                        params["shared"]["mlp"],
+                        rmsnorm(params["shared"]["ln2"], x, c.norm_eps), shard)
+                    new_shared_list.append((new_kv.k, new_kv.v))
+                new_layers = jax.tree.map(
+                    lambda *s: jnp.concatenate(s), *new_layer_states)
+                new_shared = KVCache(
+                    k=jnp.stack([k for k, _ in new_shared_list]),
+                    v=jnp.stack([v for _, v in new_shared_list]),
+                    length=cache.shared.length + 1)
+            else:
+                x, new_layers = jax.lax.scan(step, x, (params["layers"],
+                                                       cache.layers))
+
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits, DecodeCache(layers=new_layers, shared=new_shared,
+                                   length=cache.length + 1)
+
+    # -- prefill --------------------------------------------------------------
+
+    def prefill(self, params: dict, inputs: jax.Array, max_len: int,
+                shard: Shard = no_shard) -> tuple[jax.Array, DecodeCache]:
+        """Ingest the prompt with full-sequence (chunked-kernel) compute and
+        return (last-position logits, decode cache)."""
+        c = self.cfg
+        B, T = inputs.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        x = self._embed(params, inputs, shard)
+        new_shared = None
+
+        if c.block == "attn":
+            def step(x, lp):
+                h, kv = self.attn.prefill(
+                    lp["attn"], rmsnorm(lp["ln1"], x, c.norm_eps), positions,
+                    max_len, shard)
+                x = x + h
+                y = rmsnorm(lp["ln2"], x, c.norm_eps)
+                if c.moe:
+                    ym, _ = self._moe_apply(lp["mlp"], y, shard)
+                else:
+                    ym = self.mlp(lp["mlp"], y, shard)
+                return x + ym, (kv.k, kv.v)
+            x, (ks, vs) = _maybe_scan(step, x, params["layers"],
+                                      c.scan_layers, c.num_layers)
+            new_layers = KVCache(ks, vs, jnp.full((c.num_layers,), T, jnp.int32))
+        elif c.block == "rwkv6":
+            def step(x, lp):
+                return self._rwkv_layer(lp, x, shard, want_state=True)
+            x, new_layers = _maybe_scan(step, x, params["layers"],
+                                        c.scan_layers, c.num_layers)
+        else:
+            def step(x, lp):
+                return self._mamba_layer(lp, x, shard, want_state=True)
+            if c.hybrid:
+                g = c.hybrid.shared_every
+                n_groups = c.num_layers // g
+                grouped = jax.tree.map(
+                    lambda p: p.reshape((n_groups, g) + p.shape[1:]),
+                    params["layers"])
+                states, shared_kvs = [], []
+                for gi in range(n_groups):
+                    gp = jax.tree.map(lambda p: p[gi], grouped)
+                    x, st = jax.lax.scan(step, x, gp)
+                    states.append(st)
+                    sp = params["shared"]
+                    h, kv = self.shared_attn.prefill(
+                        sp["attn"], rmsnorm(sp["ln1"], x, c.norm_eps),
+                        positions, max_len, shard)
+                    x = x + h
+                    x = x + self.shared_mlp(
+                        sp["mlp"], rmsnorm(sp["ln2"], x, c.norm_eps), shard)
+                    shared_kvs.append((kv.k, kv.v))
+                new_layers = jax.tree.map(lambda *s: jnp.concatenate(s),
+                                          *states)
+                new_shared = KVCache(
+                    k=jnp.stack([k for k, _ in shared_kvs]),
+                    v=jnp.stack([v for _, v in shared_kvs]),
+                    length=jnp.full((n_groups,), T, jnp.int32))
+            else:
+                x, new_layers = _maybe_scan(step, x, params["layers"],
+                                            c.scan_layers, c.num_layers)
+
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, DecodeCache(layers=new_layers, shared=new_shared,
+                                   length=jnp.array(T, jnp.int32))

@@ -1,0 +1,36 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] entries specify
+the transformer backbone only; the frontend provides precomputed embeddings).
+
+These helpers generate deterministic synthetic patch/frame embeddings for
+smoke tests and the matching ShapeDtypeStructs for the dry-run
+``input_specs()``.  A real deployment would swap in a ViT / speech encoder
+producing the same [B, S, d_model] interface.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def patch_embeddings(key: jax.Array, batch: int, seq: int, d_model: int,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """LLaVA-style anyres vision stub: `seq` patch embeddings per sample.
+
+    (The anyres tiling of llava-next determines how many patches exist;
+    here the assigned shape's seq_len already counts them.)
+    """
+    return (jax.random.normal(key, (batch, seq, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def frame_embeddings(key: jax.Array, batch: int, frames: int, d_model: int,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """Speech frontend stub: `frames` acoustic frame embeddings."""
+    return (jax.random.normal(key, (batch, frames, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def embedding_spec(batch: int, seq: int, d_model: int,
+                   dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq, d_model), dtype)

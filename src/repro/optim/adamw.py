@@ -1,0 +1,99 @@
+"""AdamW with decoupled weight decay, global-norm clipping and LR schedule.
+
+Self-contained (no optax dependency); state is a pytree with the same
+structure as params, so the parameter PartitionSpecs apply verbatim to the
+optimizer moments — sharded optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # bf16 moments halve optimizer HBM (8 bytes/param incl. f32 update calc)
+    # — the large-model default at pod scale.
+    moment_dtype: Any = jnp.float32
+    # scan the update over the leading (layer-stack) axis of big leaves so
+    # f32 update temporaries stay one-layer-sized.  Off by default: XLA's
+    # loop double-buffering copies the scanned operands, which costs more
+    # than the fused elementwise chain it replaces (measured in the dry-run).
+    chunk_threshold: int = 1 << 62
+
+    def init(self, params: Any) -> OptState:
+        zeros = lambda p: jax.tree.map(  # noqa: E731
+            lambda x: jnp.zeros(x.shape, self.moment_dtype), p)
+        return OptState(m=zeros(params), v=zeros(params),
+                        step=jnp.zeros((), jnp.int32))
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        decay = self.min_lr_ratio + (1 - self.min_lr_ratio) * cos
+        return self.lr * warm * decay
+
+    def update(self, grads: Any, state: OptState, params: Any
+               ) -> tuple[Any, OptState, dict]:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:                         # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype), m.astype(self.moment_dtype),
+                    v.astype(self.moment_dtype))
+
+        def upd_leaf(g, m, v, p):
+            if p.size > self.chunk_threshold and p.ndim >= 3:
+                def body(_, args):
+                    return None, upd(*args)
+                _, (np_, nm, nv) = jax.lax.scan(body, None, (g, m, v, p))
+                return np_, nm, nv
+            return upd(g, m, v, p)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd_leaf(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_params, OptState(new_m, new_v, step), {
+            "grad_norm": gnorm, "lr": lr}

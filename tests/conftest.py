@@ -1,0 +1,14 @@
+"""Test session setup.
+
+* Point the CSSE disk cache at a per-session temp dir so engine-comparison
+  tests always run fresh searches (and don't pollute the repo cache).
+* NOTE: deliberately NO ``XLA_FLAGS=--xla_force_host_platform_device_count``
+  here — unit/smoke tests must see the single real host device.  Multi-device
+  sharding tests spawn subprocesses that set the flag themselves.
+"""
+
+import os
+import tempfile
+
+os.environ.setdefault("REPRO_CSSE_CACHE",
+                      tempfile.mkdtemp(prefix="repro-csse-test-"))

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs (assignment
+requirement), plus the TNN variant of each family."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.core.tensorized import TNNConfig
+from repro.launch import steps as steps_lib
+from repro.optim.adamw import AdamW
+
+
+def _batch_for(arch, cfg, B=2, T=16):
+    key = jax.random.key(1)
+    if arch.model_kind == "encdec":
+        return {
+            "enc_embeds": jax.random.normal(key, (B, T, cfg.d_model),
+                                            jnp.float32) * 0.02,
+            "dec_inputs": jax.random.randint(key, (B, T), 0, cfg.vocab),
+            "dec_targets": jax.random.randint(key, (B, T), 0, cfg.vocab),
+        }
+    if arch.input_kind == "embeds":
+        inputs = jax.random.normal(key, (B, T, cfg.d_model),
+                                   jnp.float32) * 0.02
+    else:
+        inputs = jax.random.randint(key, (B, T), 0, cfg.vocab)
+    return {"inputs": inputs,
+            "targets": jax.random.randint(key, (B, T), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch_id", cfgbase.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch_id):
+    arch = cfgbase.get(arch_id)
+    model, cfg = steps_lib.build_model(arch, smoke=True)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(arch, cfg)
+
+    # forward: shapes + finite
+    if arch.model_kind == "encdec":
+        logits, _ = model(params, batch["enc_embeds"], batch["dec_inputs"])
+        B, T = batch["dec_inputs"].shape
+    else:
+        logits, _ = model(params, batch["inputs"])
+        B, T = batch["targets"].shape
+    assert logits.shape == (B, T, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # one full train step: loss finite, params update
+    opt = AdamW(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = {"params": params, "opt": opt.init(params)}
+    step_fn = steps_lib.make_train_step(model, opt, lambda x, a: x)
+    new_state, metrics = step_fn(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    deltas = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(deltas)) > 0, "params did not move"
+
+
+@pytest.mark.parametrize("arch_id", ["tinyllama_1_1b", "rwkv6_7b",
+                                     "olmoe_1b_7b", "zamba2_7b"])
+def test_smoke_tnn_variant(arch_id):
+    """The paper's technique must be switch-on-able for every family."""
+    arch = cfgbase.get(arch_id)
+    tnn = TNNConfig(enabled=True, method="tt", rank=4, num_factors=2,
+                    targets=("mlp",))
+    model, cfg = steps_lib.build_model(arch, tnn=tnn, smoke=True)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(arch, cfg)
+    loss, _ = model.loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+    # TNN must shrink the MLP params vs the dense smoke config
+    dense_model, _ = steps_lib.build_model(arch, smoke=True)
+    dense_params = dense_model.init(jax.random.key(0))
+    assert (model.param_count(params)
+            < dense_model.param_count(dense_params))
+
+
+@pytest.mark.parametrize("arch_id", ["tinyllama_1_1b", "rwkv6_7b",
+                                     "zamba2_7b", "qwen3_moe_235b_a22b"])
+def test_smoke_decode_matches_forward(arch_id):
+    arch = cfgbase.get(arch_id)
+    model, cfg = steps_lib.build_model(arch, smoke=True)
+    params = model.init(jax.random.key(0))
+    B, T = 2, 12
+    inputs = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab)
+    logits, _ = model(params, inputs)
+    lg, cache = model.prefill(params, inputs, max_len=T + 4)
+    diff = float(jnp.max(jnp.abs(lg.astype(jnp.float32)
+                                 - logits[:, -1].astype(jnp.float32))))
+    assert diff < 0.15, diff
+    lg2, cache = model.decode_step(params, jnp.argmax(lg, -1), cache)
+    assert lg2.shape == (B, cfg.vocab)
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact published dimensions."""
+    import math
+    checks = {
+        "rwkv6_7b": dict(num_layers=32, d_model=4096, d_ff=14336,
+                         vocab=65536),
+        "qwen3_moe_235b_a22b": dict(num_layers=94, d_model=4096,
+                                    num_heads=64, num_kv_heads=4,
+                                    vocab=151936),
+        "olmoe_1b_7b": dict(num_layers=16, d_model=2048, vocab=50304),
+        "llava_next_34b": dict(num_layers=60, d_model=7168, num_heads=56,
+                               num_kv_heads=8, d_ff=20480, vocab=64000),
+        "internlm2_1_8b": dict(num_layers=24, d_model=2048, num_heads=16,
+                               num_kv_heads=8, d_ff=8192, vocab=92544),
+        "phi4_mini_3_8b": dict(num_layers=32, d_model=3072, num_heads=24,
+                               num_kv_heads=8, d_ff=8192, vocab=200064),
+        "tinyllama_1_1b": dict(num_layers=22, d_model=2048, num_heads=32,
+                               num_kv_heads=4, d_ff=5632, vocab=32000),
+        "qwen2_7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                         num_kv_heads=4, d_ff=18944, vocab=152064,
+                         qkv_bias=True),
+        "zamba2_7b": dict(num_layers=81, d_model=3584, num_heads=32,
+                          num_kv_heads=32, d_ff=14336, vocab=32000,
+                          ssm_state=64),
+    }
+    for arch_id, want in checks.items():
+        cfg = cfgbase.get(arch_id).model()
+        for k, v in want.items():
+            assert getattr(cfg, k) == v, (arch_id, k, getattr(cfg, k), v)
+    # MoE expert counts
+    q3 = cfgbase.get("qwen3_moe_235b_a22b").model()
+    assert q3.moe.num_experts == 128 and q3.moe.top_k == 8
+    assert q3.moe.d_ff_expert == 1536
+    ol = cfgbase.get("olmoe_1b_7b").model()
+    assert ol.moe.num_experts == 64 and ol.moe.top_k == 8
+    sm = cfgbase.get("seamless_m4t_medium").model()
+    assert sm.d_model == 1024 and sm.d_ff == 4096
+    assert sm.vocab >= 256206  # padded for 16-way vocab sharding
+
+
+def test_paper_benchmark_config_registered():
+    """The paper's own ATIS transformer is a runnable --arch config with
+    TNN on by default (Table II row 1)."""
+    arch = cfgbase.get("paper_atis_tt")
+    cfg = arch.model()
+    assert cfg.d_model == 768 and cfg.tnn.enabled and cfg.tnn.method == "tt"
+    model, smoke_cfg = steps_lib.build_model(arch, smoke=True)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(arch, smoke_cfg)
+    loss, _ = model.loss(params, batch)
+    assert bool(jnp.isfinite(loss))

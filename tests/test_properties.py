@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import contraction, csse, factorizations as F, perf_model
+from repro.core.tnetwork import plan_from_tree
+from repro.optim import compression
+
+_dims = st.lists(st.integers(2, 5), min_size=2, max_size=3)
+_methods = st.sampled_from(["tt", "ttm", "tr", "ht", "bt"])
+
+
+def _make(method, out_dims, in_dims, rank):
+    if method in ("ttm", "ht", "bt"):
+        n = min(len(out_dims), len(in_dims))
+        out_dims, in_dims = out_dims[:n], in_dims[:n]
+    return F.make(method, tuple(out_dims), tuple(in_dims), rank)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_methods, _dims, _dims, st.integers(2, 4), st.integers(1, 6))
+def test_any_search_tree_is_correct(method, out_dims, in_dims, rank, batch):
+    """Whatever tree CSSE returns, executing it equals the direct einsum."""
+    fact = _make(method, out_dims, in_dims, rank)
+    net = fact.forward_network(batch_axes=(("b", batch),))
+    res = csse.search(net, csse.SearchOptions(objective="flops",
+                                              num_candidates=2))
+    arrays = [jnp.asarray(np.random.default_rng(i).standard_normal(
+        net.node_shape(i)), jnp.float32) for i in range(net.num_nodes)]
+    got = contraction.execute(res.plan, arrays)
+    import string
+    sym = {a: string.ascii_letters[i] for i, a in enumerate(sorted(net.sizes))}
+    spec = ",".join("".join(sym[a] for a in node) for node in net.nodes)
+    spec += "->" + "".join(sym[a] for a in net.output)
+    want = jnp.einsum(spec, *arrays)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_methods, _dims, _dims, st.integers(2, 4))
+def test_compression_accounting(method, out_dims, in_dims, rank):
+    """num_params equals the sum of core sizes; dense_params = M*N."""
+    fact = _make(method, out_dims, in_dims, rank)
+    assert fact.num_params == sum(
+        math.prod(fact.core_shape(i)) for i in range(fact.num_cores))
+    assert fact.dense_params == fact.M * fact.N
+    assert fact.M == math.prod(fact.out_dims)
+    assert fact.N == math.prod(fact.in_dims)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_methods, _dims, _dims, st.integers(2, 3), st.integers(1, 4))
+def test_search_optimum_no_worse_than_fixed(method, out_dims, in_dims, rank,
+                                            batch):
+    """Stage-1 FLOPs optimum <= the fixed sequence's FLOPs, always."""
+    fact = _make(method, out_dims, in_dims, rank)
+    net = fact.forward_network(batch_axes=(("b", batch),))
+    res = csse.search(net, csse.SearchOptions(objective="flops"))
+    fixed = plan_from_tree(net, fact.fixed_tree(net))
+    assert res.plan.total_flops <= fixed.total_flops
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2048), st.integers(1, 2048), st.integers(1, 2048))
+def test_mxu_utilisation_bounds(m, n, k):
+    u = perf_model.TPU_V5E.mxu_utilisation(m, n, k)
+    assert 0.0 < u <= 1.0
+    # aligned dims achieve exactly 1
+    assert perf_model.TPU_V5E.mxu_utilisation(
+        ((m + 127) // 128) * 128, ((n + 127) // 128) * 128,
+        ((k + 7) // 8) * 8) == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 16))
+def test_int8_quantisation_error_bound(rows, cols):
+    x = jnp.asarray(np.random.default_rng(rows * cols).standard_normal(
+        (rows, cols)), jnp.float32)
+    q, scale = compression.quantize_int8(x)
+    deq = compression.dequantize_int8(q, scale)
+    # symmetric per-tensor int8: error bounded by half a quantisation step
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(scale) * 0.5 + 1e-7
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(1, 5))
+def test_factorize_dim_products(a, b, n):
+    x = a * b * 7
+    factors = F.factorize_dim(x, n)
+    assert len(factors) == n and math.prod(factors) == x
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3))
+def test_plan_peak_memory_nonnegative_monotone(rank, batch):
+    fact = F.tt((4, 4), (4, 4), rank)
+    net = fact.forward_network(batch_axes=(("b", batch),))
+    plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
+    assert plan.peak_intermediate_elems >= 0
+    assert plan.total_read_elems > 0 and plan.total_write_elems > 0
