@@ -51,8 +51,11 @@ class ArchConfig:
     input_kind: str = "tokens"      # tokens | embeds (modality stub)
     sub_quadratic: bool = False     # may run long_500k
     notes: str = ""
+    # backend="pallas" routes layer contractions through the plan compiler
+    # (repro.core.plan_compiler); override per-arch or via train --tnn-backend.
     tnn_default: TNNConfig = TNNConfig(
-        enabled=True, method="tt", rank=64, num_factors=2, targets=("mlp",))
+        enabled=True, method="tt", rank=64, num_factors=2, targets=("mlp",),
+        backend="einsum")
 
     def shape_supported(self, shape: ShapeSpec) -> tuple[bool, str]:
         """(supported, reason-if-skipped) for a dry-run cell."""

@@ -7,9 +7,13 @@ the plan were chosen by ``plan_from_tree`` so consecutive steps feed each
 other without explicit transposes — XLA folds any residual layout change
 into the dot itself (we assert this in the lowering tests).
 
-Perf-critical inner steps can be routed to the Pallas fused-contraction
-kernel via ``use_kernel`` (see ``repro.kernels``); the default einsum path
-is the reference semantics for it.
+Perf-critical plans can be routed to the Pallas fused-contraction kernels
+via ``execute(..., backend="pallas")``: the plan compiler
+(:mod:`repro.core.plan_compiler`) matricizes each step into an MXU-tiled
+GEMM (fusing layout flips into the kernel's VMEM stage) and fuses eligible
+adjacent step pairs into a single ``chain_pallas`` call whose intermediate
+never round-trips HBM.  The default ``backend="einsum"`` path below is the
+reference semantics the compiled path is tested against.
 """
 
 from __future__ import annotations
@@ -45,9 +49,33 @@ def _einsum_spec(step: ContractionStep) -> str:
     return f"{lhs},{rhs}->{out}"
 
 
+def _einsum_step(step: ContractionStep, lhs: jax.Array, rhs: jax.Array,
+                 accum_dtype) -> jax.Array:
+    """One reference step: CPU-safe bf16 handling + f32 accumulation.
+
+    Shared by the einsum backend below and the plan compiler's fallback path
+    so the two can never drift apart.
+    """
+    if _CPU and lhs.dtype == jnp.bfloat16:
+        lhs, rhs = lhs.astype(accum_dtype), rhs.astype(accum_dtype)
+    return jnp.einsum(_einsum_spec(step), lhs, rhs,
+                      preferred_element_type=accum_dtype)
+
+
 def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
-            accum_dtype=jnp.float32, out_dtype=None) -> jax.Array:
-    """Run the plan over concrete arrays (one per network node, in order)."""
+            accum_dtype=jnp.float32, out_dtype=None,
+            backend: str = "einsum", fused_chain: bool = True,
+            interpret: bool | None = None) -> jax.Array:
+    """Run the plan over concrete arrays (one per network node, in order).
+
+    ``backend="einsum"`` lowers each step to ``jnp.einsum`` (reference
+    semantics); ``backend="pallas"`` compiles the plan to Pallas kernel calls
+    (see :mod:`repro.core.plan_compiler`), with ``fused_chain=False``
+    disabling chain fusion there (the ablation CSSE stage-2 models).
+    ``interpret`` forces/disables Pallas interpret mode (default: interpret
+    off-TPU); einsum ignores both knobs.
+    """
+    assert backend in ("einsum", "pallas"), f"unknown backend {backend!r}"
     net = plan.network
     assert len(tensors) == net.num_nodes
     for i, t in enumerate(tensors):
@@ -57,16 +85,19 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
     if out_dtype is None:
         out_dtype = tensors[0].dtype
 
+    if backend == "pallas":
+        from repro.core import plan_compiler
+        compiled = plan_compiler.compile_plan(plan, fuse=fused_chain)
+        return plan_compiler.run(compiled, tensors, accum_dtype=accum_dtype,
+                                 out_dtype=out_dtype, interpret=interpret)
+
     if not plan.steps:                      # single-node network
         out = tensors[0]
     else:
         slots: dict[int, jax.Array] = dict(enumerate(tensors))
         for step in plan.steps:
-            lhs, rhs = slots[step.lhs], slots[step.rhs]
-            if _CPU and lhs.dtype == jnp.bfloat16:
-                lhs, rhs = lhs.astype(accum_dtype), rhs.astype(accum_dtype)
-            res = jnp.einsum(_einsum_spec(step), lhs, rhs,
-                             preferred_element_type=accum_dtype)
+            res = _einsum_step(step, slots[step.lhs], slots[step.rhs],
+                               accum_dtype)
             # Keep intermediates in the working dtype: f32 accumulation
             # within a step, storage dtype between steps (TPU MXU semantics).
             slots[step.out] = res.astype(out_dtype)

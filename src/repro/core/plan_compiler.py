@@ -1,0 +1,390 @@
+"""Plan compiler — lowers a :class:`ContractionPlan` to Pallas kernel calls.
+
+The CSSE search (``repro.core.csse``) picks contraction *sequences* under a
+hardware model that assumes fused tensor shaping: operand layout flips folded
+into the VMEM stage of the GEMM (FETTA's butterfly distribution/reduction
+networks, §V-B) and chain intermediates that never round-trip HBM
+(``fused_chain=True`` in stage 2).  This module is what makes those modeled
+behaviours *real* on the executor side.  The pipeline is:
+
+1. **Matricization** — each :class:`ContractionStep` is analysed into a GEMM
+   ``C[M, N] = A[M, K] @ B[K, N]``: lhs-free axes flatten to M, rhs-free axes
+   to N, contracted axes to K (in lhs order).  When the rhs is naturally laid
+   out ``[N, K]`` the flip is *not* materialised — the step routes to
+   ``matmul_pallas(transpose_rhs=True)``, which transposes the tile in VMEM
+   after the DMA (the butterfly-network analogue).  Axis orders that no
+   reshape can express are fixed with an explicit ``jnp.transpose`` and
+   recorded as ``hbm_transposes`` in the lowering report.
+
+2. **Chain fusion** — adjacent step pairs where the intermediate is consumed
+   exactly once, feeds the next step as its lhs with compatible axis groups,
+   and fits the VMEM budget are fused into a single ``chain_pallas`` call:
+   the ``[bm, H]`` intermediate of ``(X @ A) @ B`` lives in VMEM scratch and
+   never touches HBM.  This realises what CSSE stage-2 models as
+   ``fused_chain=True``.
+
+3. **Fallback** — steps that are not matricizable (batch axes shared by both
+   operands and the output, e.g. BT's block hyperedge; single-operand
+   reductions; repeated axes) lower to the reference ``jnp.einsum``.
+
+Entry points: :func:`compile_plan` produces a :class:`CompiledPlan` whose
+``report()`` summarises the lowering (op mix, fusion hit-rate, transpose
+placement); :func:`run` executes it.  ``contraction.execute(...,
+backend="pallas")`` is the public route.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contraction import _einsum_spec, _einsum_step
+from repro.core.tnetwork import AxisId, ContractionPlan, ContractionStep
+from repro.kernels.fused_contraction import (
+    CHAIN_VMEM_BUDGET_BYTES, chain_pallas, chain_vmem_elems, matmul_pallas,
+)
+
+
+# ---------------------------------------------------------------------------
+# Lowered ops
+# ---------------------------------------------------------------------------
+
+
+def _perm_or_none(src: Sequence[AxisId], dst: Sequence[AxisId]
+                  ) -> tuple[int, ...] | None:
+    """Permutation taking ``src`` axis order to ``dst``; None if identity."""
+    assert sorted(src) == sorted(dst), (src, dst)
+    if tuple(src) == tuple(dst):
+        return None
+    return tuple(src.index(a) for a in dst)
+
+
+@dataclass(frozen=True)
+class Matricization:
+    """How one step collapses to ``C[M, N] = A[M, K] @ B``.
+
+    ``k_axes`` follow lhs order (both operands must flatten K identically).
+    ``lhs_perm`` / ``rhs_perm`` are HBM-level transposes applied before the
+    reshape; ``transpose_rhs`` means the rhs reshapes to ``[N, K]`` and the
+    flip is fused into the kernel's VMEM stage instead.
+    """
+
+    m_axes: tuple[AxisId, ...]
+    n_axes: tuple[AxisId, ...]
+    k_axes: tuple[AxisId, ...]
+    m: int
+    n: int
+    k: int
+    lhs_perm: tuple[int, ...] | None
+    rhs_perm: tuple[int, ...] | None
+    transpose_rhs: bool
+    out_perm: tuple[int, ...] | None    # [M-axes, N-axes] -> step.out_axes
+
+    @property
+    def hbm_transposes(self) -> int:
+        return sum(p is not None
+                   for p in (self.lhs_perm, self.rhs_perm, self.out_perm))
+
+
+@dataclass(frozen=True)
+class GemmOp:
+    """One step lowered to ``matmul_pallas``."""
+
+    step: ContractionStep
+    mat: Matricization
+
+
+@dataclass(frozen=True)
+class ChainOp:
+    """Two steps fused into one ``chain_pallas`` call.
+
+    ``Y = (X @ A) @ B`` with the ``[M, H]`` intermediate VMEM-resident:
+    X is ``first``'s lhs, A its rhs, B ``second``'s rhs.
+    """
+
+    first: ContractionStep
+    second: ContractionStep
+    m_axes: tuple[AxisId, ...]
+    h_axes: tuple[AxisId, ...]          # first's N == second's K
+    n_axes: tuple[AxisId, ...]
+    m: int
+    h: int
+    n: int
+    k: int                              # first's contraction size
+    x_perm: tuple[int, ...] | None
+    a_perm: tuple[int, ...] | None      # rhs of first -> [K, H]
+    b_perm: tuple[int, ...] | None      # rhs of second -> [H, N]
+    out_perm: tuple[int, ...] | None
+
+    @property
+    def hbm_transposes(self) -> int:
+        return sum(p is not None
+                   for p in (self.x_perm, self.a_perm, self.b_perm,
+                             self.out_perm))
+
+
+@dataclass(frozen=True)
+class EinsumOp:
+    """Non-matricizable step kept on the reference einsum path."""
+
+    step: ContractionStep
+    spec: str
+    reason: str
+
+
+LoweredOp = Union[GemmOp, ChainOp, EinsumOp]
+
+
+# ---------------------------------------------------------------------------
+# Step analysis
+# ---------------------------------------------------------------------------
+
+
+def matricize(step: ContractionStep) -> Matricization | str:
+    """Collapse a step to GEMM form, or return the reason it cannot be."""
+    lhs, rhs, out = step.lhs_axes, step.rhs_axes, step.out_axes
+    if len(set(lhs)) != len(lhs) or len(set(rhs)) != len(rhs):
+        return "repeated axis within an operand (trace)"
+    if step.batch_axes:
+        return (f"batch axes {step.batch_axes} on both operands and the "
+                "output (>2D residual)")
+    out_set, rhs_set, lhs_set = set(out), set(rhs), set(lhs)
+    for a in step.contracted_axes:
+        if not (a in lhs_set and a in rhs_set):
+            return f"axis {a!r} reduced on a single operand"
+
+    m_axes = tuple(a for a in lhs if a in out_set)
+    n_axes = tuple(a for a in rhs if a in out_set)
+    k_axes = tuple(a for a in lhs if a not in out_set)   # lhs order
+
+    lhs_perm = _perm_or_none(lhs, m_axes + k_axes)
+    # rhs laid out [N, K]? -> fuse the flip in VMEM (transpose_rhs).
+    if rhs == n_axes + k_axes and k_axes:
+        rhs_perm, transpose_rhs = None, True
+    else:
+        rhs_perm, transpose_rhs = _perm_or_none(rhs, k_axes + n_axes), False
+    out_perm = _perm_or_none(m_axes + n_axes, out)
+
+    sizes = dict(zip(lhs + rhs, step.lhs_shape + step.rhs_shape))
+    prod = lambda axes: math.prod(sizes[a] for a in axes)  # noqa: E731
+    return Matricization(
+        m_axes=m_axes, n_axes=n_axes, k_axes=k_axes,
+        m=prod(m_axes), n=prod(n_axes), k=prod(k_axes),
+        lhs_perm=lhs_perm, rhs_perm=rhs_perm, transpose_rhs=transpose_rhs,
+        out_perm=out_perm)
+
+
+def _consumed_exactly_once(plan: ContractionPlan, slot: int,
+                           consumer: ContractionStep) -> bool:
+    uses = sum((s.lhs == slot) + (s.rhs == slot) for s in plan.steps)
+    return uses == 1 and slot in (consumer.lhs, consumer.rhs)
+
+
+def _try_fuse(plan: ContractionPlan, g1: GemmOp, g2: GemmOp,
+              vmem_budget: int) -> ChainOp | None:
+    """Fuse consecutive GEMMs into ``(X @ A) @ B`` when the intermediate can
+    stay VMEM-resident: consumed once, feeds the next step's lhs as a pure
+    ``[M.., H..]`` reshape, and the operand set fits the budget."""
+    s1, s2 = g1.step, g2.step
+    if s2.lhs != s1.out:
+        return None
+    if not _consumed_exactly_once(plan, s1.out, s2):
+        return None
+    m1, m2 = g1.mat, g2.mat
+    # The intermediate's axes are m_axes1 + n_axes1 (plan_from_tree emits
+    # lhs-major out orders); the second step must consume exactly the n-group
+    # as its K and keep the m-group free, with no reshuffle in between.
+    if m2.lhs_perm is not None:
+        return None
+    if m2.m_axes != m1.m_axes or m2.k_axes != m1.n_axes:
+        return None
+    if m1.out_perm is not None:
+        return None
+    if chain_vmem_elems(m1.m, m1.k, m1.n, m2.n) * 4 >= vmem_budget:
+        return None
+    # chain_pallas takes A as [K, H] and B as [H, N]: re-derive operand perms
+    # without the transpose_rhs option (the chain kernel has no stored-T arg).
+    a_perm = _perm_or_none(s1.rhs_axes, m1.k_axes + m1.n_axes)
+    b_perm = _perm_or_none(s2.rhs_axes, m2.k_axes + m2.n_axes)
+    return ChainOp(
+        first=s1, second=s2,
+        m_axes=m1.m_axes, h_axes=m1.n_axes, n_axes=m2.n_axes,
+        m=m1.m, h=m1.n, n=m2.n, k=m1.k,
+        x_perm=m1.lhs_perm, a_perm=a_perm, b_perm=b_perm,
+        out_perm=m2.out_perm)
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CompiledPlan:
+    """A :class:`ContractionPlan` lowered to kernel dispatches."""
+
+    plan: ContractionPlan
+    ops: tuple[LoweredOp, ...]
+
+    def report(self) -> dict:
+        """Lowering summary — what the compiler actually did with the plan."""
+        gemms = [op for op in self.ops if isinstance(op, GemmOp)]
+        chains = [op for op in self.ops if isinstance(op, ChainOp)]
+        einsums = [op for op in self.ops if isinstance(op, EinsumOp)]
+        num_steps = len(self.plan.steps)
+        fused_steps = 2 * len(chains)
+        return {
+            "num_steps": num_steps,
+            "num_ops": len(self.ops),
+            "num_gemm": len(gemms),
+            "num_chain": len(chains),
+            "num_einsum_fallback": len(einsums),
+            "fused_steps": fused_steps,
+            "fusion_hit_rate": fused_steps / num_steps if num_steps else 0.0,
+            "vmem_transposes": sum(g.mat.transpose_rhs for g in gemms),
+            "hbm_transposes": (sum(g.mat.hbm_transposes for g in gemms)
+                               + sum(c.hbm_transposes for c in chains)),
+            "fallback_reasons": tuple(op.reason for op in einsums),
+        }
+
+    def describe(self) -> str:
+        lines = []
+        for op in self.ops:
+            if isinstance(op, GemmOp):
+                t = "T(vmem)" if op.mat.transpose_rhs else ""
+                lines.append(f"gemm{t} t{op.step.out}: "
+                             f"[{op.mat.m}x{op.mat.k}] @ [{op.mat.k}x{op.mat.n}]")
+            elif isinstance(op, ChainOp):
+                lines.append(f"chain t{op.second.out}: "
+                             f"([{op.m}x{op.k}] @ [{op.k}x{op.h}]) @ "
+                             f"[{op.h}x{op.n}]  (intermediate VMEM-resident)")
+            else:
+                lines.append(f"einsum t{op.step.out}: {op.spec}  "
+                             f"# {op.reason}")
+        r = self.report()
+        lines.append(f"fusion hit-rate {r['fusion_hit_rate']:.0%} "
+                     f"({r['num_chain']} chain, {r['num_gemm']} gemm, "
+                     f"{r['num_einsum_fallback']} einsum)")
+        return "\n".join(lines)
+
+
+def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
+                 vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES) -> CompiledPlan:
+    """Lower every step; then (unless ``fuse=False``, the ablation CSSE
+    stage-2 prices as ``fused_chain=False``) fuse eligible adjacent GEMM
+    pairs.  ``vmem_budget`` may only tighten fusion: ``chain_pallas`` itself
+    asserts against :data:`CHAIN_VMEM_BUDGET_BYTES`, so larger values are
+    clamped rather than compiling chains the kernel would reject."""
+    vmem_budget = min(vmem_budget, CHAIN_VMEM_BUDGET_BYTES)
+    lowered: list[LoweredOp] = []
+    for step in plan.steps:
+        mat = matricize(step)
+        if isinstance(mat, str):
+            lowered.append(EinsumOp(step=step, spec=_einsum_spec(step),
+                                    reason=mat))
+        else:
+            lowered.append(GemmOp(step=step, mat=mat))
+    if not fuse:
+        return CompiledPlan(plan=plan, ops=tuple(lowered))
+
+    fused: list[LoweredOp] = []
+    i = 0
+    while i < len(lowered):
+        a = lowered[i]
+        if (i + 1 < len(lowered) and isinstance(a, GemmOp)
+                and isinstance(lowered[i + 1], GemmOp)):
+            chain = _try_fuse(plan, a, lowered[i + 1], vmem_budget)
+            if chain is not None:
+                fused.append(chain)
+                i += 2
+                continue
+        fused.append(a)
+        i += 1
+    return CompiledPlan(plan=plan, ops=tuple(fused))
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def _as_2d(x: jax.Array, perm: tuple[int, ...] | None,
+           rows: int, cols: int) -> jax.Array:
+    if perm is not None:
+        x = jnp.transpose(x, perm)
+    return x.reshape(rows, cols)
+
+
+def _op_reads(op: LoweredOp) -> tuple[int, ...]:
+    if isinstance(op, ChainOp):
+        return (op.first.lhs, op.first.rhs, op.second.rhs)
+    return (op.step.lhs, op.step.rhs)
+
+
+def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
+        accum_dtype=jnp.float32, out_dtype=None,
+        interpret: bool | None = None) -> jax.Array:
+    """Execute a compiled plan; semantics match ``contraction.execute``:
+    f32 accumulation within a step, storage dtype between steps."""
+    plan = compiled.plan
+    net = plan.network
+    if out_dtype is None:
+        out_dtype = tensors[0].dtype
+    assert accum_dtype == jnp.float32, (
+        "Pallas kernels accumulate in f32; use backend='einsum' for other "
+        "accumulator dtypes")
+
+    if not plan.steps:
+        return tensors[0].astype(out_dtype)
+
+    slots: dict[int, jax.Array] = dict(enumerate(tensors))
+    sizes = net.sizes
+    # Free operands after their last read (same liveness the einsum path
+    # keeps) so the compiled backend's peak memory matches the reference.
+    last_use: dict[int, int] = {}
+    for t, op in enumerate(compiled.ops):
+        for slot in _op_reads(op):
+            last_use[slot] = t
+    for t, op in enumerate(compiled.ops):
+        if isinstance(op, EinsumOp):
+            res = _einsum_step(op.step, slots[op.step.lhs],
+                               slots[op.step.rhs], accum_dtype)
+            out_slot = op.step.out
+        elif isinstance(op, GemmOp):
+            mat = op.mat
+            x = _as_2d(slots[op.step.lhs], mat.lhs_perm, mat.m, mat.k)
+            if mat.transpose_rhs:
+                w = _as_2d(slots[op.step.rhs], mat.rhs_perm, mat.n, mat.k)
+            else:
+                w = _as_2d(slots[op.step.rhs], mat.rhs_perm, mat.k, mat.n)
+            res = matmul_pallas(x, w, transpose_rhs=mat.transpose_rhs,
+                                out_dtype=out_dtype, interpret=interpret)
+            res = res.reshape(tuple(sizes[a] for a in mat.m_axes + mat.n_axes))
+            if mat.out_perm is not None:
+                res = jnp.transpose(res, mat.out_perm)
+            out_slot = op.step.out
+        else:                            # ChainOp
+            x = _as_2d(slots[op.first.lhs], op.x_perm, op.m, op.k)
+            a = _as_2d(slots[op.first.rhs], op.a_perm, op.k, op.h)
+            b = _as_2d(slots[op.second.rhs], op.b_perm, op.h, op.n)
+            res = chain_pallas(x, a, b, out_dtype=out_dtype,
+                               interpret=interpret)
+            res = res.reshape(tuple(sizes[ax] for ax in op.m_axes + op.n_axes))
+            if op.out_perm is not None:
+                res = jnp.transpose(res, op.out_perm)
+            out_slot = op.second.out
+        slots[out_slot] = res.astype(out_dtype)
+        for slot in _op_reads(op):
+            if slot != out_slot and last_use[slot] == t and slot in slots:
+                del slots[slot]
+
+    out = slots[plan.steps[-1].out]
+    last_axes = plan.steps[-1].out_axes
+    if last_axes != net.output:
+        out = jnp.transpose(out, tuple(last_axes.index(a)
+                                       for a in net.output))
+    return out.astype(out_dtype)

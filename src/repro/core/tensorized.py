@@ -50,6 +50,7 @@ class TNNConfig:
     objective: str = "edp"                # CSSE stage-2 metric
     fused_chain: bool = True              # model VMEM-resident chaining
     num_blocks: int = 2                   # BT only
+    backend: str = "einsum"               # contraction executor: einsum|pallas
 
     def search_options(self) -> csse.SearchOptions:
         return csse.SearchOptions(objective=self.objective,
@@ -194,6 +195,7 @@ class TensorizedLinear:
     opts: csse.SearchOptions = csse.SearchOptions()
     param_dtype: jnp.dtype = jnp.float32
     compute_dtype: jnp.dtype = jnp.bfloat16
+    backend: str = "einsum"              # plan executor: einsum|pallas
 
     # -- params -------------------------------------------------------------
 
@@ -214,7 +216,9 @@ class TensorizedLinear:
         net = self.fact.weight_network()
         res = csse.search(net, self.opts)
         w = contraction.execute(res.plan, [c.astype(jnp.float32)
-                                           for c in params["cores"]])
+                                           for c in params["cores"]],
+                                backend=self.backend,
+                                fused_chain=self.opts.fused_chain)
         return w.reshape(self.fact.M, self.fact.N)
 
     # -- forward ------------------------------------------------------------
@@ -227,10 +231,12 @@ class TensorizedLinear:
         xt = xt.astype(self.compute_dtype)
         cores = tuple(c.astype(self.compute_dtype) for c in params["cores"])
         if self.phase_paths:
-            y = _tnn_apply(self.fact, self.opts, xt, *cores)
+            y = _tnn_apply(self.fact, self.opts, self.backend, xt, *cores)
         else:
             fp, _, _ = _plans(self.fact, batch, self.opts)
-            y = contraction.execute(fp.plan, [xt, *cores])
+            y = contraction.execute(fp.plan, [xt, *cores],
+                                    backend=self.backend,
+                                    fused_chain=self.opts.fused_chain)
         y = y.reshape(tuple(lead) + (self.fact.M,))
         if self.use_bias:
             y = y + params["bias"].astype(self.compute_dtype)
@@ -238,37 +244,46 @@ class TensorizedLinear:
 
 
 # custom_vjp core: functional over (x, *cores) so jax sees the cores as
-# differentiable leaves.  fact/opts are static (nondiff) arguments.
+# differentiable leaves.  fact/opts/backend are static (nondiff) arguments;
+# backend routes every phase plan (FP here, BP/WG in the bwd rule) through
+# the einsum reference or the Pallas plan compiler.
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _tnn_apply(fact: Factorization, opts: csse.SearchOptions,
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _tnn_apply(fact: Factorization, opts: csse.SearchOptions, backend: str,
                x: jax.Array, *cores: jax.Array) -> jax.Array:
     fp, _, _ = _plans(fact, x.shape[0], opts)
-    return contraction.execute(fp.plan, [x, *cores])
+    return contraction.execute(fp.plan, [x, *cores], backend=backend,
+                               fused_chain=opts.fused_chain)
 
 
-def _tnn_fwd(fact, opts, x, *cores):
-    y = _tnn_apply(fact, opts, x, *cores)
+def _tnn_fwd(fact, opts, backend, x, *cores):
+    y = _tnn_apply(fact, opts, backend, x, *cores)
     return y, (x, cores)
 
 
-def _tnn_bwd(fact, opts, res, dy):
+def _tnn_bwd(fact, opts, backend, res, dy):
     x, cores = res
     batch = x.shape[0]
     _, bp, (wg_kind, dw_res, wg) = _plans(fact, batch, opts)
     dy = dy.astype(x.dtype)
-    dx = contraction.execute(bp.plan, [dy, *cores])
+    dx = contraction.execute(bp.plan, [dy, *cores], backend=backend,
+                             fused_chain=opts.fused_chain)
     dcores = []
     if wg_kind == "shared":
-        dw = contraction.execute(dw_res.plan, [x, dy])
+        dw = contraction.execute(dw_res.plan, [x, dy], backend=backend,
+                                 fused_chain=opts.fused_chain)
         for i, w in enumerate(wg):
             others = tuple(c for j, c in enumerate(cores) if j != i)
-            dcores.append(contraction.execute(w.plan, [dw, *others]))
+            dcores.append(contraction.execute(w.plan, [dw, *others],
+                                              backend=backend,
+                                              fused_chain=opts.fused_chain))
     else:
         for i, w in enumerate(wg):
             others = tuple(c for j, c in enumerate(cores) if j != i)
-            dcores.append(contraction.execute(w.plan, [x, dy, *others]))
+            dcores.append(contraction.execute(w.plan, [x, dy, *others],
+                                              backend=backend,
+                                              fused_chain=opts.fused_chain))
     return (dx, *dcores)
 
 
@@ -292,4 +307,5 @@ def make_tensorized_linear(out_features: int, in_features: int,
                             phase_paths=tnn.phase_paths,
                             opts=tnn.search_options(),
                             param_dtype=param_dtype,
-                            compute_dtype=compute_dtype)
+                            compute_dtype=compute_dtype,
+                            backend=tnn.backend)

@@ -1,0 +1,13 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-compat was dropped on the 0.4.x line we pin, where only the ``TPU``-
+prefixed name exists).  Every kernel module imports the class from here so
+the repo runs on either side of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -31,7 +31,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 INTERPRET = jax.default_backend() != "tpu"
+
+# Conservative VMEM budget for the chain kernel's resident operand set; the
+# plan compiler (repro.core.plan_compiler) consults the same numbers when
+# deciding whether an adjacent step pair may fuse.
+CHAIN_VMEM_BUDGET_BYTES = 100 * 2 ** 20
+
+
+def chain_vmem_elems(m: int, k: int, h: int, n: int,
+                     block_m: int = 128, block_n: int = 128) -> int:
+    """f32 elements resident in VMEM for one ``chain_pallas`` grid cell."""
+    bm, bn = min(block_m, m), min(block_n, n)
+    return bm * k + k * h + h * bn + bm * h + bm * bn
 
 
 # ---------------------------------------------------------------------------
@@ -94,7 +108,7 @@ def matmul_pallas(x: jax.Array, w: jax.Array, *, transpose_rhs: bool = False,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)
@@ -134,8 +148,8 @@ def chain_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
     interpret = INTERPRET if interpret is None else interpret
 
     bm, bn = min(block_m, m), min(block_n, n)
-    vmem_elems = (bm * k + k * h + h * bn + bm * h + bm * bn)
-    assert vmem_elems * 4 < 100 * 2 ** 20, (
+    vmem_elems = chain_vmem_elems(m, k, h, n, block_m, block_n)
+    assert vmem_elems * 4 < CHAIN_VMEM_BUDGET_BYTES, (
         f"chain operands exceed VMEM budget: {vmem_elems * 4} bytes")
 
     mp, np_ = (-m % bm), (-n % bn)
@@ -156,7 +170,7 @@ def chain_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, h), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, a, b)

@@ -35,9 +35,12 @@ from repro.optim.adamw import AdamW
 def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           global_batch: int, seq_len: int, lr: float, ckpt_dir: str | None,
           ckpt_every: int, microbatches: int, production_mesh: bool,
-          resume: bool = True, log_every: int = 10) -> dict:
+          resume: bool = True, log_every: int = 10,
+          tnn_backend: str | None = None) -> dict:
     arch = cfgbase.get(arch_id)
     tnn_cfg = arch.tnn_default if tnn else None
+    if tnn_cfg is not None and tnn_backend is not None:
+        tnn_cfg = dataclasses.replace(tnn_cfg, backend=tnn_backend)
     model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=smoke)
     mesh = (make_production_mesh() if production_mesh else make_host_mesh())
     shard = sharding.make_sharder(mesh)
@@ -108,6 +111,10 @@ def main() -> None:
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--tnn", action="store_true",
                     help="enable the paper's tensorized layers")
+    ap.add_argument("--tnn-backend", choices=["einsum", "pallas"],
+                    default=None,
+                    help="contraction executor for tensorized layers "
+                         "(default: the arch config's TNNConfig.backend)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -117,6 +124,9 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true")
     args = ap.parse_args()
+    if args.tnn_backend is not None and not args.tnn:
+        ap.error("--tnn-backend requires --tnn (no tensorized layers to "
+                 "route without it)")
 
     def run(start_step: int) -> int:
         out = train(args.arch, smoke=args.smoke, tnn=args.tnn,
@@ -124,7 +134,8 @@ def main() -> None:
                     seq_len=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
                     ckpt_every=args.ckpt_every,
                     microbatches=args.microbatches,
-                    production_mesh=args.production_mesh)
+                    production_mesh=args.production_mesh,
+                    tnn_backend=args.tnn_backend)
         print(f"[train] done: final loss {out['final_loss']:.4f} "
               f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")
         return args.steps

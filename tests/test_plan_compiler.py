@@ -1,0 +1,176 @@
+"""Plan-compiler parity and lowering tests (interpret mode on CPU).
+
+The compiled path (``contraction.execute(..., backend="pallas")``) must
+match the einsum reference within dtype tolerance on the FP/BP/WG networks
+of every factorization family, and the lowering report must show the
+structural claims: chain fusion on TT chains, VMEM-fused transposes, and
+einsum fallback on hyperedge (BT) steps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import contraction, csse, factorizations as F, plan_compiler
+from repro.core.tensorized import (
+    TensorizedLinear, _bp_network, _wg_network,
+)
+from repro.core.tnetwork import plan_from_tree
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+_OPTS = csse.SearchOptions(fused_chain=True)
+
+
+def _facts():
+    return {
+        "tt": F.tt((4, 4, 4), (4, 4, 4), 6),
+        "ttm": F.ttm((4, 4, 4), (4, 4, 4), 6),
+        "tr": F.tr((4, 4), (4, 4), 5),
+    }
+
+
+def _random_inputs(net, dtype, seed=0):
+    return [jax.random.normal(jax.random.key(seed + i), net.node_shape(i),
+                              dtype)
+            for i in range(net.num_nodes)]
+
+
+def _assert_parity(plan, arrays, dtype):
+    want = contraction.execute(plan, arrays)
+    got = contraction.execute(plan, arrays, backend="pallas")
+    assert got.shape == want.shape and got.dtype == want.dtype
+    tol = 1e-4 if dtype == F32 else 4e-2
+    scale = max(float(np.abs(np.asarray(want, np.float32)).max()), 1e-6)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * scale)
+
+
+@pytest.mark.parametrize("method", ["tt", "ttm", "tr"])
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_forward_parity(method, dtype):
+    fact = _facts()[method]
+    net = fact.forward_network(batch_axes=(("b", 16),))
+    plan = csse.search(net, _OPTS).plan
+    _assert_parity(plan, _random_inputs(net, dtype), dtype)
+
+
+@pytest.mark.parametrize("method", ["tt", "ttm", "tr"])
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_bp_parity(method, dtype):
+    fact = _facts()[method]
+    net = _bp_network(fact, batch=16)
+    plan = csse.search(net, _OPTS).plan
+    _assert_parity(plan, _random_inputs(net, dtype, seed=7), dtype)
+
+
+@pytest.mark.parametrize("method", ["tt", "ttm", "tr"])
+@pytest.mark.parametrize("core_idx", [0, 1])
+def test_wg_parity(method, core_idx):
+    fact = _facts()[method]
+    net = _wg_network(fact, batch=16, core_idx=core_idx)
+    plan = csse.search(net, _OPTS).plan
+    _assert_parity(plan, _random_inputs(net, F32, seed=3), F32)
+
+
+def test_tt_chain_fuses_into_chain_pallas():
+    """A 2-core TT forward plan must lower to a single chain_pallas call."""
+    fact = F.tt((16,), (16,), 8)
+    net = fact.forward_network(batch_axes=(("b", 64),))
+    plan = csse.search(net, _OPTS).plan
+    compiled = plan_compiler.compile_plan(plan)
+    rep = compiled.report()
+    assert rep["num_chain"] >= 1, compiled.describe()
+    assert rep["fused_steps"] == 2 * rep["num_chain"]
+    _assert_parity(plan, _random_inputs(net, F32), F32)
+
+
+def test_left_deep_tt_chain_fusion_and_parity():
+    """The prior-work left-deep TT chain fuses at least one adjacent pair."""
+    fact = F.tt((8, 8), (8, 8), 8)
+    net = fact.forward_network(batch_axes=(("b", 32),))
+    plan = plan_from_tree(net, fact.fixed_tree(net))
+    compiled = plan_compiler.compile_plan(plan)
+    rep = compiled.report()
+    assert rep["num_chain"] >= 1, compiled.describe()
+    assert rep["num_ops"] == rep["num_steps"] - rep["num_chain"]
+    _assert_parity(plan, _random_inputs(net, F32), F32)
+
+
+def test_fused_chain_ablation():
+    """fused_chain=False must disable chain fusion but keep parity —
+    the ablation CSSE stage-2 prices must be real on the pallas backend."""
+    fact = F.tt((16,), (16,), 8)
+    net = fact.forward_network(batch_axes=(("b", 64),))
+    plan = csse.search(net, _OPTS).plan
+    assert plan_compiler.compile_plan(plan).report()["num_chain"] >= 1
+    rep = plan_compiler.compile_plan(plan, fuse=False).report()
+    assert rep["num_chain"] == 0 and rep["num_ops"] == rep["num_steps"]
+    arrays = _random_inputs(net, F32)
+    want = contraction.execute(plan, arrays)
+    got = contraction.execute(plan, arrays, backend="pallas",
+                              fused_chain=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_fused_transpose_occurs():
+    """Stored-transposed operands route through transpose_rhs (VMEM flip),
+    not a standalone HBM transpose, on at least one TT step."""
+    fact = F.tt((8, 8), (8, 8), 8)
+    net = fact.forward_network(batch_axes=(("b", 32),))
+    plan = plan_from_tree(net, fact.fixed_tree(net))
+    rep = plan_compiler.compile_plan(plan).report()
+    assert rep["vmem_transposes"] >= 1
+
+
+def test_bt_hyperedge_falls_back_to_einsum():
+    """BT's block axis is a hyperedge -> batch axes on both operands; those
+    steps must fall back to einsum and still match the reference."""
+    fact = F.bt((4, 4), (4, 4), 4, num_blocks=2)
+    net = fact.forward_network(batch_axes=(("b", 8),))
+    plan = csse.search(net, _OPTS).plan
+    rep = plan_compiler.compile_plan(plan).report()
+    assert rep["num_einsum_fallback"] >= 1, rep
+    _assert_parity(plan, _random_inputs(net, F32), F32)
+
+
+def test_weight_reconstruction_parity():
+    """Cores-only (no batch) networks compile and match: TT weight net."""
+    fact = _facts()["tt"]
+    net = fact.weight_network()
+    plan = csse.search(net, _OPTS).plan
+    _assert_parity(plan, _random_inputs(net, F32, seed=11), F32)
+
+
+@pytest.mark.parametrize("method", ["tt", "tr"])
+def test_layer_grad_parity(method):
+    """TensorizedLinear forward + FP/BP/WG grads match across backends."""
+    fact = _facts()[method]
+    ref_layer = TensorizedLinear(fact=fact, opts=_OPTS,
+                                 compute_dtype=F32, backend="einsum")
+    pal_layer = TensorizedLinear(fact=fact, opts=_OPTS,
+                                 compute_dtype=F32, backend="pallas")
+    params = ref_layer.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (8, fact.N), F32)
+
+    def loss(layer, params, x):
+        return jnp.sum(layer(params, x) ** 2)
+
+    want, want_g = jax.value_and_grad(lambda p: loss(ref_layer, p, x))(params)
+    got, got_g = jax.value_and_grad(lambda p: loss(pal_layer, p, x))(params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    for w, g in zip(jax.tree.leaves(want_g), jax.tree.leaves(got_g)):
+        scale = max(float(np.abs(np.asarray(w)).max()), 1e-6)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_execute_rejects_unknown_backend():
+    fact = _facts()["tt"]
+    net = fact.weight_network()
+    plan = csse.search(net, _OPTS).plan
+    with pytest.raises(AssertionError):
+        contraction.execute(plan, _random_inputs(net, F32), backend="mxla")

@@ -5,7 +5,10 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import contraction, csse, factorizations as F, perf_model
 from repro.core.tnetwork import plan_from_tree
