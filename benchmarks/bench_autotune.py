@@ -1,0 +1,102 @@
+"""Autotuner benchmark: the measure→model loop on a paper workload.
+
+Three claims, checked on every run (CPU interpret mode in CI):
+
+* **cold tune** — a fresh cache tunes every lowered step shape of the
+  ATIS-TT FP plan (measured > 0);
+* **warm tune** — a second tuner over the same cache re-measures nothing
+  (the content-addressed disk cache is a 100% hit), and the warm search is
+  orders of magnitude faster than the cold one;
+* **reranking bites** — ``objective="measured"`` picks a different stage-2
+  winner than the analytic default, or at least one op gets a non-default
+  tile config (on some backends the analytic and measured orders agree;
+  the tile sweep still has to have had an effect).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from repro.core import autotune, csse
+
+from benchmarks.workloads import paper_workloads
+
+
+def _atis():
+    return next(w for w in paper_workloads() if w.name == "ATIS-TT")
+
+
+def run(print_fn=print, cache_dir: str | None = None) -> list[dict]:
+    # A fresh cache dir by default so "cold" is genuinely cold even when
+    # the process (or a previous CI step) already tuned these shapes.
+    cache_dir = cache_dir or tempfile.mkdtemp(prefix="repro-autotune-bench-")
+    wl = _atis()
+    net = wl.fact.forward_network(batch_axes=(("b", wl.tokens),))
+    m_opts = csse.SearchOptions(objective="measured", fused_chain=True)
+    a_opts = csse.SearchOptions(objective="latency", fused_chain=True)
+
+    cold = autotune.Tuner(cache_dir=cache_dir)
+    csse.clear_memo()
+    t0 = time.perf_counter()
+    measured = csse.search(net, m_opts, tuner=cold)
+    cold_s = time.perf_counter() - t0
+    analytic = csse.search(net, a_opts)
+
+    warm = autotune.Tuner(cache_dir=cache_dir)
+    csse.clear_memo()
+    t0 = time.perf_counter()
+    measured2 = csse.search(net, m_opts, tuner=warm)
+    warm_s = time.perf_counter() - t0
+
+    compiled, op_rows = autotune.compare_plan(cold, measured.plan)
+    rep = compiled.report()
+    lookups = sum(warm.stats.values())
+    rows = [{
+        "name": f"autotune/{wl.name}-cold",
+        "wall_s": cold_s,
+        "fusion_hit_rate": rep["fusion_hit_rate"],
+        "shapes_measured": cold.stats["measured"],
+        "shapes_skipped": cold.stats["skipped"],
+        "winner_changed": measured.tree != analytic.tree,
+        "nondefault_tiles": rep["nondefault_tiles"],
+    }, {
+        "name": f"autotune/{wl.name}-warm",
+        "wall_s": warm_s,
+        "fusion_hit_rate": rep["fusion_hit_rate"],
+        "shapes_measured": warm.stats["measured"],
+        "cache_hit_rate": ((warm.stats["disk_hits"]
+                            + warm.stats["memo_hits"]) / lookups
+                           if lookups else 1.0),
+        "same_winner_as_cold": measured2.tree == measured.tree,
+    }]
+    print_fn(f"{wl.name}: cold tune {cold_s:.2f}s "
+             f"({cold.stats['measured']} shapes), warm {warm_s:.4f}s "
+             f"({warm.stats['measured']} re-measured)")
+    print_fn(f"winner changed by measurement: {rows[0]['winner_changed']}, "
+             f"non-default tiles: {rows[0]['nondefault_tiles']}, "
+             f"ops: {len(op_rows)}")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    failures = []
+    cold = next(r for r in rows if r["name"].endswith("-cold"))
+    warm = next(r for r in rows if r["name"].endswith("-warm"))
+    if cold["shapes_measured"] == 0:
+        failures.append("cold tune measured nothing")
+    if warm["shapes_measured"] != 0:
+        failures.append(
+            f"warm tune re-measured {warm['shapes_measured']} shapes "
+            "(disk cache miss)")
+    if not warm["same_winner_as_cold"]:
+        failures.append("warm rerank disagrees with cold (cache unstable)")
+    if not (cold["winner_changed"] or cold["nondefault_tiles"] > 0):
+        failures.append("measured objective neither changed the stage-2 "
+                        "winner nor any tile config")
+    return failures
+
+
+if __name__ == "__main__":
+    failures = validate(run())
+    print("\nclaim checks:", "ALL PASS" if not failures else failures)

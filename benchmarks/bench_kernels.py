@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import perf_model
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def _time(fn, *args, iters=5) -> float:

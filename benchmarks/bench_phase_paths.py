@@ -4,7 +4,7 @@ phases.  Modeled FLOPs and latency per workload."""
 
 from __future__ import annotations
 
-from repro.core import csse, perf_model
+from repro.core import csse
 from repro.core.tensorized import _bp_network, _wg_network, _plans
 
 from benchmarks.workloads import paper_workloads

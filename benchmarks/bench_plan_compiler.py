@@ -11,6 +11,8 @@ and how many steps fell back to einsum (hyperedges / batch residuals).
 
 from __future__ import annotations
 
+import time
+
 from repro.core import csse, plan_compiler
 from repro.core.tensorized import _bp_network
 from repro.core.tnetwork import plan_from_tree
@@ -33,9 +35,12 @@ def run(print_fn=print) -> list[dict]:
     rows = []
     for wl in paper_workloads():
         for phase, plan in _plans(wl):
+            t0 = time.perf_counter()
             rep = plan_compiler.compile_plan(plan).report()
+            compile_s = time.perf_counter() - t0
             rows.append({
                 "workload": wl.name, "phase": phase,
+                "compile_s": compile_s,
                 "steps": rep["num_steps"], "ops": rep["num_ops"],
                 "gemm": rep["num_gemm"], "chain": rep["num_chain"],
                 "einsum": rep["num_einsum_fallback"],

@@ -1,72 +1,173 @@
 """Benchmark entry point — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV per benchmark row plus the claim
-checks each module asserts.  ``python -m benchmarks.run`` is the command
-recorded to bench_output.txt.
+Every benchmark module's rows normalise to the shared machine-readable
+schema (``benchmarks/schema.py``: name, wall_s, fusion_hit_rate, device,
+git_sha, metrics); ``--json-dir`` writes one ``BENCH_<module>.json`` per
+module and ``--baseline`` gates wall_s regressions against a checked-in
+snapshot.  ``--smoke`` runs only the CPU-cheap modules (plan_compiler +
+autotune) — that is CI's bench-smoke job:
+
+  PYTHONPATH=src python -m benchmarks.run --smoke --json-dir bench-out \\
+      --baseline benchmarks/baselines/bench_smoke_baseline.json
+
+``python -m benchmarks.run`` (no flags) runs the full suite and prints the
+records plus each module's paper-claim checks.
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 
-def main() -> None:
-    from benchmarks import (bench_compression, bench_csse, bench_dataflow,
-                            bench_kernels, bench_phase_paths,
-                            bench_tnn_vs_dense)
+from benchmarks import schema
+
+
+# ---------------------------------------------------------------------------
+# Row -> schema.record adapters (one per module)
+# ---------------------------------------------------------------------------
+
+
+def _csse_records(rows):
+    return [schema.make_record(
+        f"csse/{r['workload']}/{r['strategy']}", r["latency_us"] * 1e-6,
+        flops_red=r["flops_red"], mem_red=r["mem_red"]) for r in rows]
+
+
+def _tnn_vs_dense_records(rows):
+    return [schema.make_record(
+        f"tnn_vs_dense/{r['workload']}", r["tnn_lat_us"] * 1e-6,
+        speedup=r["speedup"], energy_red=r["energy_red"]) for r in rows]
+
+
+def _compression_records(rows):
+    return [schema.make_record(
+        f"compression/{r['workload']}", 0.0, ratio=r["ratio"])
+        for r in rows]
+
+
+def _phase_paths_records(rows):
+    return [schema.make_record(
+        f"phase_paths/{r['workload']}", r["searched_us"] * 1e-6,
+        speedup_vs_reuse=r["speedup"]) for r in rows]
+
+
+def _dataflow_records(rows):
+    return [schema.make_record(
+        f"dataflow/{r['workload']}", 0.0, bytes_red=r["bytes_red"])
+        for r in rows]
+
+
+def _kernels_records(rows):
+    return [schema.make_record(
+        f"kernel/{r['name']}", r["us_per_call"] * 1e-6, derived=r["derived"])
+        for r in rows]
+
+
+def _plan_compiler_records(rows):
+    return [schema.make_record(
+        f"plan_compiler/{r['workload']}/{r['phase']}", r["compile_s"],
+        fusion_hit_rate=r["fusion_rate"], steps=r["steps"], ops=r["ops"],
+        gemm=r["gemm"], chain=r["chain"], einsum=r["einsum"],
+        vmem_transposes=r["vmem_t"], hbm_transposes=r["hbm_t"])
+        for r in rows]
+
+
+def _autotune_records(rows):
+    return [schema.make_record(
+        r["name"], r["wall_s"], fusion_hit_rate=r["fusion_hit_rate"],
+        **{k: v for k, v in r.items()
+           if k not in ("name", "wall_s", "fusion_hit_rate")})
+        for r in rows]
+
+
+def _suite(smoke: bool):
+    """(title, module_name, records_adapter) per benchmark module.
+
+    Modeled-cost modules (csse, tnn_vs_dense, ...) are skipped under
+    ``--smoke``: they are deterministic model evaluations the tier-1 tests
+    already cover, and the smoke job gates *wall-clock* behaviour."""
+    suite = [
+        ("§III plan compiler lowering (fusion / transpose placement)",
+         "bench_plan_compiler", _plan_compiler_records),
+        ("§IV+§VI-C measured autotuning (cold/warm tune + rerank)",
+         "bench_autotune", _autotune_records),
+    ]
+    if not smoke:
+        suite = [
+            ("Fig.13 — CSSE vs restricted search vs fixed sequences",
+             "bench_csse", _csse_records),
+            ("Fig.14 — tensorized vs dense training (modeled)",
+             "bench_tnn_vs_dense", _tnn_vs_dense_records),
+            ("Table II — compression ratios",
+             "bench_compression", _compression_records),
+            ("§IV training-phase-specific sequences (FP/BP/WG search)",
+             "bench_phase_paths", _phase_paths_records),
+            ("§V-B dataflow flexibility — VMEM-resident chaining",
+             "bench_dataflow", _dataflow_records),
+            ("Kernel micro-benchmarks",
+             "bench_kernels", _kernels_records),
+        ] + suite
+    return suite
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CPU-cheap subset (plan_compiler + autotune) — "
+                         "CI's bench-smoke job")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<module>.json files here")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (all modules merged) to gate "
+                         "wall_s regressions against")
+    ap.add_argument("--gate", type=float, default=1.5,
+                    help="fail when wall_s exceeds gate x baseline "
+                         "(default 1.5)")
+    ap.add_argument("--write-baseline", default=None,
+                    help="write all records (merged) as a new baseline "
+                         "JSON — how benchmarks/baselines/*.json are "
+                         "refreshed")
+    args = ap.parse_args(argv)
+
+    import importlib
 
     all_failures: list[str] = []
-    csv_lines: list[str] = ["name,us_per_call,derived"]
+    all_records: list[dict] = []
 
-    def section(title):
+    for title, mod_name, adapt in _suite(args.smoke):
         print(f"\n{'=' * 70}\n{title}\n{'=' * 70}")
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        rows = mod.run()
+        all_failures += [f"{mod_name}: {f}" for f in mod.validate(rows)]
+        records = adapt(rows)
+        all_records += records
+        if args.json_dir:
+            path = os.path.join(args.json_dir,
+                                f"BENCH_{mod_name.removeprefix('bench_')}"
+                                ".json")
+            schema.write_json(path, records)
+            print(f"wrote {path} ({len(records)} records)")
 
-    section("Fig.13 — CSSE vs restricted search vs fixed sequences")
-    rows = bench_csse.run()
-    all_failures += bench_csse.validate(rows)
-    for r in rows:
-        csv_lines.append(
-            f"csse/{r['workload']}/{r['strategy']},{r['latency_us']:.2f},"
-            f"flops_red={r['flops_red']:.2f};mem_red={r['mem_red']:.2f}")
+    print(f"\n{'=' * 70}\nrecords\n{'=' * 70}")
+    for r in all_records:
+        fh = ("-" if r["fusion_hit_rate"] is None
+              else f"{r['fusion_hit_rate']:.0%}")
+        print(f"{r['name']:45s} wall={r['wall_s']:.6f}s fused={fh} "
+              f"[{r['device']} @ {r['git_sha']}]")
 
-    section("Fig.14 — tensorized vs dense training (modeled)")
-    rows = bench_tnn_vs_dense.run()
-    all_failures += bench_tnn_vs_dense.validate(rows)
-    for r in rows:
-        csv_lines.append(
-            f"tnn_vs_dense/{r['workload']},{r['tnn_lat_us']:.2f},"
-            f"speedup={r['speedup']:.2f};energy_red={r['energy_red']:.2f}")
+    if args.write_baseline:
+        schema.write_json(args.write_baseline, all_records)
+        print(f"\nwrote baseline {args.write_baseline} "
+              f"({len(all_records)} records)")
 
-    section("Table II — compression ratios")
-    rows = bench_compression.run()
-    all_failures += bench_compression.validate(rows)
-    for r in rows:
-        csv_lines.append(
-            f"compression/{r['workload']},0,ratio={r['ratio']:.1f}")
-
-    section("§IV training-phase-specific sequences (FP/BP/WG search)")
-    rows = bench_phase_paths.run()
-    all_failures += bench_phase_paths.validate(rows)
-    for r in rows:
-        csv_lines.append(
-            f"phase_paths/{r['workload']},{r['searched_us']:.2f},"
-            f"speedup_vs_reuse={r['speedup']:.2f}")
-
-    section("§V-B dataflow flexibility — VMEM-resident chaining")
-    rows = bench_dataflow.run()
-    all_failures += bench_dataflow.validate(rows)
-    for r in rows:
-        csv_lines.append(
-            f"dataflow/{r['workload']},0,bytes_red={r['bytes_red']:.2f}")
-
-    section("Kernel micro-benchmarks")
-    rows = bench_kernels.run()
-    all_failures += bench_kernels.validate(rows)
-    for r in rows:
-        csv_lines.append(
-            f"kernel/{r['name']},{r['us_per_call']:.2f},{r['derived']}")
-
-    section("CSV")
-    for line in csv_lines:
-        print(line)
+    if args.baseline:
+        baseline = schema.load_json(args.baseline)
+        gate_failures = schema.regression_failures(
+            all_records, baseline, gate=args.gate)
+        all_failures += [f"regression: {f}" for f in gate_failures]
+        print(f"\nregression gate: {len(baseline)} baseline records, "
+              f"gate {args.gate}x -> "
+              f"{'PASS' if not gate_failures else 'FAIL'}")
 
     print("\n" + "=" * 70)
     if all_failures:
@@ -74,7 +175,7 @@ def main() -> None:
         for f in all_failures:
             print("  -", f)
         raise SystemExit(1)
-    print(f"ALL {len(csv_lines) - 1} benchmark rows emitted; "
+    print(f"ALL {len(all_records)} benchmark records emitted; "
           "all paper-claim checks PASS")
 
 

@@ -1,0 +1,97 @@
+"""The machine-readable benchmark record schema shared by all bench_*
+scripts.
+
+Every benchmark row normalises to one flat record:
+
+    {"name": str,              # "<module>/<case>" unique within a run
+     "wall_s": float,          # wall seconds (modeled or measured)
+     "fusion_hit_rate": float | None,   # None where fusion is meaningless
+     "device": str,            # jax backend:device_kind
+     "git_sha": str,           # HEAD at run time ("unknown" outside git)
+     "metrics": dict}          # benchmark-specific extras (floats/strs)
+
+``benchmarks/run.py`` writes one ``BENCH_<module>.json`` per module
+(``{"schema": 1, "records": [...]}``) and CI's bench-smoke job uploads them
+as artifacts and gates ``wall_s`` regressions against the checked-in
+baseline (:func:`regression_failures`).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+SCHEMA_VERSION = 1
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=os.path.dirname(__file__))
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def device() -> str:
+    import jax
+    return f"{jax.default_backend()}:{jax.devices()[0].device_kind}"
+
+
+def make_record(name: str, wall_s: float,
+                fusion_hit_rate: float | None = None,
+                **metrics) -> dict:
+    return {
+        "name": name,
+        "wall_s": float(wall_s),
+        "fusion_hit_rate": (None if fusion_hit_rate is None
+                            else float(fusion_hit_rate)),
+        "device": device(),
+        "git_sha": git_sha(),
+        "metrics": metrics,
+    }
+
+
+def write_json(path: str, records: list[dict]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA_VERSION, "records": records}, f,
+                  indent=2, sort_keys=True)
+
+
+def load_json(path: str) -> list[dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload.get("schema") == SCHEMA_VERSION, (
+        f"{path}: schema {payload.get('schema')} != {SCHEMA_VERSION}")
+    return payload["records"]
+
+
+def regression_failures(records: list[dict], baseline: list[dict],
+                        gate: float = 1.5,
+                        min_wall_s: float = 0.05) -> list[str]:
+    """Names whose wall_s regressed more than ``gate``x vs the baseline.
+
+    Records whose baseline wall_s is under ``min_wall_s`` are not gated —
+    sub-50ms timings are dominated by dispatch/timer noise and would make
+    the gate flap; they are still emitted and uploaded for trend tracking.
+    New records (absent from the baseline) never fail; deleting a
+    baselined record does.
+    """
+    by_name = {r["name"]: r for r in records}
+    failures = []
+    for base in baseline:
+        name = base["name"]
+        got = by_name.get(name)
+        if got is None:
+            failures.append(f"{name}: present in baseline but not emitted")
+            continue
+        if base["wall_s"] < min_wall_s:
+            continue
+        if got["wall_s"] > gate * base["wall_s"]:
+            failures.append(
+                f"{name}: wall_s {got['wall_s']:.4f} > {gate}x baseline "
+                f"{base['wall_s']:.4f}")
+    return failures

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import csse, factorizations as F
-from repro.core.tensorized import TNNConfig, TensorizedLinear, layer_cost
+from repro.core.tensorized import TensorizedLinear, layer_cost
 from repro.launch.train import train
 
 # -- 1. CSSE on the paper's Fig. 4 layer -------------------------------------

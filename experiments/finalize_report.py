@@ -1,6 +1,5 @@
 """Inject the generated dry-run/roofline tables into EXPERIMENTS.md."""
 
-import io
 import sys
 
 sys.path.insert(0, "src")

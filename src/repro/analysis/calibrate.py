@@ -1,0 +1,139 @@
+"""Calibration report: analytic roofline vs measured Pallas step costs.
+
+Prints, per workload and phase (FP/BP), one row per lowered op of the
+measured-objective winner: the analytic ``perf_model`` prediction, the
+measured best wall time from the autotuner, their ratio, and the winning
+tile config — i.e. *where the roofline lies* relative to the real lowering
+on this backend.  Also reports whether ``objective="measured"`` reranking
+changed the stage-2 winner relative to the analytic default, and the tuner
+cache statistics (a warm second run shows measured=0).
+
+On CPU hosts the kernels run in Pallas interpret mode, so the absolute
+ratios describe the interpreter — still the honest cost of this backend,
+and the loop (search → compile → measure → rerank) is identical on TPU.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.calibrate                # ATIS-TT
+  PYTHONPATH=src python -m repro.analysis.calibrate --workload UCF-TR --bp
+  PYTHONPATH=src python -m repro.analysis.calibrate --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from repro.core import autotune, csse
+from repro.core.tensorized import _bp_network
+
+
+def _workloads(names: list[str] | None):
+    from benchmarks.workloads import paper_workloads
+    wls = paper_workloads()
+    if names:
+        by_name = {w.name: w for w in wls}
+        missing = [n for n in names if n not in by_name]
+        if missing:
+            raise SystemExit(f"unknown workloads {missing}; "
+                             f"have {sorted(by_name)}")
+        wls = [by_name[n] for n in names]
+    return wls
+
+
+def calibrate_workload(wl, tuner: autotune.Tuner, *, bp: bool = False,
+                       tokens: int | None = None) -> list[dict]:
+    """search → compile → measure → rerank for one workload; returns one
+    record per phase with per-op analytic-vs-measured rows."""
+    tokens = tokens if tokens is not None else wl.tokens
+    nets = {"fp": wl.fact.forward_network(batch_axes=(("b", tokens),))}
+    if bp:
+        nets["bp"] = _bp_network(wl.fact, tokens)
+    records = []
+    for phase, net in nets.items():
+        analytic = csse.search(
+            net, csse.SearchOptions(objective="latency", fused_chain=True))
+        measured = csse.search(
+            net, csse.SearchOptions(objective="measured", fused_chain=True),
+            tuner=tuner)
+        compiled, rows = autotune.compare_plan(tuner, measured.plan)
+        rep = compiled.report()
+        records.append({
+            "workload": wl.name, "phase": phase, "tokens": tokens,
+            "winner_changed": measured.tree != analytic.tree,
+            "analytic_tree": repr(analytic.tree),
+            "measured_tree": repr(measured.tree),
+            "nondefault_tiles": rep["nondefault_tiles"],
+            "fusion_hit_rate": rep["fusion_hit_rate"],
+            "ops": rows,
+        })
+    return records
+
+
+def print_report(records: list[dict], tuner: autotune.Tuner,
+                 print_fn=print) -> None:
+    ratios = []
+    for rec in records:
+        print_fn(f"\n== {rec['workload']} / {rec['phase']} "
+                 f"(tokens={rec['tokens']}) ==")
+        print_fn(f"winner changed by measurement: {rec['winner_changed']}"
+                 f"  (analytic {rec['analytic_tree']} -> "
+                 f"measured {rec['measured_tree']})")
+        print_fn(f"{'op':8s} {'dims':>22s} {'analytic_us':>12s} "
+                 f"{'measured_us':>12s} {'meas/ana':>9s} {'tiles':>14s}")
+        for op in rec["ops"]:
+            dims = "x".join(str(d) for d in op["dims"])
+            ana = op["analytic_s"] * 1e6
+            if op["measured_s"] is None:
+                meas, ratio = "—", "—"
+            else:
+                meas = f"{op['measured_s'] * 1e6:12.1f}"
+                ratio = f"{op['ratio']:9.1f}"
+                ratios.append(op["ratio"])
+            tiles = ("default" if not op["nondefault_tiles"] else
+                     "x".join(str(t) for t in op["tiles"])
+                     ) if op["tiles"] is not None else "—"
+            print_fn(f"{op['kind']:8s} {dims:>22s} {ana:12.2f} "
+                     f"{meas:>12s} {ratio:>9s} {tiles:>14s}")
+    print_fn("")
+    if ratios:
+        mean_log = sum(math.log(r) for r in ratios) / len(ratios)
+        print_fn(f"geometric-mean measured/analytic ratio over "
+                 f"{len(ratios)} measured ops: {math.exp(mean_log):.1f}x "
+                 "(interpret mode on CPU hosts — the roofline models the "
+                 "TPU, the measurement prices this backend)")
+    changed = sum(r["winner_changed"] for r in records)
+    nondef = sum(r["nondefault_tiles"] for r in records)
+    print_fn(f"stage-2 winners changed by measurement: {changed}/"
+             f"{len(records)} plans; non-default tile configs: {nondef}")
+    print_fn(f"tuner stats: {tuner.stats}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--workload", action="append", default=None,
+                    help="workload name (repeatable; default ATIS-TT)")
+    ap.add_argument("--tokens", type=int, default=None,
+                    help="override the workload's batch dimension")
+    ap.add_argument("--bp", action="store_true",
+                    help="also calibrate the BP (dX) network")
+    ap.add_argument("--json", default=None,
+                    help="write the records to this JSON file too")
+    args = ap.parse_args()
+    names = args.workload or ["ATIS-TT"]
+
+    tuner = autotune.default_tuner()
+    records = []
+    for wl in _workloads(names):
+        records.extend(calibrate_workload(wl, tuner, bp=args.bp,
+                                          tokens=args.tokens))
+    print_report(records, tuner)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"records": records, "tuner_stats": tuner.stats}, f,
+                      indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

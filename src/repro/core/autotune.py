@@ -1,0 +1,556 @@
+"""Measurement-driven autotuner — calibrates CSSE stage-2 against the real
+Pallas lowering.
+
+The paper's stage-2 reranks contraction sequences with a cycle-accurate
+model of the target hardware (§IV, §VI-C).  Our ``perf_model`` is an
+analytic roofline that had never been checked against what
+``plan_compiler`` actually emits.  This module closes that measure→model
+loop:
+
+* **Sweep** — for each lowered GEMM / chain step shape, time real
+  ``matmul_pallas`` / ``chain_pallas`` executions over a small grid of tile
+  sizes (``block_m/n/k``), plus the fuse-vs-no-fuse decision for chain
+  candidates (measured chain against the measured two-GEMM split).  On CPU
+  hosts the kernels run in interpret mode — wall times then measure the
+  interpreter, which is still the honest cost of *this* backend and is what
+  CI exercises; on a TPU the same sweep times compiled kernels.
+
+* **Cache** — results persist in a content-addressed on-disk cache (same
+  sha256-of-JSON signature scheme as the CSSE memo), keyed by
+  (op kind, dims, transpose, dtype, jax backend, device kind, interpret,
+  sweep version).  Tuning is paid once per key: a second invocation is a
+  100% cache hit and re-measures nothing.  ``REPRO_AUTOTUNE_CACHE``
+  relocates the cache directory (tests point it at a tmpdir).
+
+* **Feedback** — :class:`CalibratedModel` prices a ``ContractionPlan`` by
+  compiling it (tile choices and fuse decisions from the cache) and summing
+  measured step costs, falling back to the analytic roofline for steps that
+  were skipped (too big to measure) or lowered to the einsum fallback.
+  ``csse.search(..., SearchOptions(objective="measured"))`` reranks stage-2
+  candidates with it instead of the analytic model.
+
+Entry points: :func:`default_tuner` (process-wide singleton used when a
+``Tuner`` isn't passed explicitly), ``Tuner.plan_latency`` /
+``CalibratedModel.evaluate`` for costing, ``compare_plan`` for the
+calibration report (:mod:`repro.analysis.calibrate`).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import hashlib
+import itertools
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perf_model
+from repro.core.plan_compiler import (
+    ChainOp, CompiledPlan, GemmOp, TileConfig, compile_plan,
+)
+from repro.core.tnetwork import ContractionPlan
+from repro.kernels.fused_contraction import (
+    CHAIN_VMEM_BUDGET_BYTES, INTERPRET, chain_pallas, chain_vmem_elems,
+    matmul_pallas,
+)
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                                  "..", ".cache", "autotune")
+
+# Bump to invalidate every cached measurement (sweep or timing change).
+SWEEP_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Step shapes and analytic fallbacks
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StepShape:
+    """The tuning key of one lowered op, before backend/device qualifiers.
+
+    ``dims`` is ``(m, n, k)`` for a GEMM and ``(m, k, h, n)`` for a fused
+    chain ``(X[m,k] @ A[k,h]) @ B[h,n]``.
+    """
+
+    kind: str                           # "gemm" | "chain"
+    dims: tuple[int, ...]
+    transpose_rhs: bool = False         # gemm only
+    dtype: str = "float32"
+
+    def elems(self) -> int:
+        """Total operand+result elements — the measurement size guard."""
+        if self.kind == "gemm":
+            m, n, k = self.dims
+            return m * k + k * n + m * n
+        m, k, h, n = self.dims
+        return m * k + k * h + h * n + m * h + m * n
+
+
+def analytic_gemm_s(m: int, n: int, k: int,
+                    hw: perf_model.HardwareModel = perf_model.TPU_V5E
+                    ) -> float:
+    """Roofline latency of one ``C[M,N] = A[M,K] @ B[K,N]`` step."""
+    compute = 2 * m * n * k / (hw.peak_flops * hw.mxu_utilisation(m, n, k))
+    memory = (m * k + k * n + m * n) * hw.dtype_bytes / hw.hbm_bw
+    return max(compute, memory) + hw.step_overhead_s
+
+
+def analytic_chain_s(m: int, k: int, h: int, n: int,
+                     hw: perf_model.HardwareModel = perf_model.TPU_V5E
+                     ) -> float:
+    """Roofline latency of a fused ``(X @ A) @ B`` whose ``[m, h]``
+    intermediate never round-trips HBM."""
+    c1 = 2 * m * h * k / (hw.peak_flops * hw.mxu_utilisation(m, h, k))
+    c2 = 2 * m * n * h / (hw.peak_flops * hw.mxu_utilisation(m, n, h))
+    memory = (m * k + k * h + h * n + m * n) * hw.dtype_bytes / hw.hbm_bw
+    return max(c1 + c2, memory) + hw.step_overhead_s
+
+
+def analytic_step_s(shape: StepShape,
+                    hw: perf_model.HardwareModel = perf_model.TPU_V5E
+                    ) -> float:
+    if shape.kind == "gemm":
+        return analytic_gemm_s(*shape.dims, hw=hw)
+    return analytic_chain_s(*shape.dims, hw=hw)
+
+
+# ---------------------------------------------------------------------------
+# Tune records
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TuneRecord:
+    """Outcome of tuning one :class:`StepShape` on one backend/device."""
+
+    shape: StepShape
+    best: TileConfig                    # winning tiles (defaults if skipped)
+    best_s: float                       # measured wall s (inf when skipped)
+    analytic_s: float                   # roofline prediction for the shape
+    measured: bool                      # False => size guard skipped timing
+    trials: list[dict] = field(default_factory=list)
+    source: str = "measured"            # measured | memo | disk
+
+    @property
+    def latency_s(self) -> float:
+        """What the calibrated model charges: measured, else analytic."""
+        return self.best_s if self.measured else self.analytic_s
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.shape.kind, "dims": list(self.shape.dims),
+            "transpose_rhs": self.shape.transpose_rhs,
+            "dtype": self.shape.dtype,
+            "best": [self.best.block_m, self.best.block_n,
+                     self.best.block_k],
+            "best_s": self.best_s, "analytic_s": self.analytic_s,
+            "measured": self.measured, "trials": self.trials,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TuneRecord":
+        shape = StepShape(kind=d["kind"], dims=tuple(d["dims"]),
+                          transpose_rhs=d["transpose_rhs"],
+                          dtype=d["dtype"])
+        bm, bn, bk = d["best"]
+        return cls(shape=shape,
+                   best=TileConfig(block_m=bm, block_n=bn, block_k=bk),
+                   best_s=d["best_s"], analytic_s=d["analytic_s"],
+                   measured=d["measured"], trials=list(d["trials"]),
+                   source="disk")
+
+
+# ---------------------------------------------------------------------------
+# The tuner
+# ---------------------------------------------------------------------------
+
+
+def _dedupe_tile_candidates(cands, effective):
+    """Drop candidates whose *effective* (clamped) tiles coincide."""
+    seen, out = set(), []
+    for c in cands:
+        key = effective(c)
+        if key not in seen:
+            seen.add(key)
+            out.append(c)
+    return out
+
+
+class Tuner:
+    """Times real Pallas executions per step shape and caches the winners.
+
+    One instance per process is enough (see :func:`default_tuner`); the
+    disk cache makes tuning persistent across processes and the in-process
+    memo makes repeated lookups free.  ``stats`` counts where answers came
+    from: ``measured`` (timed now), ``disk_hits``, ``memo_hits``,
+    ``skipped`` (size guard → analytic fallback).
+    """
+
+    #: tile sizes swept per GEMM dim (clamped to the dim by the kernel)
+    TILE_SWEEP = (128, 256, 512)
+
+    def __init__(self, hw: perf_model.HardwareModel = perf_model.TPU_V5E,
+                 cache_dir: str | None = None, iters: int = 2,
+                 warmup: int = 1, max_measure_elems: int = 1 << 22,
+                 max_configs: int = 27, interpret: bool | None = None):
+        self.hw = hw
+        self._cache_dir = cache_dir
+        self.iters = iters
+        self.warmup = warmup
+        self.max_measure_elems = max_measure_elems
+        self.max_configs = max_configs
+        self.interpret = INTERPRET if interpret is None else interpret
+        self._memo: dict[str, TuneRecord] = {}
+        self.stats = {"measured": 0, "disk_hits": 0, "memo_hits": 0,
+                      "skipped": 0}
+
+    # -- cache plumbing -----------------------------------------------------
+
+    @property
+    def cache_dir(self) -> str:
+        return (self._cache_dir
+                or os.environ.get(_CACHE_ENV, _DEFAULT_CACHE_DIR))
+
+    def signature(self, shape: StepShape) -> str:
+        payload = {
+            "kind": shape.kind, "dims": shape.dims,
+            "transpose_rhs": shape.transpose_rhs, "dtype": shape.dtype,
+            "backend": jax.default_backend(),
+            "device": jax.devices()[0].device_kind,
+            "interpret": self.interpret,
+            "sweep": SWEEP_VERSION,
+        }
+        return hashlib.sha256(
+            json.dumps(payload, default=str).encode()).hexdigest()
+
+    def _disk_load(self, sig: str) -> TuneRecord | None:
+        path = os.path.join(self.cache_dir, sig + ".json")
+        try:
+            with open(path) as f:
+                return TuneRecord.from_json(json.load(f))
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+
+    def _disk_store(self, sig: str, rec: TuneRecord) -> None:
+        try:
+            os.makedirs(self.cache_dir, exist_ok=True)
+            path = os.path.join(self.cache_dir, sig + ".json")
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(rec.to_json(), f)
+            os.replace(tmp, path)
+        except OSError:
+            pass
+
+    def clear_memo(self) -> None:
+        self._memo.clear()
+
+    # -- measurement --------------------------------------------------------
+
+    def _time(self, fn) -> float:
+        for _ in range(self.warmup):
+            fn().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(self.iters):
+            fn().block_until_ready()
+        return (time.perf_counter() - t0) / self.iters
+
+    def _operands(self, shape: StepShape):
+        dtype = jnp.dtype(shape.dtype)
+        key = jax.random.key(0)
+        if shape.kind == "gemm":
+            m, n, k = shape.dims
+            kx, kw = jax.random.split(key)
+            x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+            wshape = (n, k) if shape.transpose_rhs else (k, n)
+            w = jax.random.normal(kw, wshape, jnp.float32).astype(dtype)
+            return x, w
+        m, k, h, n = shape.dims
+        kx, ka, kb = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+        a = jax.random.normal(ka, (k, h), jnp.float32).astype(dtype)
+        b = jax.random.normal(kb, (h, n), jnp.float32).astype(dtype)
+        return x, a, b
+
+    def _candidates(self, shape: StepShape) -> list[TileConfig]:
+        if shape.kind == "gemm":
+            m, n, k = shape.dims
+            raw = itertools.product(self.TILE_SWEEP, self.TILE_SWEEP,
+                                    self.TILE_SWEEP)
+            cands = [TileConfig(block_m=a, block_n=b, block_k=c)
+                     for a, b, c in raw]
+            eff = lambda t: (min(t.block_m, m), min(t.block_n, n),  # noqa: E731
+                             min(t.block_k, k))
+        else:
+            m, k, h, n = shape.dims
+            raw = itertools.product(self.TILE_SWEEP, self.TILE_SWEEP)
+            cands = [TileConfig(block_m=a, block_n=b) for a, b in raw]
+            # chain tiles must respect the kernel's VMEM budget assert
+            cands = [t for t in cands
+                     if chain_vmem_elems(m, k, h, n, t.block_m, t.block_n)
+                     * 4 < CHAIN_VMEM_BUDGET_BYTES]
+            eff = lambda t: (min(t.block_m, m), min(t.block_n, n))  # noqa: E731
+        cands = _dedupe_tile_candidates(cands, eff)
+        if len(cands) > self.max_configs:
+            # Truncate round-robin across block_m groups (product order
+            # would keep only the smallest block_m values).
+            groups: dict[int, list[TileConfig]] = {}
+            for t in cands:
+                groups.setdefault(t.block_m, []).append(t)
+            interleaved = [t for tiles in itertools.zip_longest(
+                *groups.values()) for t in tiles if t is not None]
+            cands = interleaved[:self.max_configs]
+        return cands or [TileConfig()]
+
+    def _run_config(self, shape: StepShape, tiles: TileConfig, operands):
+        if shape.kind == "gemm":
+            x, w = operands
+
+            def call():
+                return matmul_pallas(
+                    x, w, transpose_rhs=shape.transpose_rhs,
+                    block_m=tiles.block_m, block_n=tiles.block_n,
+                    block_k=tiles.block_k, interpret=self.interpret)
+        else:
+            x, a, b = operands
+
+            def call():
+                return chain_pallas(
+                    x, a, b, block_m=tiles.block_m, block_n=tiles.block_n,
+                    interpret=self.interpret)
+        # Always jit (also in interpret mode): measurement may run at trace
+        # time under ensure_compile_time_eval, where a bare pallas_call has
+        # no evaluation rule; the warmup iteration absorbs compile time.
+        return jax.jit(call)
+
+    def _measure(self, shape: StepShape) -> TuneRecord:
+        analytic = analytic_step_s(shape, self.hw)
+        if shape.elems() > self.max_measure_elems:
+            self.stats["skipped"] += 1
+            return TuneRecord(shape=shape, best=TileConfig(),
+                              best_s=math.inf, analytic_s=analytic,
+                              measured=False, trials=[], source="measured")
+        # Tuning often fires at trace time (CSSE searches run inside a
+        # jitted train step).  jax trace contexts are thread-local, so the
+        # sweep always runs on a worker thread, where the timed kernels
+        # execute for real instead of being staged into the outer trace.
+        with concurrent.futures.ThreadPoolExecutor(1) as pool:
+            best, best_s, trials = pool.submit(self._sweep, shape).result()
+        self.stats["measured"] += 1
+        return TuneRecord(shape=shape, best=best, best_s=best_s,
+                          analytic_s=analytic, measured=True, trials=trials,
+                          source="measured")
+
+    def _sweep(self, shape: StepShape):
+        operands = self._operands(shape)
+        trials = []
+        best, best_s = None, math.inf
+        for tiles in self._candidates(shape):
+            wall = self._time(self._run_config(shape, tiles, operands))
+            trials.append({"tiles": [tiles.block_m, tiles.block_n,
+                                     tiles.block_k], "wall_s": wall})
+            if wall < best_s:
+                best, best_s = tiles, wall
+        return best, best_s, trials
+
+    # -- lookup (memo -> disk -> measure) -----------------------------------
+
+    def record(self, shape: StepShape) -> TuneRecord:
+        sig = self.signature(shape)
+        rec = self._memo.get(sig)
+        if rec is not None:
+            self.stats["memo_hits"] += 1
+            return rec
+        rec = self._disk_load(sig)
+        if rec is not None:
+            self.stats["disk_hits"] += 1
+            self._memo[sig] = rec
+            return rec
+        rec = self._measure(shape)
+        self._memo[sig] = rec
+        if rec.measured:
+            # Skipped records (size guard) stay memo-only: the skip decision
+            # is free to recompute and depends on max_measure_elems, which
+            # the signature deliberately does not key on — persisting would
+            # pin the analytic fallback even after the budget is raised.
+            self._disk_store(sig, rec)
+        return rec
+
+    # -- the protocol compile_plan consumes ---------------------------------
+
+    def gemm_tiles(self, m: int, n: int, k: int, *, transpose_rhs: bool,
+                   dtype: str) -> TileConfig:
+        return self.record(StepShape("gemm", (m, n, k),
+                                     transpose_rhs=transpose_rhs,
+                                     dtype=dtype)).best
+
+    def chain_tiles(self, m: int, k: int, h: int, n: int, *,
+                    dtype: str) -> TileConfig:
+        return self.record(StepShape("chain", (m, k, h, n),
+                                     dtype=dtype)).best
+
+    def should_fuse(self, m: int, k: int, h: int, n: int, *, dtype: str,
+                    transpose_rhs1: bool = False,
+                    transpose_rhs2: bool = False) -> bool:
+        """Measured fuse decision: chain vs the two-GEMM split it replaces.
+
+        ``transpose_rhs1/2`` are the split GemmOps' actual VMEM-flip flags,
+        so the comparison times exactly the kernels the unfused path would
+        dispatch (and reuses their ``gemm_tiles`` cache entries).
+        Unmeasured shapes (size guard) keep the structural default (fuse),
+        matching what CSSE stage-2 models as ``fused_chain=True``.
+        """
+        chain = self.record(StepShape("chain", (m, k, h, n), dtype=dtype))
+        g1 = self.record(StepShape("gemm", (m, h, k),
+                                   transpose_rhs=transpose_rhs1,
+                                   dtype=dtype))
+        g2 = self.record(StepShape("gemm", (m, n, h),
+                                   transpose_rhs=transpose_rhs2,
+                                   dtype=dtype))
+        if not (chain.measured and g1.measured and g2.measured):
+            return True
+        return chain.best_s <= g1.best_s + g2.best_s
+
+    # -- plan-level costing --------------------------------------------------
+
+    def op_latency(self, op, sizes,
+                   dtype: str = "float32") -> tuple[float, bool]:
+        """(seconds, measured?) for one lowered op."""
+        if isinstance(op, GemmOp):
+            rec = self.record(StepShape(
+                "gemm", (op.mat.m, op.mat.n, op.mat.k),
+                transpose_rhs=op.mat.transpose_rhs, dtype=dtype))
+            return rec.latency_s, rec.measured
+        if isinstance(op, ChainOp):
+            rec = self.record(StepShape(
+                "chain", (op.m, op.k, op.h, op.n), dtype=dtype))
+            return rec.latency_s, rec.measured
+        cost = perf_model.evaluate_step(op.step, sizes, self.hw)
+        return cost.latency_s, False
+
+    def plan_latency(self, plan: ContractionPlan, *,
+                     fused_chain: bool = True,
+                     dtype: str = "float32") -> float:
+        """Total measured latency of a plan's compiled lowering.
+
+        Steps the size guard skipped and einsum-fallback steps are charged
+        at the analytic roofline — the "fall back to perf_model for
+        unmeasured steps" contract of ``objective="measured"``.
+        """
+        compiled = compile_plan(plan, fuse=fused_chain, tuner=self,
+                                dtype=dtype)
+        sizes = plan.network.sizes
+        return sum(self.op_latency(op, sizes, dtype)[0]
+                   for op in compiled.ops)
+
+
+# ---------------------------------------------------------------------------
+# CSSE stage-2 adapter
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CalibratedModel:
+    """Stage-2 cost model backed by measurements instead of the roofline.
+
+    ``evaluate`` mirrors :func:`perf_model.evaluate`'s shape: the returned
+    :class:`perf_model.PlanCost` carries the *measured* latency (energy and
+    byte counts stay analytic — we do not measure joules).
+    """
+
+    tuner: Tuner
+    hw: perf_model.HardwareModel = perf_model.TPU_V5E
+    dtype: str = "float32"
+
+    def latency(self, plan: ContractionPlan,
+                fused_chain: bool = True) -> float:
+        return self.tuner.plan_latency(plan, fused_chain=fused_chain,
+                                       dtype=self.dtype)
+
+    def evaluate(self, plan: ContractionPlan,
+                 fused_chain: bool = True) -> perf_model.PlanCost:
+        analytic = perf_model.evaluate(plan, self.hw,
+                                       fused_chain=fused_chain)
+        return perf_model.PlanCost(
+            latency_s=self.latency(plan, fused_chain=fused_chain),
+            energy_j=analytic.energy_j, flops=analytic.flops,
+            bytes_hbm=analytic.bytes_hbm, steps=analytic.steps)
+
+
+# ---------------------------------------------------------------------------
+# Calibration report helper (analysis/calibrate.py, bench_autotune)
+# ---------------------------------------------------------------------------
+
+
+def compare_plan(tuner: Tuner, plan: ContractionPlan, *,
+                 fused_chain: bool = True,
+                 dtype: str = "float32") -> tuple[CompiledPlan, list[dict]]:
+    """Per-op analytic-vs-measured rows for one plan (where the roofline
+    lies).  Returns the compiled plan and one row per lowered op."""
+    compiled = compile_plan(plan, fuse=fused_chain, tuner=tuner, dtype=dtype)
+    sizes = plan.network.sizes
+    rows = []
+    for op in compiled.ops:
+        if isinstance(op, GemmOp):
+            shape = StepShape("gemm", (op.mat.m, op.mat.n, op.mat.k),
+                              transpose_rhs=op.mat.transpose_rhs,
+                              dtype=dtype)
+            rec = tuner.record(shape)
+            kind, analytic_s = "gemm", rec.analytic_s
+            measured_s = rec.best_s if rec.measured else None
+            tiles = op.tiles
+        elif isinstance(op, ChainOp):
+            shape = StepShape("chain", (op.m, op.k, op.h, op.n), dtype=dtype)
+            rec = tuner.record(shape)
+            kind, analytic_s = "chain", rec.analytic_s
+            measured_s = rec.best_s if rec.measured else None
+            tiles = op.tiles
+        else:
+            shape = None
+            kind = "einsum"
+            analytic_s = perf_model.evaluate_step(
+                op.step, sizes, tuner.hw).latency_s
+            measured_s, tiles = None, None
+        rows.append({
+            "kind": kind,
+            "dims": list(shape.dims) if shape else list(op.step.out_shape),
+            "analytic_s": analytic_s,
+            "measured_s": measured_s,
+            "ratio": (measured_s / analytic_s
+                      if measured_s is not None and analytic_s > 0 else None),
+            "tiles": ([tiles.block_m, tiles.block_n, tiles.block_k]
+                      if tiles is not None else None),
+            "nondefault_tiles": tiles is not None and tiles != TileConfig(),
+        })
+    return compiled, rows
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default instance
+# ---------------------------------------------------------------------------
+
+
+_DEFAULT: Tuner | None = None
+
+
+def default_tuner() -> Tuner:
+    """The singleton every implicit ``objective="measured"`` search uses."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Tuner()
+    return _DEFAULT
+
+
+def set_default_tuner(tuner: Tuner | None) -> None:
+    """Swap (or reset, with None) the process-wide tuner — tests use this
+    to point measurements at a fresh cache directory."""
+    global _DEFAULT
+    _DEFAULT = tuner

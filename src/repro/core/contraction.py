@@ -18,6 +18,7 @@ reference semantics the compiled path is tested against.
 
 from __future__ import annotations
 
+import os as _os
 import string
 from functools import partial
 from typing import Sequence
@@ -25,13 +26,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.tnetwork import ContractionPlan, ContractionStep
+
 # CPU backend cannot run batched bf16 x bf16 -> f32 dots; upcast there.
 # (skipped under REPRO_ASSUME_TPU_DOTS — see repro.models.blocks)
-import os as _os
 _CPU = (jax.default_backend() == "cpu"
         and not _os.environ.get("REPRO_ASSUME_TPU_DOTS"))
-
-from repro.core.tnetwork import ContractionPlan, ContractionStep
 
 _LETTERS = string.ascii_lowercase + string.ascii_uppercase
 
@@ -65,7 +65,7 @@ def _einsum_step(step: ContractionStep, lhs: jax.Array, rhs: jax.Array,
 def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             accum_dtype=jnp.float32, out_dtype=None,
             backend: str = "einsum", fused_chain: bool = True,
-            interpret: bool | None = None) -> jax.Array:
+            interpret: bool | None = None, tuner=None) -> jax.Array:
     """Run the plan over concrete arrays (one per network node, in order).
 
     ``backend="einsum"`` lowers each step to ``jnp.einsum`` (reference
@@ -73,7 +73,9 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
     (see :mod:`repro.core.plan_compiler`), with ``fused_chain=False``
     disabling chain fusion there (the ablation CSSE stage-2 models).
     ``interpret`` forces/disables Pallas interpret mode (default: interpret
-    off-TPU); einsum ignores both knobs.
+    off-TPU).  ``tuner`` (a :class:`repro.core.autotune.Tuner`) makes the
+    pallas backend compile with measured tile choices and fuse decisions
+    instead of the fixed 128-tile defaults.  einsum ignores all three knobs.
     """
     assert backend in ("einsum", "pallas"), f"unknown backend {backend!r}"
     net = plan.network
@@ -87,7 +89,9 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
 
     if backend == "pallas":
         from repro.core import plan_compiler
-        compiled = plan_compiler.compile_plan(plan, fuse=fused_chain)
+        compiled = plan_compiler.compile_plan(
+            plan, fuse=fused_chain, tuner=tuner,
+            dtype=jnp.dtype(tensors[0].dtype).name)
         return plan_compiler.run(compiled, tensors, accum_dtype=accum_dtype,
                                  out_dtype=out_dtype, interpret=interpret)
 

@@ -20,44 +20,59 @@ Two-stage search over contraction sequences of a tensor network:
 
 * **Stage 2** reranks the candidates under the analytic TPU performance
   model (:mod:`repro.core.perf_model`) on the requested objective
-  (``latency`` / ``energy`` / ``edp`` — "CSSE-Model"), or keeps the FLOPs
-  order ("CSSE-FLOPs").
+  (``latency`` / ``energy`` / ``edp`` — "CSSE-Model"), keeps the FLOPs
+  order ("CSSE-FLOPs"), or — ``objective="measured"`` — prices each
+  candidate with the measurement-driven tuner
+  (:mod:`repro.core.autotune`): the plan is compiled by the real Pallas
+  lowering and step costs come from timed executions, falling back to the
+  analytic roofline for unmeasured steps.  That is the paper's
+  model-matches-implementation property, enforced by measurement.
 
 Results are memoised in-process and on disk (keyed by the network signature
 and search options) so model building never pays the search twice — the
-training step compiles with sequences baked in.
+training step compiles with sequences baked in.  ``measured`` searches
+memoise in-process only: their ranking depends on the autotune measurement
+DB (itself disk-persistent), not on anything the signature can capture.
 """
 
 from __future__ import annotations
 
 import hashlib
 import json
-import math
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Sequence
 
 from repro.core import perf_model
 from repro.core.tnetwork import (
     ContractionPlan, TensorNetwork, TreeT, canonical_tree, plan_from_tree,
+    tree_leaves,
 )
 
-_CACHE_DIR = os.environ.get(
-    "REPRO_CSSE_CACHE", os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                                     ".cache", "csse"))
+_DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                                  "..", ".cache", "csse")
 _MEMO: dict[str, "SearchResult"] = {}
+
+
+def _cache_dir() -> str:
+    """Resolved per call so tests (and operators) can repoint
+    ``REPRO_CSSE_CACHE`` after import."""
+    return os.environ.get("REPRO_CSSE_CACHE", _DEFAULT_CACHE_DIR)
 
 
 @dataclass(frozen=True)
 class SearchOptions:
-    objective: str = "edp"            # stage-2 metric: latency|energy|edp|flops
+    objective: str = "edp"    # stage-2: latency|energy|edp|flops|measured
     num_candidates: int = 8           # paper's N
     engine: str = "auto"              # auto|dfs|dp
     dfs_max_nodes: int = 7            # auto: dfs up to here, dp beyond
     fused_chain: bool = False         # stage-2 models Pallas fused execution
     allow_outer: bool = True          # enlarged space (paper); False = Tetrix-ish
     anchor_input: bool = False        # True = Tetrix-style: X merges every step
+    measure_dtype: str = "float32"    # objective="measured": operand dtype
+                                      # the tuner times (match the executor's
+                                      # compute dtype so rankings and tile
+                                      # caches describe what actually runs)
 
 
 @dataclass
@@ -305,27 +320,44 @@ def _signature(net: TensorNetwork, opts: SearchOptions,
         "nodes": net.nodes, "output": net.output,
         "opts": (opts.objective, opts.num_candidates, opts.engine,
                  opts.dfs_max_nodes, opts.fused_chain, opts.allow_outer,
-                 opts.anchor_input),
+                 opts.anchor_input, opts.measure_dtype),
         "hw": (hw.name, hw.peak_flops, hw.hbm_bw, hw.dtype_bytes,
                hw.step_overhead_s),
     }
     return hashlib.sha256(json.dumps(payload, default=str).encode()).hexdigest()
 
 
-def _disk_load(sig: str) -> TreeT | None:
-    path = os.path.join(_CACHE_DIR, sig + ".json")
+def _disk_load(sig: str, net: TensorNetwork) -> TreeT | None:
+    """Load a cached winning tree; any corruption (bad JSON, wrong
+    structure, a tree that does not cover the network) reads as a miss so
+    the search falls through to a fresh run and overwrites the bad entry."""
+    path = os.path.join(_cache_dir(), sig + ".json")
     try:
         with open(path) as f:
-            return _untuple(json.load(f)["tree"])
-    except (OSError, ValueError, KeyError):
+            tree = _untuple(json.load(f)["tree"])
+    except (OSError, ValueError, KeyError, TypeError):
         return None
+    try:
+        leaves = tree_leaves(tree)
+    except (TypeError, RecursionError):
+        # RecursionError: a non-int leaf (e.g. a string, which iterates
+        # into itself) from a hand-edited / partially-written entry.
+        return None
+    if not all(isinstance(x, int) for x in leaves):
+        return None
+    if sorted(leaves) != list(range(net.num_nodes)):
+        return None
+    return tree
 
 
 def _disk_store(sig: str, tree: TreeT) -> None:
     try:
-        os.makedirs(_CACHE_DIR, exist_ok=True)
-        with open(os.path.join(_CACHE_DIR, sig + ".json"), "w") as f:
+        os.makedirs(_cache_dir(), exist_ok=True)
+        path = os.path.join(_cache_dir(), sig + ".json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
             json.dump({"tree": tree}, f)
+        os.replace(tmp, path)
     except OSError:
         pass
 
@@ -335,8 +367,32 @@ def _untuple(x):
 
 
 def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
-           hw: perf_model.HardwareModel = perf_model.TPU_V5E) -> SearchResult:
-    """Run the two-stage CSSE on ``net`` and return the best plan."""
+           hw: perf_model.HardwareModel = perf_model.TPU_V5E,
+           tuner=None) -> SearchResult:
+    """Run the two-stage CSSE on ``net`` and return the best plan.
+
+    With ``opts.objective == "measured"``, stage 2 reranks by the
+    measurement-driven tuner (``tuner`` or the process-wide
+    :func:`repro.core.autotune.default_tuner`) instead of the analytic
+    model; measured searches skip the on-disk winner cache (the measurement
+    DB, not the signature, determines the ranking) but their *step*
+    measurements are themselves disk-cached, so a warm second run
+    re-measures nothing.
+    """
+    measured_model = None
+    if opts.objective == "measured":
+        from repro.core import autotune
+        measured_model = autotune.CalibratedModel(
+            tuner or autotune.default_tuner(), hw,
+            dtype=opts.measure_dtype)
+
+    def stage2_metric(plan: ContractionPlan,
+                      cost: perf_model.PlanCost) -> float:
+        if measured_model is not None:
+            return measured_model.latency(plan,
+                                          fused_chain=opts.fused_chain)
+        return cost.metric(opts.objective)
+
     sig = _signature(net, opts, hw)
     memo = _MEMO.get(sig)
     if memo is not None:
@@ -349,16 +405,18 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
         _MEMO[sig] = res
         return res
 
-    cached_tree = _disk_load(sig)
-    if cached_tree is not None:
-        plan = plan_from_tree(net, cached_tree)
-        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain)
-        res = SearchResult(cached_tree, plan, cost,
-                           [(plan.total_flops, cached_tree)],
-                           [(cost.metric(opts.objective), cached_tree)],
-                           {"cache": "disk"})
-        _MEMO[sig] = res
-        return res
+    if measured_model is None:
+        cached_tree = _disk_load(sig, net)
+        if cached_tree is not None:
+            plan = plan_from_tree(net, cached_tree)
+            cost = perf_model.evaluate(plan, hw,
+                                       fused_chain=opts.fused_chain)
+            res = SearchResult(cached_tree, plan, cost,
+                               [(plan.total_flops, cached_tree)],
+                               [(cost.metric(opts.objective), cached_tree)],
+                               {"cache": "disk"})
+            _MEMO[sig] = res
+            return res
 
     g = _Graph(net)
     t0 = time.perf_counter()
@@ -377,15 +435,18 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
 
     assert candidates, "stage 1 found no complete contraction sequence"
 
-    # Stage 2: rerank under the hardware model.
+    # Stage 2: rerank under the hardware model (or measured step costs).
     scored: list[tuple[float, TreeT, ContractionPlan, perf_model.PlanCost]] = []
     for flops, tree in candidates:
         plan = plan_from_tree(net, tree)
         cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain)
-        scored.append((cost.metric(opts.objective), tree, plan, cost))
+        scored.append((stage2_metric(plan, cost), tree, plan, cost))
     scored.sort(key=lambda x: x[0])
     best_metric, tree, plan, cost = scored[0]
     stats["stage2_s"] = time.perf_counter() - t0 - stats["stage1_s"]
+    if measured_model is not None:
+        stats["stage2"] = "measured"
+        stats["tuner"] = dict(measured_model.tuner.stats)
 
     res = SearchResult(
         tree=tree, plan=plan, cost=cost,
@@ -394,7 +455,8 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
         stats=stats,
     )
     _MEMO[sig] = res
-    _disk_store(sig, tree)
+    if measured_model is None:
+        _disk_store(sig, tree)
     return res
 
 

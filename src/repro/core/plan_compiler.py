@@ -35,6 +35,7 @@ backend="pallas")`` is the public route.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Sequence, Union
@@ -52,6 +53,27 @@ from repro.kernels.fused_contraction import (
 # ---------------------------------------------------------------------------
 # Lowered ops
 # ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """Pallas grid tile sizes for one lowered op.
+
+    ``None`` on an op means "kernel defaults" (128-aligned MXU tiles).  The
+    autotuner (:mod:`repro.core.autotune`) measures real executions per
+    (shape, backend, device) key and threads the winning config in here via
+    ``compile_plan(..., tuner=...)``.
+    """
+
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+
+    def as_kwargs(self, with_k: bool = True) -> dict:
+        kw = {"block_m": self.block_m, "block_n": self.block_n}
+        if with_k:
+            kw["block_k"] = self.block_k
+        return kw
 
 
 def _perm_or_none(src: Sequence[AxisId], dst: Sequence[AxisId]
@@ -96,6 +118,7 @@ class GemmOp:
 
     step: ContractionStep
     mat: Matricization
+    tiles: TileConfig | None = None      # autotuned grid tiles (None=defaults)
 
 
 @dataclass(frozen=True)
@@ -119,6 +142,7 @@ class ChainOp:
     a_perm: tuple[int, ...] | None      # rhs of first -> [K, H]
     b_perm: tuple[int, ...] | None      # rhs of second -> [H, N]
     out_perm: tuple[int, ...] | None
+    tiles: TileConfig | None = None      # autotuned grid tiles (None=defaults)
 
     @property
     def hbm_transposes(self) -> int:
@@ -249,6 +273,11 @@ class CompiledPlan:
             "hbm_transposes": (sum(g.mat.hbm_transposes for g in gemms)
                                + sum(c.hbm_transposes for c in chains)),
             "fallback_reasons": tuple(op.reason for op in einsums),
+            "tuned_ops": sum(op.tiles is not None for op in self.ops
+                             if not isinstance(op, EinsumOp)),
+            "nondefault_tiles": sum(
+                op.tiles is not None and op.tiles != TileConfig()
+                for op in self.ops if not isinstance(op, EinsumOp)),
         }
 
     def describe(self) -> str:
@@ -273,12 +302,20 @@ class CompiledPlan:
 
 
 def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
-                 vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES) -> CompiledPlan:
+                 vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
+                 tuner=None, dtype: str = "float32") -> CompiledPlan:
     """Lower every step; then (unless ``fuse=False``, the ablation CSSE
     stage-2 prices as ``fused_chain=False``) fuse eligible adjacent GEMM
     pairs.  ``vmem_budget`` may only tighten fusion: ``chain_pallas`` itself
     asserts against :data:`CHAIN_VMEM_BUDGET_BYTES`, so larger values are
-    clamped rather than compiling chains the kernel would reject."""
+    clamped rather than compiling chains the kernel would reject.
+
+    ``tuner`` (an :class:`repro.core.autotune.Tuner`, duck-typed) replaces
+    the fixed 128-tile defaults with measured winners: every GEMM/chain gets
+    its cached best :class:`TileConfig`, and a structurally-fusable pair is
+    only fused when the measured chain beats the measured two-GEMM split
+    (unmeasured shapes keep the structural default).  ``dtype`` is the
+    operand dtype name the measurements are keyed under."""
     vmem_budget = min(vmem_budget, CHAIN_VMEM_BUDGET_BYTES)
     lowered: list[LoweredOp] = []
     for step in plan.steps:
@@ -287,7 +324,12 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
             lowered.append(EinsumOp(step=step, spec=_einsum_spec(step),
                                     reason=mat))
         else:
-            lowered.append(GemmOp(step=step, mat=mat))
+            tiles = None
+            if tuner is not None:
+                tiles = tuner.gemm_tiles(mat.m, mat.n, mat.k,
+                                         transpose_rhs=mat.transpose_rhs,
+                                         dtype=dtype)
+            lowered.append(GemmOp(step=step, mat=mat, tiles=tiles))
     if not fuse:
         return CompiledPlan(plan=plan, ops=tuple(lowered))
 
@@ -298,6 +340,17 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
         if (i + 1 < len(lowered) and isinstance(a, GemmOp)
                 and isinstance(lowered[i + 1], GemmOp)):
             chain = _try_fuse(plan, a, lowered[i + 1], vmem_budget)
+            if chain is not None and tuner is not None:
+                b = lowered[i + 1]
+                if tuner.should_fuse(chain.m, chain.k, chain.h, chain.n,
+                                     dtype=dtype,
+                                     transpose_rhs1=a.mat.transpose_rhs,
+                                     transpose_rhs2=b.mat.transpose_rhs):
+                    chain = dataclasses.replace(
+                        chain, tiles=tuner.chain_tiles(
+                            chain.m, chain.k, chain.h, chain.n, dtype=dtype))
+                else:
+                    chain = None     # measured: two GEMMs beat the chain
             if chain is not None:
                 fused.append(chain)
                 i += 2
@@ -361,8 +414,10 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
                 w = _as_2d(slots[op.step.rhs], mat.rhs_perm, mat.n, mat.k)
             else:
                 w = _as_2d(slots[op.step.rhs], mat.rhs_perm, mat.k, mat.n)
+            tile_kw = {} if op.tiles is None else op.tiles.as_kwargs()
             res = matmul_pallas(x, w, transpose_rhs=mat.transpose_rhs,
-                                out_dtype=out_dtype, interpret=interpret)
+                                out_dtype=out_dtype, interpret=interpret,
+                                **tile_kw)
             res = res.reshape(tuple(sizes[a] for a in mat.m_axes + mat.n_axes))
             if mat.out_perm is not None:
                 res = jnp.transpose(res, mat.out_perm)
@@ -371,8 +426,10 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
             x = _as_2d(slots[op.first.lhs], op.x_perm, op.m, op.k)
             a = _as_2d(slots[op.first.rhs], op.a_perm, op.k, op.h)
             b = _as_2d(slots[op.second.rhs], op.b_perm, op.h, op.n)
+            tile_kw = {} if op.tiles is None else op.tiles.as_kwargs(
+                with_k=False)
             res = chain_pallas(x, a, b, out_dtype=out_dtype,
-                               interpret=interpret)
+                               interpret=interpret, **tile_kw)
             res = res.reshape(tuple(sizes[ax] for ax in op.m_axes + op.n_axes))
             if op.out_perm is not None:
                 res = jnp.transpose(res, op.out_perm)

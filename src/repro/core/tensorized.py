@@ -25,9 +25,8 @@ Searches run at trace time on static shapes and are memoised process-wide
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from functools import lru_cache, partial
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,10 +50,19 @@ class TNNConfig:
     fused_chain: bool = True              # model VMEM-resident chaining
     num_blocks: int = 2                   # BT only
     backend: str = "einsum"               # contraction executor: einsum|pallas
+    autotune: bool = False                # measured stage-2 + tuned tiles
 
-    def search_options(self) -> csse.SearchOptions:
-        return csse.SearchOptions(objective=self.objective,
-                                  fused_chain=self.fused_chain)
+    def search_options(self, compute_dtype=None) -> csse.SearchOptions:
+        # Autotuning swaps the analytic stage-2 objective for measured step
+        # costs (repro.core.autotune); the executor side additionally gets
+        # tuned tile configs when backend == "pallas".  measure_dtype
+        # follows the layer's compute dtype so the tuner times (and caches)
+        # exactly the kernels the executor will run.
+        objective = "measured" if self.autotune else self.objective
+        dtype = jnp.dtype(compute_dtype or jnp.bfloat16).name
+        return csse.SearchOptions(objective=objective,
+                                  fused_chain=self.fused_chain,
+                                  measure_dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +204,7 @@ class TensorizedLinear:
     param_dtype: jnp.dtype = jnp.float32
     compute_dtype: jnp.dtype = jnp.bfloat16
     backend: str = "einsum"              # plan executor: einsum|pallas
+    autotune: bool = False               # tuned tiles on the pallas executor
 
     # -- params -------------------------------------------------------------
 
@@ -211,6 +220,12 @@ class TensorizedLinear:
             params["bias"] = jnp.zeros((self.fact.M,), self.param_dtype)
         return params
 
+    def _tuner(self):
+        if not (self.autotune and self.backend == "pallas"):
+            return None
+        from repro.core import autotune
+        return autotune.default_tuner()
+
     def dense_weight(self, params: dict) -> jax.Array:
         """Reconstruct W[M, N] (tests / export / Scheme-2 baseline)."""
         net = self.fact.weight_network()
@@ -218,7 +233,8 @@ class TensorizedLinear:
         w = contraction.execute(res.plan, [c.astype(jnp.float32)
                                            for c in params["cores"]],
                                 backend=self.backend,
-                                fused_chain=self.opts.fused_chain)
+                                fused_chain=self.opts.fused_chain,
+                                tuner=self._tuner())
         return w.reshape(self.fact.M, self.fact.N)
 
     # -- forward ------------------------------------------------------------
@@ -231,12 +247,14 @@ class TensorizedLinear:
         xt = xt.astype(self.compute_dtype)
         cores = tuple(c.astype(self.compute_dtype) for c in params["cores"])
         if self.phase_paths:
-            y = _tnn_apply(self.fact, self.opts, self.backend, xt, *cores)
+            y = _tnn_apply(self.fact, self.opts, self.backend,
+                           self.autotune, xt, *cores)
         else:
             fp, _, _ = _plans(self.fact, batch, self.opts)
             y = contraction.execute(fp.plan, [xt, *cores],
                                     backend=self.backend,
-                                    fused_chain=self.opts.fused_chain)
+                                    fused_chain=self.opts.fused_chain,
+                                    tuner=self._tuner())
         y = y.reshape(tuple(lead) + (self.fact.M,))
         if self.use_bias:
             y = y + params["bias"].astype(self.compute_dtype)
@@ -244,46 +262,59 @@ class TensorizedLinear:
 
 
 # custom_vjp core: functional over (x, *cores) so jax sees the cores as
-# differentiable leaves.  fact/opts/backend are static (nondiff) arguments;
-# backend routes every phase plan (FP here, BP/WG in the bwd rule) through
-# the einsum reference or the Pallas plan compiler.
+# differentiable leaves.  fact/opts/backend/autotune are static (nondiff)
+# arguments; backend routes every phase plan (FP here, BP/WG in the bwd
+# rule) through the einsum reference or the Pallas plan compiler, and
+# autotune swaps the compiler's fixed tile defaults for measured winners.
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _exec_tuner(backend: str, autotune_flag: bool):
+    if not (autotune_flag and backend == "pallas"):
+        return None
+    from repro.core import autotune
+    return autotune.default_tuner()
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def _tnn_apply(fact: Factorization, opts: csse.SearchOptions, backend: str,
-               x: jax.Array, *cores: jax.Array) -> jax.Array:
+               autotune_flag: bool, x: jax.Array, *cores: jax.Array
+               ) -> jax.Array:
     fp, _, _ = _plans(fact, x.shape[0], opts)
     return contraction.execute(fp.plan, [x, *cores], backend=backend,
-                               fused_chain=opts.fused_chain)
+                               fused_chain=opts.fused_chain,
+                               tuner=_exec_tuner(backend, autotune_flag))
 
 
-def _tnn_fwd(fact, opts, backend, x, *cores):
-    y = _tnn_apply(fact, opts, backend, x, *cores)
+def _tnn_fwd(fact, opts, backend, autotune_flag, x, *cores):
+    y = _tnn_apply(fact, opts, backend, autotune_flag, x, *cores)
     return y, (x, cores)
 
 
-def _tnn_bwd(fact, opts, backend, res, dy):
+def _tnn_bwd(fact, opts, backend, autotune_flag, res, dy):
     x, cores = res
     batch = x.shape[0]
     _, bp, (wg_kind, dw_res, wg) = _plans(fact, batch, opts)
+    tuner = _exec_tuner(backend, autotune_flag)
     dy = dy.astype(x.dtype)
     dx = contraction.execute(bp.plan, [dy, *cores], backend=backend,
-                             fused_chain=opts.fused_chain)
+                             fused_chain=opts.fused_chain, tuner=tuner)
     dcores = []
     if wg_kind == "shared":
         dw = contraction.execute(dw_res.plan, [x, dy], backend=backend,
-                                 fused_chain=opts.fused_chain)
+                                 fused_chain=opts.fused_chain, tuner=tuner)
         for i, w in enumerate(wg):
             others = tuple(c for j, c in enumerate(cores) if j != i)
             dcores.append(contraction.execute(w.plan, [dw, *others],
                                               backend=backend,
-                                              fused_chain=opts.fused_chain))
+                                              fused_chain=opts.fused_chain,
+                                              tuner=tuner))
     else:
         for i, w in enumerate(wg):
             others = tuple(c for j, c in enumerate(cores) if j != i)
             dcores.append(contraction.execute(w.plan, [x, dy, *others],
                                               backend=backend,
-                                              fused_chain=opts.fused_chain))
+                                              fused_chain=opts.fused_chain,
+                                              tuner=tuner))
     return (dx, *dcores)
 
 
@@ -305,7 +336,8 @@ def make_tensorized_linear(out_features: int, in_features: int,
     fact = factorizations.make(tnn.method, out_dims, in_dims, tnn.rank, **kw)
     return TensorizedLinear(fact=fact, use_bias=use_bias,
                             phase_paths=tnn.phase_paths,
-                            opts=tnn.search_options(),
+                            opts=tnn.search_options(compute_dtype),
                             param_dtype=param_dtype,
                             compute_dtype=compute_dtype,
-                            backend=tnn.backend)
+                            backend=tnn.backend,
+                            autotune=tnn.autotune)

@@ -22,12 +22,9 @@ gradient reduction).
 
 from __future__ import annotations
 
-import dataclasses
-import re
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

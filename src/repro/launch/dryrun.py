@@ -32,7 +32,6 @@ import jax.numpy as jnp
 
 from repro.analysis import roofline
 from repro.configs import base as cfgbase
-from repro.core.tensorized import TNNConfig
 from repro.distributed import sharding
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh

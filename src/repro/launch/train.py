@@ -36,11 +36,18 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           global_batch: int, seq_len: int, lr: float, ckpt_dir: str | None,
           ckpt_every: int, microbatches: int, production_mesh: bool,
           resume: bool = True, log_every: int = 10,
-          tnn_backend: str | None = None) -> dict:
+          tnn_backend: str | None = None,
+          tnn_autotune: bool = False) -> dict:
     arch = cfgbase.get(arch_id)
     tnn_cfg = arch.tnn_default if tnn else None
     if tnn_cfg is not None and tnn_backend is not None:
         tnn_cfg = dataclasses.replace(tnn_cfg, backend=tnn_backend)
+    if tnn_cfg is not None and tnn_autotune:
+        # Autotuning implies the pallas executor (tile choices only exist
+        # there) unless the caller explicitly pinned a backend.
+        backend = tnn_backend or "pallas"
+        tnn_cfg = dataclasses.replace(tnn_cfg, autotune=True,
+                                      backend=backend)
     model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=smoke)
     mesh = (make_production_mesh() if production_mesh else make_host_mesh())
     shard = sharding.make_sharder(mesh)
@@ -115,6 +122,12 @@ def main() -> None:
                     default=None,
                     help="contraction executor for tensorized layers "
                          "(default: the arch config's TNNConfig.backend)")
+    ap.add_argument("--tnn-autotune", action="store_true",
+                    help="measurement-driven tuning: CSSE stage-2 reranks "
+                         "by measured step latency and the pallas executor "
+                         "uses tuned tile configs (implies --tnn-backend "
+                         "pallas unless overridden); measurements persist "
+                         "in REPRO_AUTOTUNE_CACHE")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -127,6 +140,9 @@ def main() -> None:
     if args.tnn_backend is not None and not args.tnn:
         ap.error("--tnn-backend requires --tnn (no tensorized layers to "
                  "route without it)")
+    if args.tnn_autotune and not args.tnn:
+        ap.error("--tnn-autotune requires --tnn (no tensorized layers to "
+                 "tune without it)")
 
     def run(start_step: int) -> int:
         out = train(args.arch, smoke=args.smoke, tnn=args.tnn,
@@ -135,7 +151,8 @@ def main() -> None:
                     ckpt_every=args.ckpt_every,
                     microbatches=args.microbatches,
                     production_mesh=args.production_mesh,
-                    tnn_backend=args.tnn_backend)
+                    tnn_backend=args.tnn_backend,
+                    tnn_autotune=args.tnn_autotune)
         print(f"[train] done: final loss {out['final_loss']:.4f} "
               f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")
         return args.steps

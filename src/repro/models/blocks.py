@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os as _os
 from functools import partial
 from typing import Callable, NamedTuple, Optional
 
@@ -34,7 +35,6 @@ Shard = Callable[[jax.Array, tuple[Optional[str], ...]], jax.Array]
 # The dry-run sets REPRO_ASSUME_TPU_DOTS=1: it only lowers+compiles (never
 # executes), and the upcast copies would otherwise inflate the roofline
 # memory term with traffic that does not exist on the MXU.
-import os as _os
 _CPU = (jax.default_backend() == "cpu"
         and not _os.environ.get("REPRO_ASSUME_TPU_DOTS"))
 

@@ -98,7 +98,6 @@ def test_smoke_decode_matches_forward(arch_id):
 
 def test_full_configs_match_assignment():
     """The full (non-smoke) configs carry the exact published dimensions."""
-    import math
     checks = {
         "rwkv6_7b": dict(num_layers=32, d_model=4096, d_ff=14336,
                          vocab=65536),

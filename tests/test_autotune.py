@@ -1,0 +1,223 @@
+"""Autotuner tests: cache round-trip, measured stage-2, tuned execution.
+
+All nets here are tiny so interpret-mode measurement stays fast; dims above
+128 appear only where a non-default tile candidate must exist.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, contraction, csse, factorizations as F
+from repro.core import plan_compiler
+from repro.core.plan_compiler import TileConfig
+
+MEASURED = csse.SearchOptions(objective="measured", fused_chain=True)
+
+
+@pytest.fixture
+def tuner(tmp_path):
+    return autotune.Tuner(cache_dir=str(tmp_path))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo():
+    csse.clear_memo()
+    yield
+    csse.clear_memo()
+
+
+def _net(rank=4, batch=8):
+    fact = F.tt((4, 4), (4, 4), rank)
+    return fact.forward_network(batch_axes=(("b", batch),))
+
+
+def _inputs(net, seed=0):
+    shapes = [net.node_shape(i) for i in range(net.num_nodes)]
+    keys = jax.random.split(jax.random.key(seed), len(shapes))
+    return [jax.random.normal(k, s, jnp.float32) for k, s in zip(keys, shapes)]
+
+
+# -- cache ------------------------------------------------------------------
+
+
+def test_record_round_trip(tuner, tmp_path):
+    shape = autotune.StepShape("gemm", (8, 16, 4))
+    rec = tuner.record(shape)
+    assert rec.measured and rec.best_s > 0
+    assert tuner.stats["measured"] == 1
+
+    again = autotune.Tuner(cache_dir=str(tmp_path))
+    rec2 = again.record(shape)
+    assert again.stats == {"measured": 0, "disk_hits": 1, "memo_hits": 0, "skipped": 0}
+    assert rec2.best == rec.best
+    assert rec2.best_s == rec.best_s
+
+
+def test_memo_hit_within_process(tuner):
+    shape = autotune.StepShape("gemm", (8, 16, 4))
+    tuner.record(shape)
+    tuner.record(shape)
+    assert tuner.stats["measured"] == 1
+    assert tuner.stats["memo_hits"] == 1
+
+
+def test_size_guard_falls_back_to_analytic(tmp_path):
+    small = autotune.Tuner(cache_dir=str(tmp_path), max_measure_elems=10)
+    rec = small.record(autotune.StepShape("gemm", (64, 64, 64)))
+    assert not rec.measured
+    assert rec.latency_s == rec.analytic_s
+    assert small.stats["skipped"] == 1
+    assert list(tmp_path.iterdir()) == [], "skipped records stay memo-only"
+
+    bigger = autotune.Tuner(cache_dir=str(tmp_path))
+    rec2 = bigger.record(autotune.StepShape("gemm", (64, 64, 64)))
+    assert rec2.measured, "a larger budget must re-measure, not hit a skip"
+
+
+def test_candidate_truncation_is_block_m_balanced(tmp_path):
+    capped = autotune.Tuner(cache_dir=str(tmp_path), max_configs=6)
+    cands = capped._candidates(autotune.StepShape("gemm", (1024, 1024, 1024)))
+    assert len(cands) == 6
+    assert {t.block_m for t in cands} == {128, 256, 512}
+
+
+def test_signature_keys_on_shape_and_dtype(tuner):
+    a = tuner.signature(autotune.StepShape("gemm", (8, 16, 4)))
+    b = tuner.signature(autotune.StepShape("gemm", (8, 16, 5)))
+    c = tuner.signature(autotune.StepShape("gemm", (8, 16, 4), dtype="bfloat16"))
+    d = tuner.signature(autotune.StepShape("gemm", (8, 16, 4), transpose_rhs=True))
+    assert len({a, b, c, d}) == 4
+
+
+def test_corrupted_record_remeasures(tuner, tmp_path):
+    shape = autotune.StepShape("gemm", (8, 16, 4))
+    rec = tuner.record(shape)
+    sig = tuner.signature(shape)
+    (tmp_path / f"{sig}.json").write_text("{broken")
+
+    again = autotune.Tuner(cache_dir=str(tmp_path))
+    rec2 = again.record(shape)
+    assert again.stats["measured"] == 1
+    assert rec2.best == rec.best
+
+
+# -- compile_plan threading -------------------------------------------------
+
+
+def test_compile_plan_attaches_tiles(tuner):
+    net = _net()
+    plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
+    compiled = plan_compiler.compile_plan(plan, tuner=tuner, dtype="float32")
+    rep = compiled.report()
+    kernel_ops = rep["num_gemm"] + rep["num_chain"]
+    assert rep["tuned_ops"] == kernel_ops > 0
+    for op in compiled.ops:
+        if not isinstance(op, plan_compiler.EinsumOp):
+            assert isinstance(op.tiles, TileConfig)
+
+
+def test_nondefault_tile_wins_somewhere(tuner):
+    fact = F.tt((16, 16), (16, 16), 8)
+    net = fact.forward_network(batch_axes=(("b", 256),))
+    plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
+    compiled = plan_compiler.compile_plan(plan, tuner=tuner, dtype="float32")
+    rep = compiled.report()
+    assert rep["nondefault_tiles"] >= 1, compiled.describe()
+
+
+def test_tuned_execution_parity(tuner):
+    net = _net(batch=32)
+    plan = csse.search(net, csse.SearchOptions(objective="edp")).plan
+    arrays = _inputs(net)
+    want = contraction.execute(plan, arrays)
+    got = contraction.execute(plan, arrays, backend="pallas", tuner=tuner)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# -- measured stage-2 -------------------------------------------------------
+
+
+def test_measured_search_valid_and_warm(tuner, tmp_path):
+    net = _net(batch=32)
+    res = csse.search(net, MEASURED, tuner=tuner)
+    assert res.stats["stage2"] == "measured"
+    assert tuner.stats["measured"] > 0
+
+    warm = autotune.Tuner(cache_dir=str(tmp_path))
+    csse.clear_memo()
+    res2 = csse.search(net, MEASURED, tuner=warm)
+    assert warm.stats["measured"] == 0, "second invocation must be a 100% cache hit"
+    assert res2.tree == res.tree
+
+
+def test_plan_latency_positive_and_cached(tuner):
+    net = _net()
+    plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
+    lat = tuner.plan_latency(plan)
+    measured_before = tuner.stats["measured"]
+    lat2 = tuner.plan_latency(plan)
+    assert lat > 0
+    assert lat2 == lat
+    assert tuner.stats["measured"] == measured_before
+
+
+def test_calibrated_model_evaluate(tuner):
+    net = _net()
+    plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
+    model = autotune.CalibratedModel(tuner)
+    cost = model.evaluate(plan)
+    analytic = csse.perf_model.evaluate(plan, fused_chain=True)
+    assert cost.latency_s == pytest.approx(model.latency(plan))
+    assert cost.energy_j == analytic.energy_j
+    assert cost.flops == analytic.flops
+
+
+def test_compare_plan_rows(tuner):
+    net = _net()
+    plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
+    compiled, rows = autotune.compare_plan(tuner, plan)
+    assert len(rows) == len(compiled.ops)
+    for row in rows:
+        assert row["analytic_s"] > 0
+        if row["kind"] != "einsum":
+            assert row["measured_s"] > 0
+            assert row["ratio"] > 0
+
+
+# -- layer-level autotune ---------------------------------------------------
+
+
+def test_tensorized_layer_autotune_parity(tuner):
+    autotune.set_default_tuner(tuner)
+    try:
+        from repro.core.tensorized import TensorizedLinear
+
+        fact = F.tt((4, 4), (4, 4), 4)
+        opts = csse.SearchOptions(objective="edp", fused_chain=True)
+        ref = TensorizedLinear(fact=fact, opts=opts, compute_dtype=jnp.float32)
+        tuned = TensorizedLinear(
+            fact=fact,
+            opts=opts,
+            compute_dtype=jnp.float32,
+            backend="pallas",
+            autotune=True,
+        )
+        params = ref.init(jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (8, fact.N), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(tuned(params, x)),
+            np.asarray(ref(params, x)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+    finally:
+        autotune.set_default_tuner(None)
+
+
+def test_tnn_config_autotune_objective():
+    from repro.core.tensorized import TNNConfig
+
+    assert TNNConfig(autotune=True).search_options().objective == "measured"
+    assert TNNConfig().search_options().objective == "edp"

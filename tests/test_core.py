@@ -1,6 +1,5 @@
 """Core tensor-network / factorization / CSSE / TensorizedLinear tests."""
 
-import itertools
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,94 @@
+"""CSSE disk-cache behaviour: round-trip, invalidation, corruption recovery.
+
+The cache directory is resolved per call from ``REPRO_CSSE_CACHE`` (see
+``csse._cache_dir``), so each test points it at its own tmpdir and clears the
+in-process memo to force the disk path.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import csse, factorizations as F
+
+pytestmark = pytest.mark.usefixtures("fresh_cache")
+
+
+@pytest.fixture
+def fresh_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CSSE_CACHE", str(tmp_path))
+    csse.clear_memo()
+    yield tmp_path
+    csse.clear_memo()
+
+
+def _net():
+    fact = F.tt((4, 4), (4, 4), 4)
+    return fact.forward_network(batch_axes=(("b", 8),))
+
+
+def _cache_files(tmp_path):
+    return sorted(p for p in os.listdir(tmp_path) if p.endswith(".json"))
+
+
+OPTS = csse.SearchOptions(objective="edp")
+
+
+def test_round_trip(fresh_cache):
+    first = csse.search(_net(), OPTS)
+    assert first.stats.get("cache") is None
+    files = _cache_files(fresh_cache)
+    assert len(files) == 1
+
+    csse.clear_memo()
+    second = csse.search(_net(), OPTS)
+    assert second.stats.get("cache") == "disk"
+    assert second.tree == first.tree
+    assert second.plan.total_flops == first.plan.total_flops
+
+
+def test_invalidation_on_option_change(fresh_cache):
+    csse.search(_net(), OPTS)
+    assert len(_cache_files(fresh_cache)) == 1
+
+    csse.clear_memo()
+    other = csse.SearchOptions(objective="latency", num_candidates=4)
+    res = csse.search(_net(), other)
+    assert res.stats.get("cache") is None, "changed options must re-search"
+    assert len(_cache_files(fresh_cache)) == 2
+
+
+def test_corrupted_cache_file_recovers(fresh_cache):
+    first = csse.search(_net(), OPTS)
+    (path,) = _cache_files(fresh_cache)
+    full = os.path.join(fresh_cache, path)
+
+    bad_entries = (
+        "not json{",
+        '{"wrong": 1}',
+        '{"tree": [[0, 1], 99]}',
+        '{"tree": [[0, 1], "x"]}',
+        '{"tree": {"a": 1}}',
+    )
+    for garbage in bad_entries:
+        with open(full, "w") as f:
+            f.write(garbage)
+        csse.clear_memo()
+        res = csse.search(_net(), OPTS)
+        assert res.stats.get("cache") is None, garbage
+        assert res.tree == first.tree
+
+    with open(full) as f:
+        payload = json.load(f)
+    assert "tree" in payload, "fresh search must overwrite the bad entry"
+
+
+def test_measured_objective_skips_winner_cache(fresh_cache, tmp_path_factory):
+    from repro.core import autotune
+
+    tuner = autotune.Tuner(cache_dir=str(tmp_path_factory.mktemp("at")))
+    opts = csse.SearchOptions(objective="measured")
+    res = csse.search(_net(), opts, tuner=tuner)
+    assert res.stats.get("stage2") == "measured"
+    assert _cache_files(fresh_cache) == [], "measured winners are not disk-cached"
