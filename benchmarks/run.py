@@ -4,8 +4,9 @@ Every benchmark module's rows normalise to the shared machine-readable
 schema (``benchmarks/schema.py``: name, wall_s, fusion_hit_rate, device,
 git_sha, metrics); ``--json-dir`` writes one ``BENCH_<module>.json`` per
 module and ``--baseline`` gates wall_s regressions against a checked-in
-snapshot.  ``--smoke`` runs only the CPU-cheap modules (plan_compiler +
-autotune) — that is CI's bench-smoke job:
+snapshot.  ``--smoke`` runs only the CPU-cheap modules (plan_compiler,
+autotune, and sharded — the last on a fake 8-device mesh in a subprocess)
+— that is CI's bench-smoke job:
 
   PYTHONPATH=src python -m benchmarks.run --smoke --json-dir bench-out \\
       --baseline benchmarks/baselines/bench_smoke_baseline.json
@@ -80,6 +81,9 @@ def _autotune_records(rows):
         for r in rows]
 
 
+_sharded_records = _autotune_records   # same flat row shape
+
+
 def _suite(smoke: bool):
     """(title, module_name, records_adapter) per benchmark module.
 
@@ -91,6 +95,9 @@ def _suite(smoke: bool):
          "bench_plan_compiler", _plan_compiler_records),
         ("§IV+§VI-C measured autotuning (cold/warm tune + rerank)",
          "bench_autotune", _autotune_records),
+        ("§IV butterfly-analog SPMD: comm-aware vs comm-free CSSE "
+         "(fake 8-device mesh)",
+         "bench_sharded", _sharded_records),
     ]
     if not smoke:
         suite = [
@@ -113,8 +120,8 @@ def _suite(smoke: bool):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="CPU-cheap subset (plan_compiler + autotune) — "
-                         "CI's bench-smoke job")
+                    help="CPU-cheap subset (plan_compiler + autotune + "
+                         "sharded) — CI's bench-smoke job")
     ap.add_argument("--json-dir", default=None,
                     help="write BENCH_<module>.json files here")
     ap.add_argument("--baseline", default=None,

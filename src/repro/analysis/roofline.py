@@ -51,6 +51,21 @@ def _type_bytes(dtype: str, dims: str) -> int:
     return numel * nb
 
 
+def ring_allreduce_bytes(payload_bytes: int, num_devices: int) -> int:
+    """Per-device ICI bytes of a ring all-reduce over ``num_devices``.
+
+    Reduce-scatter + all-gather each move ``(n-1)/n`` of the payload per
+    device — the standard ``2(n-1)/n`` ring bound.  This is the analytic
+    collective term CSSE stage-2 charges for the deferred ``psum`` of a
+    sharded contraction (``repro.core.perf_model.collective_cost``); the
+    HLO-derived :func:`collective_bytes` below is its measured counterpart
+    (the dry-run cross-check that the model prices what XLA actually emits).
+    """
+    if num_devices <= 1:
+        return 0
+    return 2 * (num_devices - 1) * payload_bytes // num_devices
+
+
 _COLL_RE = re.compile(
     r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(-start|-done)?\(")
 

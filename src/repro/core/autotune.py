@@ -64,7 +64,10 @@ _DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
                                   "..", ".cache", "autotune")
 
 # Bump to invalidate every cached measurement (sweep or timing change).
-SWEEP_VERSION = 1
+# v2: device count entered the signature (multi-device hosts time kernels
+# under a different runtime than single-device ones; sharded runs must not
+# be served single-device entries).
+SWEEP_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +228,7 @@ class Tuner:
             "transpose_rhs": shape.transpose_rhs, "dtype": shape.dtype,
             "backend": jax.default_backend(),
             "device": jax.devices()[0].device_kind,
+            "num_devices": jax.device_count(),
             "interpret": self.interpret,
             "sweep": SWEEP_VERSION,
         }
@@ -438,18 +442,30 @@ class Tuner:
 
     def plan_latency(self, plan: ContractionPlan, *,
                      fused_chain: bool = True,
-                     dtype: str = "float32") -> float:
+                     dtype: str = "float32",
+                     mesh: perf_model.MeshSpec | None = None) -> float:
         """Total measured latency of a plan's compiled lowering.
 
         Steps the size guard skipped and einsum-fallback steps are charged
         at the analytic roofline — the "fall back to perf_model for
         unmeasured steps" contract of ``objective="measured"``.
+
+        With ``mesh``, compilation and measurement happen at the *per-shard*
+        step shapes every device actually runs (so tile winners and fuse
+        decisions are tuned for the sharded kernels), and the deferred-psum
+        collective term is added analytically — ICI transfers cannot be
+        timed on a single host, so communication stays model-priced exactly
+        as in :func:`perf_model.evaluate`, same byte convention included
+        (``hw.dtype_bytes``, like every HBM term in the model): the two
+        objectives must rank a given plan's collective identically.
         """
+        coll = perf_model.collective_cost(plan, mesh, self.hw)
+        plan = perf_model.localize_plan(plan, mesh)
         compiled = compile_plan(plan, fuse=fused_chain, tuner=self,
                                 dtype=dtype)
         sizes = plan.network.sizes
-        return sum(self.op_latency(op, sizes, dtype)[0]
-                   for op in compiled.ops)
+        return coll.latency_s + sum(self.op_latency(op, sizes, dtype)[0]
+                                    for op in compiled.ops)
 
 
 # ---------------------------------------------------------------------------
@@ -463,26 +479,33 @@ class CalibratedModel:
 
     ``evaluate`` mirrors :func:`perf_model.evaluate`'s shape: the returned
     :class:`perf_model.PlanCost` carries the *measured* latency (energy and
-    byte counts stay analytic — we do not measure joules).
+    byte counts stay analytic — we do not measure joules).  With ``mesh``
+    set, measured step costs come from the per-shard lowering and the
+    collective term is the analytic deferred-psum price — the
+    communication-aware ``objective="measured"``.
     """
 
     tuner: Tuner
     hw: perf_model.HardwareModel = perf_model.TPU_V5E
     dtype: str = "float32"
+    mesh: perf_model.MeshSpec | None = None
 
     def latency(self, plan: ContractionPlan,
                 fused_chain: bool = True) -> float:
         return self.tuner.plan_latency(plan, fused_chain=fused_chain,
-                                       dtype=self.dtype)
+                                       dtype=self.dtype, mesh=self.mesh)
 
     def evaluate(self, plan: ContractionPlan,
                  fused_chain: bool = True) -> perf_model.PlanCost:
         analytic = perf_model.evaluate(plan, self.hw,
-                                       fused_chain=fused_chain)
+                                       fused_chain=fused_chain,
+                                       mesh=self.mesh)
         return perf_model.PlanCost(
             latency_s=self.latency(plan, fused_chain=fused_chain),
             energy_j=analytic.energy_j, flops=analytic.flops,
-            bytes_hbm=analytic.bytes_hbm, steps=analytic.steps)
+            bytes_hbm=analytic.bytes_hbm, steps=analytic.steps,
+            bytes_ici=analytic.bytes_ici,
+            collective_s=analytic.collective_s)
 
 
 # ---------------------------------------------------------------------------

@@ -65,7 +65,9 @@ def _einsum_step(step: ContractionStep, lhs: jax.Array, rhs: jax.Array,
 def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             accum_dtype=jnp.float32, out_dtype=None,
             backend: str = "einsum", fused_chain: bool = True,
-            interpret: bool | None = None, tuner=None) -> jax.Array:
+            interpret: bool | None = None, tuner=None,
+            mesh=None, in_specs=None,
+            mesh_batch_axes=None) -> jax.Array:
     """Run the plan over concrete arrays (one per network node, in order).
 
     ``backend="einsum"`` lowers each step to ``jnp.einsum`` (reference
@@ -76,6 +78,18 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
     off-TPU).  ``tuner`` (a :class:`repro.core.autotune.Tuner`) makes the
     pallas backend compile with measured tile choices and fuse decisions
     instead of the fixed 128-tile defaults.  einsum ignores all three knobs.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) switches to SPMD execution through
+    ``shard_map``: operands are laid out per ``in_specs`` (one
+    ``PartitionSpec`` per input node; default layout from
+    :func:`repro.distributed.sharding.plan_axis_sharding` — batch-parallel
+    ``b``, overridable via ``mesh_batch_axes``), every device runs the
+    per-shard plan on either backend, and mesh axes that split a contracted
+    network axis are reduced with one deferred ``psum`` of the (smallest)
+    output-shaped partials — the collective analog of FETTA's butterfly
+    distribution/reduction networks (``docs/SHARDING.md``).  When nothing
+    shards (degenerate mesh, non-dividing batch) the call falls through to
+    the single-device path unchanged.
     """
     assert backend in ("einsum", "pallas"), f"unknown backend {backend!r}"
     net = plan.network
@@ -86,6 +100,17 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             f"got {tuple(t.shape)}")
     if out_dtype is None:
         out_dtype = tensors[0].dtype
+
+    if mesh is not None:
+        from repro.distributed import sharding as _shlib
+        sharded = _shlib.shard_plan(plan, mesh, in_specs=in_specs,
+                                    batch_axes=mesh_batch_axes)
+        if sharded is not None:
+            return _execute_sharded(sharded, mesh, tensors,
+                                    accum_dtype=accum_dtype,
+                                    out_dtype=out_dtype, backend=backend,
+                                    fused_chain=fused_chain,
+                                    interpret=interpret, tuner=tuner)
 
     if backend == "pallas":
         from repro.core import plan_compiler
@@ -116,6 +141,53 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             perm = tuple(last_axes.index(a) for a in net.output)
             out = jnp.transpose(out, perm)
     return out.astype(out_dtype)
+
+
+def _execute_sharded(sharded, mesh, tensors: Sequence[jax.Array], *,
+                     accum_dtype, out_dtype, backend: str,
+                     fused_chain: bool, interpret: bool | None,
+                     tuner) -> jax.Array:
+    """SPMD dispatch of a :class:`~repro.distributed.sharding.ShardedPlan`.
+
+    Each device executes the localized plan (Pallas plans compile *once*
+    against the per-shard step shapes, so autotuned tiles are keyed on the
+    dims that actually run); shards of a contracted sharded axis hold
+    partial sums, kept in ``accum_dtype`` until the single deferred ``psum``
+    so the cross-device reduction matches the in-device f32 accumulation.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    local_plan = sharded.local_plan
+    inner_dtype = accum_dtype if sharded.psum_axes else out_dtype
+    if backend == "pallas":
+        from repro.core import plan_compiler
+        compiled = plan_compiler.compile_plan(
+            local_plan, fuse=fused_chain, tuner=tuner,
+            dtype=jnp.dtype(tensors[0].dtype).name,
+            mesh_factors=sharded.factors)
+
+        def run_local(ts):
+            return plan_compiler.run(compiled, ts,
+                                     accum_dtype=accum_dtype,
+                                     out_dtype=inner_dtype,
+                                     interpret=interpret)
+    else:
+        def run_local(ts):
+            return execute(local_plan, ts, accum_dtype=accum_dtype,
+                           out_dtype=inner_dtype, backend="einsum",
+                           fused_chain=fused_chain)
+
+    def per_shard(*local_tensors):
+        out = run_local(list(local_tensors))
+        if sharded.psum_axes:
+            out = jax.lax.psum(out, sharded.psum_axes)
+        return out.astype(out_dtype)
+
+    # check_rep=False: the Pallas interpret path has no replication rule,
+    # and the psum above is what (re-)establishes replication anyway.
+    fn = shard_map(per_shard, mesh=mesh, in_specs=sharded.in_specs,
+                   out_specs=sharded.out_spec, check_rep=False)
+    return fn(*tensors)
 
 
 def _used_later(plan: ContractionPlan, current: ContractionStep, slot: int

@@ -73,6 +73,12 @@ class SearchOptions:
                                       # the tuner times (match the executor's
                                       # compute dtype so rankings and tile
                                       # caches describe what actually runs)
+    mesh: perf_model.MeshSpec | None = None
+                                      # communication-aware stage 2: rank by
+                                      # per-device compute+memory at sharded
+                                      # step shapes plus the deferred-psum
+                                      # collective term (both analytic and
+                                      # measured objectives)
 
 
 @dataclass
@@ -321,8 +327,13 @@ def _signature(net: TensorNetwork, opts: SearchOptions,
         "opts": (opts.objective, opts.num_candidates, opts.engine,
                  opts.dfs_max_nodes, opts.fused_chain, opts.allow_outer,
                  opts.anchor_input, opts.measure_dtype),
+        # Mesh shape, per-axis sharding, device kind and device count all
+        # enter the key: a winner ranked for one mesh (or for single-device)
+        # must never be served from disk for another.
+        "mesh": (None if opts.mesh is None
+                 else opts.mesh.signature_payload()),
         "hw": (hw.name, hw.peak_flops, hw.hbm_bw, hw.dtype_bytes,
-               hw.step_overhead_s),
+               hw.step_overhead_s, hw.ici_bw),
     }
     return hashlib.sha256(json.dumps(payload, default=str).encode()).hexdigest()
 
@@ -384,7 +395,7 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
         from repro.core import autotune
         measured_model = autotune.CalibratedModel(
             tuner or autotune.default_tuner(), hw,
-            dtype=opts.measure_dtype)
+            dtype=opts.measure_dtype, mesh=opts.mesh)
 
     def stage2_metric(plan: ContractionPlan,
                       cost: perf_model.PlanCost) -> float:
@@ -400,7 +411,8 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
 
     if net.num_nodes == 1:
         plan = plan_from_tree(net, 0)
-        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain)
+        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain,
+                                   mesh=opts.mesh)
         res = SearchResult(0, plan, cost, [(0, 0)], [(0.0, 0)], {})
         _MEMO[sig] = res
         return res
@@ -410,7 +422,8 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
         if cached_tree is not None:
             plan = plan_from_tree(net, cached_tree)
             cost = perf_model.evaluate(plan, hw,
-                                       fused_chain=opts.fused_chain)
+                                       fused_chain=opts.fused_chain,
+                                       mesh=opts.mesh)
             res = SearchResult(cached_tree, plan, cost,
                                [(plan.total_flops, cached_tree)],
                                [(cost.metric(opts.objective), cached_tree)],
@@ -439,7 +452,8 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
     scored: list[tuple[float, TreeT, ContractionPlan, perf_model.PlanCost]] = []
     for flops, tree in candidates:
         plan = plan_from_tree(net, tree)
-        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain)
+        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain,
+                                   mesh=opts.mesh)
         scored.append((stage2_metric(plan, cost), tree, plan, cost))
     scored.sort(key=lambda x: x[0])
     best_metric, tree, plan, cost = scored[0]
@@ -462,10 +476,11 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
 
 def fixed_plan(net: TensorNetwork, tree: TreeT,
                hw: perf_model.HardwareModel = perf_model.TPU_V5E,
-               fused_chain: bool = False) -> SearchResult:
+               fused_chain: bool = False,
+               mesh: perf_model.MeshSpec | None = None) -> SearchResult:
     """Wrap a hard-coded sequence (prior-work baselines) as a SearchResult."""
     plan = plan_from_tree(net, tree)
-    cost = perf_model.evaluate(plan, hw, fused_chain=fused_chain)
+    cost = perf_model.evaluate(plan, hw, fused_chain=fused_chain, mesh=mesh)
     return SearchResult(tree, plan, cost, [(plan.total_flops, tree)],
                         [(cost.metric("edp"), tree)], {"engine": "fixed"})
 

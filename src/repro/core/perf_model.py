@@ -30,8 +30,13 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Mapping
 
-from repro.core.tnetwork import ContractionPlan, ContractionStep
+from repro.analysis.roofline import ring_allreduce_bytes
+from repro.core.tnetwork import (
+    AxisId, ContractionPlan, ContractionStep, TensorNetwork, localize_network,
+    plan_from_tree,
+)
 
 
 @dataclass(frozen=True)
@@ -80,6 +85,128 @@ FETTA_EDGE = HardwareModel(
 )
 
 
+# ---------------------------------------------------------------------------
+# Mesh spec — the pure-Python mirror of a jax device mesh
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """How a contraction network is laid out over a device mesh, for costing.
+
+    A hashable, jax-free mirror of (jax Mesh, per-axis sharding intent) so
+    CSSE searches stay pure-Python at trace time and memoise correctly:
+
+    * ``axes`` — the mesh shape as ordered ``(name, size)`` pairs.
+    * ``axis_sharding`` — network axis label -> the mesh axes it splits over
+      (e.g. ``(("b", ("data",)),)`` for batch-parallel FP/BP and
+      contraction-split WG — the butterfly-distribution analog).
+    * ``device_kind`` — provenance tag; enters every disk-cache signature so
+      single-device entries can never be served for sharded runs.
+
+    Build one from a live mesh with
+    :func:`repro.distributed.sharding.mesh_spec`.
+    """
+
+    axes: tuple[tuple[str, int], ...]
+    axis_sharding: tuple[tuple[AxisId, tuple[str, ...]], ...] = ()
+    device_kind: str = "unknown"
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(s for _, s in self.axes)
+
+    def mesh_size(self, names: tuple[str, ...]) -> int:
+        shape = dict(self.axes)
+        return math.prod(shape.get(n, 1) for n in names)
+
+    def factor(self, axis: AxisId, sizes: Mapping[AxisId, int]) -> int:
+        """Ways ``axis`` is split, honouring the divisibility guard the
+        executor applies (non-dividing splits are dropped, not errors)."""
+        for a, mesh_axes in self.axis_sharding:
+            if a == axis:
+                p = self.mesh_size(mesh_axes)
+                if p > 1 and sizes.get(axis, 0) % p == 0:
+                    return p
+        return 1
+
+    def factors(self, net: TensorNetwork) -> dict[AxisId, int]:
+        return {a: self.factor(a, net.sizes) for a, _ in self.axis_sharding
+                if a in net.sizes}
+
+    def signature_payload(self) -> tuple:
+        """Hash-stable tuple for disk-cache keys (csse/autotune)."""
+        return (self.axes, self.axis_sharding, self.device_kind,
+                self.num_devices)
+
+
+def localize_plan(plan: ContractionPlan, mesh: MeshSpec | None
+                  ) -> ContractionPlan:
+    """The per-shard plan: same contraction tree, sharded axes scaled down.
+
+    This is exactly what every device executes under
+    ``contraction.execute(..., mesh=...)`` — the executor and the cost model
+    lower through the same function so stage-2 prices real shard shapes.
+    """
+    if mesh is None:
+        return plan
+    factors = mesh.factors(plan.network)
+    if all(p == 1 for p in factors.values()):
+        return plan
+    local = localize_network(plan.network, factors)
+    if not plan.steps:
+        return ContractionPlan(network=local, steps=(), tree=plan.tree)
+    return plan_from_tree(local, plan.tree)
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    """The communication half of a sharded plan's cost."""
+
+    bytes_ici: int
+    latency_s: float
+    psum_devices: int          # devices participating in the final psum
+
+
+def collective_cost(plan: ContractionPlan, mesh: MeshSpec | None,
+                    hw: "HardwareModel") -> CollectiveCost:
+    """Price the deferred ``psum`` a sharded execution performs.
+
+    The executor keeps partial sums device-local until the whole local plan
+    has run (multilinearity makes that exact) and then all-reduces the
+    *output*-shaped partials over every mesh axis that split a contracted
+    network axis — the butterfly-reduction analog.  Ring all-reduce bytes
+    over the per-shard output, at ICI bandwidth, plus one dispatch overhead.
+    Phase networks whose sharded axes all survive into the output (FP/BP
+    batch parallelism) cost nothing here.
+
+    The payload is priced at ``hw.dtype_bytes`` — the same storage-dtype
+    convention as every HBM term in this model (the executor actually psums
+    in f32; rankings only need terms consistent *with each other*, and the
+    measured objective charges this same function so the two can never
+    rank one plan's collective differently).
+    """
+    if mesh is None:
+        return CollectiveCost(0, 0.0, 1)
+    net = plan.network
+    out_set = set(net.output)
+    psum = 1
+    for a, _ in mesh.axis_sharding:
+        if a in net.sizes and a not in out_set:
+            psum *= mesh.factor(a, net.sizes)
+    if psum <= 1:
+        return CollectiveCost(0, 0.0, 1)
+    factors = mesh.factors(net)
+    local_out = 1
+    for a in net.output:
+        local_out *= net.sizes[a] // factors.get(a, 1)
+    nbytes = local_out * hw.dtype_bytes
+    moved = ring_allreduce_bytes(nbytes, psum)
+    return CollectiveCost(bytes_ici=moved,
+                          latency_s=moved / hw.ici_bw + hw.step_overhead_s,
+                          psum_devices=psum)
+
+
 @dataclass(frozen=True)
 class StepCost:
     flops: int
@@ -93,13 +220,18 @@ class StepCost:
 
 @dataclass(frozen=True)
 class PlanCost:
-    """Aggregate cost of a :class:`ContractionPlan` on one chip."""
+    """Aggregate cost of a :class:`ContractionPlan` on one chip — or, with a
+    :class:`MeshSpec`, the *per-device* cost of the sharded execution
+    (``latency_s`` then includes ``collective_s``, the deferred-psum term).
+    """
 
     latency_s: float
     energy_j: float
     flops: int
     bytes_hbm: int
     steps: tuple[StepCost, ...] = field(repr=False, default=())
+    bytes_ici: int = 0
+    collective_s: float = 0.0
 
     @property
     def edp(self) -> float:
@@ -131,6 +263,7 @@ class PlanCost:
             "edp": self.edp,
             "flops": float(self.flops),
             "memory": float(self.bytes_hbm),
+            "collective": float(self.bytes_ici),
         }[objective]
 
 
@@ -156,13 +289,23 @@ def evaluate_step(step: ContractionStep, sizes, hw: HardwareModel,
 
 
 def evaluate(plan: ContractionPlan, hw: HardwareModel = TPU_V5E,
-             fused_chain: bool = False) -> PlanCost:
+             fused_chain: bool = False,
+             mesh: MeshSpec | None = None) -> PlanCost:
     """Cost a full contraction plan.
 
     With ``fused_chain``, an intermediate consumed by the next step and small
     enough for VMEM residency skips its HBM write+read (Pallas fused
     execution / FETTA butterfly analogue).
+
+    With ``mesh``, the returned cost is *per device* of the SPMD execution:
+    every step is priced at its per-shard dims (sharded axes scaled by their
+    mesh factors — steps where no sharded axis is live run at full size on
+    every device), and the deferred psum over contracted sharded axes adds
+    ``collective_s`` / ``bytes_ici`` (ring all-reduce at ICI bandwidth).
+    This is CSSE stage-2's communication-aware objective.
     """
+    coll = collective_cost(plan, mesh, hw)
+    plan = localize_plan(plan, mesh)
     sizes = plan.network.sizes
     num_inputs = plan.network.num_nodes
     resident: set[int] = set()   # slots currently living in VMEM only
@@ -185,7 +328,9 @@ def evaluate(plan: ContractionPlan, hw: HardwareModel = TPU_V5E,
         step_costs.append(evaluate_step(step, sizes, hw, read, write))
     flops = sum(s.flops for s in step_costs)
     bytes_hbm = sum(s.bytes_hbm for s in step_costs)
-    latency = sum(s.latency_s for s in step_costs)
-    energy = flops * hw.e_flop + bytes_hbm * hw.e_hbm_byte
+    latency = sum(s.latency_s for s in step_costs) + coll.latency_s
+    energy = (flops * hw.e_flop + bytes_hbm * hw.e_hbm_byte
+              + coll.bytes_ici * hw.e_ici_byte)
     return PlanCost(latency_s=latency, energy_j=energy, flops=flops,
-                    bytes_hbm=bytes_hbm, steps=tuple(step_costs))
+                    bytes_hbm=bytes_hbm, steps=tuple(step_costs),
+                    bytes_ici=coll.bytes_ici, collective_s=coll.latency_s)

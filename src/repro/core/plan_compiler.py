@@ -249,10 +249,19 @@ def _try_fuse(plan: ContractionPlan, g1: GemmOp, g2: GemmOp,
 
 @dataclass(frozen=True)
 class CompiledPlan:
-    """A :class:`ContractionPlan` lowered to kernel dispatches."""
+    """A :class:`ContractionPlan` lowered to kernel dispatches.
+
+    ``mesh_factors`` is set when the plan being compiled is the *per-shard*
+    view of an SPMD execution (``contraction.execute(..., mesh=...)``):
+    ``((axis, ways), ...)`` recording how each sharded network axis was
+    split.  The lowering itself is identical either way — every device runs
+    these ops on its shard — but the report keeps the provenance visible so
+    fusion/tile statistics are never mistaken for single-device ones.
+    """
 
     plan: ContractionPlan
     ops: tuple[LoweredOp, ...]
+    mesh_factors: tuple[tuple[AxisId, int], ...] | None = None
 
     def report(self) -> dict:
         """Lowering summary — what the compiler actually did with the plan."""
@@ -278,6 +287,8 @@ class CompiledPlan:
             "nondefault_tiles": sum(
                 op.tiles is not None and op.tiles != TileConfig()
                 for op in self.ops if not isinstance(op, EinsumOp)),
+            "mesh_factors": (None if self.mesh_factors is None
+                             else dict(self.mesh_factors)),
         }
 
     def describe(self) -> str:
@@ -303,7 +314,8 @@ class CompiledPlan:
 
 def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                  vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
-                 tuner=None, dtype: str = "float32") -> CompiledPlan:
+                 tuner=None, dtype: str = "float32",
+                 mesh_factors=None) -> CompiledPlan:
     """Lower every step; then (unless ``fuse=False``, the ablation CSSE
     stage-2 prices as ``fused_chain=False``) fuse eligible adjacent GEMM
     pairs.  ``vmem_budget`` may only tighten fusion: ``chain_pallas`` itself
@@ -315,7 +327,12 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     its cached best :class:`TileConfig`, and a structurally-fusable pair is
     only fused when the measured chain beats the measured two-GEMM split
     (unmeasured shapes keep the structural default).  ``dtype`` is the
-    operand dtype name the measurements are keyed under."""
+    operand dtype name the measurements are keyed under.
+
+    ``mesh_factors`` tags the result as a per-shard lowering (see
+    :class:`CompiledPlan`); pass the localized plan — tile sweeps, fusion
+    VMEM checks and measured fuse decisions then all happen at the shard
+    shapes each device dispatches."""
     vmem_budget = min(vmem_budget, CHAIN_VMEM_BUDGET_BYTES)
     lowered: list[LoweredOp] = []
     for step in plan.steps:
@@ -330,8 +347,11 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                                          transpose_rhs=mat.transpose_rhs,
                                          dtype=dtype)
             lowered.append(GemmOp(step=step, mat=mat, tiles=tiles))
+    if mesh_factors is not None:
+        mesh_factors = tuple(mesh_factors)
     if not fuse:
-        return CompiledPlan(plan=plan, ops=tuple(lowered))
+        return CompiledPlan(plan=plan, ops=tuple(lowered),
+                            mesh_factors=mesh_factors)
 
     fused: list[LoweredOp] = []
     i = 0
@@ -357,7 +377,8 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                 continue
         fused.append(a)
         i += 1
-    return CompiledPlan(plan=plan, ops=tuple(fused))
+    return CompiledPlan(plan=plan, ops=tuple(fused),
+                        mesh_factors=mesh_factors)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import lru_cache, partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -51,18 +52,39 @@ class TNNConfig:
     num_blocks: int = 2                   # BT only
     backend: str = "einsum"               # contraction executor: einsum|pallas
     autotune: bool = False                # measured stage-2 + tuned tiles
+    mesh: Any = None                      # jax Mesh: SPMD contraction exec
+                                          # (runtime-injected by the trainer,
+                                          # never a checked-in config value)
+    mesh_axes: tuple[str, ...] | None = None
+                                          # mesh axes the contraction batch
+                                          # shards over (None = pod+data;
+                                          # `train --tnn-mesh data,model`)
 
     def search_options(self, compute_dtype=None) -> csse.SearchOptions:
         # Autotuning swaps the analytic stage-2 objective for measured step
         # costs (repro.core.autotune); the executor side additionally gets
         # tuned tile configs when backend == "pallas".  measure_dtype
         # follows the layer's compute dtype so the tuner times (and caches)
-        # exactly the kernels the executor will run.
+        # exactly the kernels the executor will run.  With a mesh attached,
+        # stage 2 turns communication-aware: SearchOptions.mesh carries the
+        # pure MeshSpec mirror so the per-phase searches rank sequences by
+        # per-device compute+memory plus the deferred-psum collective term
+        # on exactly the mesh the executor will shard over.
         objective = "measured" if self.autotune else self.objective
         dtype = jnp.dtype(compute_dtype or jnp.bfloat16).name
         return csse.SearchOptions(objective=objective,
                                   fused_chain=self.fused_chain,
-                                  measure_dtype=dtype)
+                                  measure_dtype=dtype,
+                                  mesh=self.mesh_spec())
+
+    def mesh_spec(self):
+        """The costing MeshSpec for this config's mesh (None off-mesh)."""
+        if self.mesh is None:
+            return None
+        from repro.distributed import sharding as shlib
+        axes = shlib.resolve_batch_axes(self.mesh, self.mesh_axes)
+        return shlib.mesh_spec(
+            self.mesh, {shlib.CONTRACTION_BATCH_AXIS: axes} if axes else {})
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +199,7 @@ def layer_cost(fact: Factorization, batch: int,
     fp, bp, (wg_kind, dw, wg) = _plans(fact, batch, opts, hw)
     results = ([dw] if wg_kind == "shared" else []) + list(wg)
     ev = lambda r: perf_model.evaluate(  # noqa: E731
-        r.plan, hw, fused_chain=opts.fused_chain)
+        r.plan, hw, fused_chain=opts.fused_chain, mesh=opts.mesh)
     fp_c, bp_c = ev(fp), ev(bp)
     wg_cs = [ev(r) for r in results]
     return {"fp": fp_c, "bp": bp_c,
@@ -185,7 +207,9 @@ def layer_cost(fact: Factorization, batch: int,
                 latency_s=sum(c.latency_s for c in wg_cs),
                 energy_j=sum(c.energy_j for c in wg_cs),
                 flops=sum(c.flops for c in wg_cs),
-                bytes_hbm=sum(c.bytes_hbm for c in wg_cs))}
+                bytes_hbm=sum(c.bytes_hbm for c in wg_cs),
+                bytes_ici=sum(c.bytes_ici for c in wg_cs),
+                collective_s=sum(c.collective_s for c in wg_cs))}
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +229,8 @@ class TensorizedLinear:
     compute_dtype: jnp.dtype = jnp.bfloat16
     backend: str = "einsum"              # plan executor: einsum|pallas
     autotune: bool = False               # tuned tiles on the pallas executor
+    mesh: Any = None                     # jax Mesh: shard_map every phase
+    mesh_axes: tuple[str, ...] | None = None   # batch-axis mesh targets
 
     # -- params -------------------------------------------------------------
 
@@ -230,6 +256,7 @@ class TensorizedLinear:
         """Reconstruct W[M, N] (tests / export / Scheme-2 baseline)."""
         net = self.fact.weight_network()
         res = csse.search(net, self.opts)
+        # No mesh: the weight network has no batch axis to distribute.
         w = contraction.execute(res.plan, [c.astype(jnp.float32)
                                            for c in params["cores"]],
                                 backend=self.backend,
@@ -248,13 +275,16 @@ class TensorizedLinear:
         cores = tuple(c.astype(self.compute_dtype) for c in params["cores"])
         if self.phase_paths:
             y = _tnn_apply(self.fact, self.opts, self.backend,
-                           self.autotune, xt, *cores)
+                           self.autotune, self.mesh, self.mesh_axes,
+                           xt, *cores)
         else:
             fp, _, _ = _plans(self.fact, batch, self.opts)
             y = contraction.execute(fp.plan, [xt, *cores],
                                     backend=self.backend,
                                     fused_chain=self.opts.fused_chain,
-                                    tuner=self._tuner())
+                                    tuner=self._tuner(),
+                                    mesh=self.mesh,
+                                    mesh_batch_axes=self.mesh_axes)
         y = y.reshape(tuple(lead) + (self.fact.M,))
         if self.use_bias:
             y = y + params["bias"].astype(self.compute_dtype)
@@ -262,10 +292,12 @@ class TensorizedLinear:
 
 
 # custom_vjp core: functional over (x, *cores) so jax sees the cores as
-# differentiable leaves.  fact/opts/backend/autotune are static (nondiff)
-# arguments; backend routes every phase plan (FP here, BP/WG in the bwd
-# rule) through the einsum reference or the Pallas plan compiler, and
-# autotune swaps the compiler's fixed tile defaults for measured winners.
+# differentiable leaves.  fact/opts/backend/autotune/mesh are static
+# (nondiff) arguments; backend routes every phase plan (FP here, BP/WG in
+# the bwd rule) through the einsum reference or the Pallas plan compiler,
+# autotune swaps the compiler's fixed tile defaults for measured winners,
+# and mesh shard_maps every phase: FP/BP batch-parallel, WG/dW
+# contraction-split with the deferred-psum gradient reduction.
 
 
 def _exec_tuner(backend: str, autotune_flag: bool):
@@ -275,46 +307,46 @@ def _exec_tuner(backend: str, autotune_flag: bool):
     return autotune.default_tuner()
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
 def _tnn_apply(fact: Factorization, opts: csse.SearchOptions, backend: str,
-               autotune_flag: bool, x: jax.Array, *cores: jax.Array
-               ) -> jax.Array:
+               autotune_flag: bool, mesh, mesh_axes,
+               x: jax.Array, *cores: jax.Array) -> jax.Array:
     fp, _, _ = _plans(fact, x.shape[0], opts)
     return contraction.execute(fp.plan, [x, *cores], backend=backend,
                                fused_chain=opts.fused_chain,
-                               tuner=_exec_tuner(backend, autotune_flag))
+                               tuner=_exec_tuner(backend, autotune_flag),
+                               mesh=mesh, mesh_batch_axes=mesh_axes)
 
 
-def _tnn_fwd(fact, opts, backend, autotune_flag, x, *cores):
-    y = _tnn_apply(fact, opts, backend, autotune_flag, x, *cores)
+def _tnn_fwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, x, *cores):
+    y = _tnn_apply(fact, opts, backend, autotune_flag, mesh, mesh_axes,
+                   x, *cores)
     return y, (x, cores)
 
 
-def _tnn_bwd(fact, opts, backend, autotune_flag, res, dy):
+def _tnn_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, res, dy):
     x, cores = res
     batch = x.shape[0]
     _, bp, (wg_kind, dw_res, wg) = _plans(fact, batch, opts)
     tuner = _exec_tuner(backend, autotune_flag)
+    exec_kw = dict(backend=backend, fused_chain=opts.fused_chain,
+                   tuner=tuner, mesh=mesh, mesh_batch_axes=mesh_axes)
     dy = dy.astype(x.dtype)
-    dx = contraction.execute(bp.plan, [dy, *cores], backend=backend,
-                             fused_chain=opts.fused_chain, tuner=tuner)
+    dx = contraction.execute(bp.plan, [dy, *cores], **exec_kw)
     dcores = []
     if wg_kind == "shared":
-        dw = contraction.execute(dw_res.plan, [x, dy], backend=backend,
-                                 fused_chain=opts.fused_chain, tuner=tuner)
+        dw = contraction.execute(dw_res.plan, [x, dy], **exec_kw)
         for i, w in enumerate(wg):
             others = tuple(c for j, c in enumerate(cores) if j != i)
+            # The wg-from-dW networks have no batch axis left: mesh execution
+            # degenerates to the single-device path (dW was already reduced).
             dcores.append(contraction.execute(w.plan, [dw, *others],
-                                              backend=backend,
-                                              fused_chain=opts.fused_chain,
-                                              tuner=tuner))
+                                              **exec_kw))
     else:
         for i, w in enumerate(wg):
             others = tuple(c for j, c in enumerate(cores) if j != i)
             dcores.append(contraction.execute(w.plan, [x, dy, *others],
-                                              backend=backend,
-                                              fused_chain=opts.fused_chain,
-                                              tuner=tuner))
+                                              **exec_kw))
     return (dx, *dcores)
 
 
@@ -340,4 +372,6 @@ def make_tensorized_linear(out_features: int, in_features: int,
                             param_dtype=param_dtype,
                             compute_dtype=compute_dtype,
                             backend=tnn.backend,
-                            autotune=tnn.autotune)
+                            autotune=tnn.autotune,
+                            mesh=tnn.mesh,
+                            mesh_axes=tnn.mesh_axes)

@@ -317,6 +317,31 @@ def plan_from_tree(network: TensorNetwork, tree: TreeT) -> ContractionPlan:
     return ContractionPlan(network=network, steps=tuple(steps), tree=tree)
 
 
+def localize_network(network: TensorNetwork,
+                     factors: Mapping[AxisId, int]) -> TensorNetwork:
+    """The per-shard view of a network whose axes are split SPMD-style.
+
+    ``factors[a] = p`` divides axis ``a``'s size by ``p`` (each device holds
+    one of ``p`` equal blocks).  Node orders, axis labels and the output
+    signature are unchanged, so any contraction tree of the global network is
+    a valid tree of the local one — ``plan_from_tree(localize_network(net,
+    f), tree)`` is the plan every shard executes.  Axes missing from
+    ``factors`` (or mapped to 1) are replicated.  Non-divisible splits are a
+    caller bug (the sharding rules guard divisibility before building
+    factors), asserted here rather than silently mis-sized.
+    """
+    sizes = dict(network.sizes)
+    for a, p in factors.items():
+        if a not in sizes or p <= 1:
+            continue
+        assert sizes[a] % p == 0, (
+            f"axis {a!r} of size {sizes[a]} does not divide by {p}")
+        sizes[a] = sizes[a] // p
+    return TensorNetwork(sizes=sizes, nodes=network.nodes,
+                         node_names=network.node_names,
+                         output=network.output)
+
+
 def sequence_to_tree(pairs: Sequence[tuple[int, int]], num_nodes: int) -> TreeT:
     """Convert a paper-style merge sequence [(i,j), ...] into a tree.
 

@@ -1,6 +1,6 @@
 """Logical-axis sharding rules -> concrete NamedShardings.
 
-Two surfaces:
+Three surfaces:
 
 * **Activations** — models call ``shard(x, logical_axes)``;
   :func:`make_sharder` resolves each logical name through the rules table
@@ -15,6 +15,16 @@ Two surfaces:
   (small) TNN cores.  ``fsdp=True`` additionally shards the largest
   remaining dim of large params over ``data`` (ZeRO-3 style).
 
+* **Contraction plans** — :func:`shard_plan` lays a CSSE
+  ``ContractionPlan`` out over the mesh for SPMD execution
+  (``contraction.execute(..., mesh=...)``): per input node a
+  ``PartitionSpec`` derived from which *network* axes are split
+  (batch-parallel ``b`` for FP/BP, contraction-split ``b`` + deferred
+  ``psum`` for WG — the mesh-collective analog of FETTA's butterfly
+  distribution/reduction networks, see ``docs/SHARDING.md``), plus the
+  matching per-shard plan and the pure :class:`~repro.core.perf_model.
+  MeshSpec` the communication-aware CSSE stage-2 costs it with.
+
 Mesh axis names: ``("data", "model")`` single-pod, ``("pod", "data",
 "model")`` multi-pod; ``pod`` is outer data parallelism (hierarchical
 gradient reduction).
@@ -22,10 +32,14 @@ gradient reduction).
 
 from __future__ import annotations
 
-from typing import Any, Optional
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import perf_model
+from repro.core.tnetwork import AxisId, ContractionPlan, TensorNetwork
 
 
 # Logical activation axis -> mesh axis (tuple = combined axes).
@@ -237,3 +251,175 @@ def cache_specs(cache: Any, mesh: Mesh) -> Any:
         return P(*parts)
 
     return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+# ---------------------------------------------------------------------------
+# Contraction-plan sharding (SPMD execution of CSSE plans)
+# ---------------------------------------------------------------------------
+
+#: The network axis every phase network (FP/BP/WG/dW) uses for the token
+#: batch — the one axis the default rules distribute.  FP/BP keep it in the
+#: output (pure batch parallelism, no collective); the WG and dW networks
+#: contract it, so their shards hold partial sums that a deferred ``psum``
+#: reduces — the butterfly-reduction analog.
+CONTRACTION_BATCH_AXIS: AxisId = "b"
+
+
+def _part(axes: tuple[str, ...]):
+    return axes if len(axes) > 1 else axes[0]
+
+
+def resolve_batch_axes(mesh: Mesh,
+                       batch_axes: Sequence[str] | None = None
+                       ) -> tuple[str, ...]:
+    """Mesh axes the contraction batch axis distributes over.
+
+    ``batch_axes`` overrides the activation rules table's
+    ``DEFAULT_RULES["batch"]`` (``pod``+``data``); either way the result is
+    filtered to axes the mesh actually has.  The single source of truth for
+    both the executor layout (:func:`plan_axis_sharding`) and the CSSE cost
+    mirror (``TNNConfig.mesh_spec``) — they must never disagree.
+    """
+    want = tuple(batch_axes) if batch_axes else DEFAULT_RULES["batch"]
+    return _axes_in(mesh, want)
+
+
+def plan_axis_sharding(net: TensorNetwork, mesh: Mesh | None,
+                       batch_axes: Sequence[str] | None = None
+                       ) -> dict[AxisId, tuple[str, ...]]:
+    """Default network-axis -> mesh-axes assignment for a contraction plan.
+
+    Reuses the activation rules table: the batch axis ``b`` distributes over
+    ``DEFAULT_RULES["batch"]`` (``pod``+``data``) unless ``batch_axes``
+    overrides the target (``train --tnn-mesh data,model`` lands here).  The
+    same divisibility guard as :func:`make_sharder` applies — an axis the
+    mesh cannot split evenly is replicated, never an error — so one layer
+    code path serves every (mesh, batch) combination.
+    """
+    if mesh is None:
+        return {}
+    axes = resolve_batch_axes(mesh, batch_axes)
+    size = _mesh_size(mesh, axes)
+    b = CONTRACTION_BATCH_AXIS
+    if (not axes or size <= 1 or b not in net.sizes
+            or net.sizes[b] % size != 0):
+        return {}
+    return {b: axes}
+
+
+def _sharding_from_specs(net: TensorNetwork, mesh: Mesh,
+                         in_specs: Sequence[P]
+                         ) -> dict[AxisId, tuple[str, ...]]:
+    """Derive (and validate) the axis->mesh-axes map behind explicit specs.
+
+    Every node holding a sharded network axis must shard it over the same
+    mesh axes — anything else would make per-shard contraction incorrect —
+    and sharded sizes must divide.
+    """
+    assert len(in_specs) == net.num_nodes, (
+        f"need one PartitionSpec per input node: got {len(in_specs)} "
+        f"for {net.num_nodes}")
+    sharding: dict[AxisId, tuple[str, ...]] = {}
+    for i, spec in enumerate(in_specs):
+        parts = tuple(spec) + (None,) * (len(net.nodes[i]) - len(tuple(spec)))
+        for axis, part in zip(net.nodes[i], parts):
+            got = (part if isinstance(part, tuple)
+                   else (part,)) if part is not None else ()
+            got = tuple(a for a in got if a is not None)
+            prev = sharding.get(axis)
+            if prev is not None:
+                assert prev == got, (
+                    f"axis {axis!r} sharded as {prev} on one node and "
+                    f"{got} on node {net.node_names[i]} — all holders of "
+                    "a network axis must agree")
+            sharding[axis] = got
+    out = {}
+    used: dict[str, AxisId] = {}
+    for axis, axes in sharding.items():
+        if not axes:
+            continue
+        size = _mesh_size(mesh, axes)
+        assert net.sizes[axis] % size == 0, (
+            f"axis {axis!r} of size {net.sizes[axis]} does not divide "
+            f"over mesh axes {axes} (size {size})")
+        for m in axes:
+            assert m not in used, (
+                f"mesh axis {m!r} shards both network axes {used[m]!r} "
+                f"and {axis!r} — distinct network axes need disjoint mesh "
+                "axes (shards would pair different blocks and the psum "
+                "would mix outputs)")
+            used[m] = axis
+        out[axis] = axes
+    return out
+
+
+def mesh_spec(mesh: Mesh | None,
+              axis_sharding: Mapping[AxisId, Sequence[str]] | None = None
+              ) -> perf_model.MeshSpec | None:
+    """The pure costing mirror of a live mesh (+ sharding intent).
+
+    Feeds ``SearchOptions.mesh`` so CSSE stage-2 ranks per-device
+    compute+memory plus the collective term, and enters the CSSE disk-cache
+    signature (mesh shape, per-axis assignment, device kind, device count).
+    """
+    if mesh is None:
+        return None
+    sharding = {} if axis_sharding is None else axis_sharding
+    return perf_model.MeshSpec(
+        axes=tuple((str(n), int(mesh.shape[n])) for n in mesh.axis_names),
+        axis_sharding=tuple(sorted(
+            (a, tuple(ax)) for a, ax in sharding.items())),
+        device_kind=jax.devices()[0].device_kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan:
+    """Everything ``contraction.execute`` needs to run one plan SPMD."""
+
+    axis_sharding: tuple[tuple[AxisId, tuple[str, ...]], ...]
+    in_specs: tuple[P, ...]           # one per input node
+    out_spec: P                       # network output layout
+    psum_axes: tuple[str, ...]        # deferred reduction (empty for FP/BP)
+    spec: perf_model.MeshSpec         # the costing mirror
+    local_plan: ContractionPlan       # what every shard executes
+    factors: tuple[tuple[AxisId, int], ...] = ()   # global-axis split ways
+
+
+def shard_plan(plan: ContractionPlan, mesh: Mesh | None,
+               in_specs: Sequence[P] | None = None,
+               batch_axes: Sequence[str] | None = None
+               ) -> ShardedPlan | None:
+    """Lay a contraction plan out over ``mesh``; None if nothing shards.
+
+    With explicit ``in_specs`` the axis assignment is derived (and
+    validated) from them; otherwise :func:`plan_axis_sharding` picks the
+    default batch-parallel layout.  Mesh axes that split a *contracted*
+    network axis become ``psum_axes``: each shard's local contraction then
+    yields a partial sum, exact by multilinearity, reduced once at the end
+    (cheapest placement — the final output is the smallest partial-carrying
+    tensor).
+    """
+    if mesh is None:
+        return None
+    net = plan.network
+    if in_specs is not None:
+        axis_sharding = _sharding_from_specs(net, mesh, in_specs)
+    else:
+        axis_sharding = plan_axis_sharding(net, mesh, batch_axes)
+    if not axis_sharding:
+        return None
+    in_specs = tuple(
+        P(*[_part(axis_sharding[a]) if a in axis_sharding else None
+            for a in node])
+        for node in net.nodes)
+    out_spec = P(*[_part(axis_sharding[a]) if a in axis_sharding else None
+                   for a in net.output])
+    out_set = set(net.output)
+    psum_axes = tuple(ax for a, axes in sorted(axis_sharding.items())
+                      if a not in out_set for ax in axes)
+    spec = mesh_spec(mesh, axis_sharding)
+    return ShardedPlan(
+        axis_sharding=tuple(sorted(axis_sharding.items())),
+        in_specs=in_specs, out_spec=out_spec, psum_axes=psum_axes,
+        spec=spec, local_plan=perf_model.localize_plan(plan, spec),
+        factors=tuple(sorted(spec.factors(net).items())))

@@ -37,8 +37,10 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           ckpt_every: int, microbatches: int, production_mesh: bool,
           resume: bool = True, log_every: int = 10,
           tnn_backend: str | None = None,
-          tnn_autotune: bool = False) -> dict:
+          tnn_autotune: bool = False,
+          tnn_mesh: str | None = None) -> dict:
     arch = cfgbase.get(arch_id)
+    mesh = (make_production_mesh() if production_mesh else make_host_mesh())
     tnn_cfg = arch.tnn_default if tnn else None
     if tnn_cfg is not None and tnn_backend is not None:
         tnn_cfg = dataclasses.replace(tnn_cfg, backend=tnn_backend)
@@ -48,8 +50,18 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
         backend = tnn_backend or "pallas"
         tnn_cfg = dataclasses.replace(tnn_cfg, autotune=True,
                                       backend=backend)
+    if tnn_cfg is not None and tnn_mesh:
+        # SPMD contraction execution: every tensorized phase (FP/BP/WG)
+        # shard_maps over the train mesh, with the contraction batch axis
+        # distributed over the named mesh axes, and the per-phase CSSE
+        # searches turn communication-aware for that layout.
+        axes = tuple(a.strip() for a in tnn_mesh.split(",") if a.strip())
+        unknown = [a for a in axes if a not in mesh.axis_names]
+        if unknown:
+            raise SystemExit(f"--tnn-mesh axes {unknown} not in mesh "
+                             f"{mesh.axis_names}")
+        tnn_cfg = dataclasses.replace(tnn_cfg, mesh=mesh, mesh_axes=axes)
     model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=smoke)
-    mesh = (make_production_mesh() if production_mesh else make_host_mesh())
     shard = sharding.make_sharder(mesh)
 
     data = SyntheticLM(DataConfig(
@@ -128,6 +140,14 @@ def main() -> None:
                          "uses tuned tile configs (implies --tnn-backend "
                          "pallas unless overridden); measurements persist "
                          "in REPRO_AUTOTUNE_CACHE")
+    ap.add_argument("--tnn-mesh", default=None, metavar="AXES",
+                    help="comma-separated mesh axes (e.g. 'data' or "
+                         "'data,model') to distribute tensorized "
+                         "contractions over: FP/BP run batch-parallel, WG "
+                         "splits the contracted batch with a deferred psum, "
+                         "and CSSE stage-2 ranks sequences "
+                         "communication-aware for that mesh (see "
+                         "docs/SHARDING.md)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -143,6 +163,9 @@ def main() -> None:
     if args.tnn_autotune and not args.tnn:
         ap.error("--tnn-autotune requires --tnn (no tensorized layers to "
                  "tune without it)")
+    if args.tnn_mesh is not None and not args.tnn:
+        ap.error("--tnn-mesh requires --tnn (no tensorized contractions to "
+                 "shard without it)")
 
     def run(start_step: int) -> int:
         out = train(args.arch, smoke=args.smoke, tnn=args.tnn,
@@ -152,7 +175,8 @@ def main() -> None:
                     microbatches=args.microbatches,
                     production_mesh=args.production_mesh,
                     tnn_backend=args.tnn_backend,
-                    tnn_autotune=args.tnn_autotune)
+                    tnn_autotune=args.tnn_autotune,
+                    tnn_mesh=args.tnn_mesh)
         print(f"[train] done: final loss {out['final_loss']:.4f} "
               f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")
         return args.steps

@@ -116,11 +116,12 @@ def test_spmd_8dev_train_step_runs():
         assert losses[-1] < losses[0], losses   # same batch -> must descend
         print("SPMD8 OK", losses)
     """)
+    import os
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600,
-                         env={**__import__("os").environ,
-                              "PYTHONPATH": "src"},
-                         cwd="/root/repo")
+                         env={**os.environ, "PYTHONPATH": "src"},
+                         cwd=repo)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "SPMD8 OK" in out.stdout
 
