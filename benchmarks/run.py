@@ -84,6 +84,16 @@ def _autotune_records(rows):
 _sharded_records = _autotune_records   # same flat row shape
 
 
+def _precision_records(rows):
+    return [schema.make_record(
+        r["name"], r["wall_s"], fusion_hit_rate=r["fusion_hit_rate"],
+        dtype=r["dtype"], policy=r["policy"],
+        **{k: v for k, v in r.items()
+           if k not in ("name", "wall_s", "fusion_hit_rate", "dtype",
+                        "policy")})
+        for r in rows]
+
+
 def _suite(smoke: bool):
     """(title, module_name, records_adapter) per benchmark module.
 
@@ -98,6 +108,9 @@ def _suite(smoke: bool):
         ("§IV butterfly-analog SPMD: comm-aware vs comm-free CSSE "
          "(fake 8-device mesh)",
          "bench_sharded", _sharded_records),
+        ("FP8/INT8 quantized contraction: bytes moved + wall, bf16 vs "
+         "fp8 vs int8",
+         "bench_precision", _precision_records),
     ]
     if not smoke:
         suite = [
@@ -121,7 +134,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
                     help="CPU-cheap subset (plan_compiler + autotune + "
-                         "sharded) — CI's bench-smoke job")
+                         "sharded + precision) — CI's bench-smoke job")
     ap.add_argument("--json-dir", default=None,
                     help="write BENCH_<module>.json files here")
     ap.add_argument("--baseline", default=None,

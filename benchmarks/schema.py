@@ -6,6 +6,10 @@ Every benchmark row normalises to one flat record:
     {"name": str,              # "<module>/<case>" unique within a run
      "wall_s": float,          # wall seconds (modeled or measured)
      "fusion_hit_rate": float | None,   # None where fusion is meaningless
+     "dtype": str | None,      # operand/storage dtype the case ran under
+                               # (None = module is dtype-agnostic)
+     "policy": str | None,     # quantization policy tag ("fp8_e4m3/tensor",
+                               # ...; None = unquantized execution)
      "device": str,            # jax backend:device_kind
      "git_sha": str,           # HEAD at run time ("unknown" outside git)
      "metrics": dict}          # benchmark-specific extras (floats/strs)
@@ -42,12 +46,15 @@ def device() -> str:
 
 def make_record(name: str, wall_s: float,
                 fusion_hit_rate: float | None = None,
+                dtype: str | None = None, policy: str | None = None,
                 **metrics) -> dict:
     return {
         "name": name,
         "wall_s": float(wall_s),
         "fusion_hit_rate": (None if fusion_hit_rate is None
                             else float(fusion_hit_rate)),
+        "dtype": dtype,
+        "policy": policy,
         "device": device(),
         "git_sha": git_sha(),
         "metrics": metrics,

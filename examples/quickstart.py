@@ -1,10 +1,23 @@
-"""Quickstart: the paper's technique end to end in ~60 lines.
+"""Quickstart: the paper's technique end to end in ~80 lines.
 
 1. Build a tensorized layer (TT factorization of a 768x768 linear, the
    paper's Fig. 4 example), run CSSE and print the found contraction
    sequences for the three training phases.
 2. Compare CSSE-Model vs the fixed sequence prior accelerators hard-code.
-3. Train a small tensorized transformer for a few steps.
+3. Price the same layer under an FP8 quantization policy — halved
+   HBM/ICI bytes, and a precision-aware stage 2 that can pick different
+   sequences.
+4. Train a small tensorized transformer for a few steps, under the full
+   executor flag surface.
+
+The train() keyword arguments demonstrated in step 4 mirror the CLI
+one-to-one (see docs/ARCHITECTURE.md, docs/SHARDING.md,
+docs/PRECISION.md):
+
+    python -m repro.launch.train --arch tinyllama_1_1b --smoke --tnn \
+        --tnn-backend pallas|einsum  --tnn-autotune  \
+        --tnn-mesh data[,model]      --tnn-precision fp8|int8[:tile] \
+        --loss-scale 128
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,6 +28,7 @@ import jax.numpy as jnp
 from repro.core import csse, factorizations as F
 from repro.core.tensorized import TensorizedLinear, layer_cost
 from repro.launch.train import train
+from repro.precision import QuantPolicy
 
 # -- 1. CSSE on the paper's Fig. 4 layer -------------------------------------
 fact = F.tt(out_dims=(12, 8, 8), in_dims=(8, 8, 12), rank=8)
@@ -41,17 +55,36 @@ for phase, c in costs.items():
     print(f"  {phase}: {c.flops/1e6:7.2f} MFLOPs  "
           f"{c.latency_s*1e6:6.1f} us  AI={c.arithmetic_intensity:.1f}")
 
-# -- 3. A tensorized layer is a drop-in module -------------------------------
-layer = TensorizedLinear(fact=fact, compute_dtype=jnp.float32)
-params = layer.init(jax.random.key(0))
+# -- 3. FP8 pricing: the precision axis of CSSE stage 2 ----------------------
+fp8 = QuantPolicy.parse("fp8")          # fp8_e4m3, per-tensor scales
+costs_fp8 = layer_cost(fact, batch=128,
+                       opts=csse.SearchOptions(objective="edp", policy=fp8))
+for phase in ("fp", "bp", "wg"):
+    b, q = costs[phase], costs_fp8[phase]
+    print(f"  {phase}: HBM {b.bytes_hbm:>8d}B -> {q.bytes_hbm:>8d}B under "
+          f"fp8 ({b.bytes_hbm / q.bytes_hbm:.1f}x less traffic)")
+
+# -- 4. A tensorized layer is a drop-in module (here: int8 execution) --------
+layer = TensorizedLinear(fact=fact, compute_dtype=jnp.float32,
+                         precision=QuantPolicy.parse("int8"))
+params = layer.init(jax.random.key(0))   # includes the quant_amax history
 x = jax.random.normal(jax.random.key(1), (4, 768))
 y = layer(params, x)
-print(f"\nTensorizedLinear: x{tuple(x.shape)} -> y{tuple(y.shape)}")
+print(f"\nTensorizedLinear[int8]: x{tuple(x.shape)} -> y{tuple(y.shape)}")
 
-# -- 4. Train a small TNN transformer a few steps ----------------------------
-print("\nTraining a tensorized tinyllama-family smoke model (30 steps):")
+# -- 5. Train a small TNN transformer a few steps ----------------------------
+# The full executor flag surface: backend= einsum|pallas, autotune= tuned
+# tiles + measured stage 2, mesh= SPMD contractions, precision= quantized
+# execution with loss scaling.  (pallas/autotune/mesh are off here to keep
+# the example fast on a 1-CPU host — flip them freely.)
+print("\nTraining a tensorized tinyllama-family smoke model (30 steps, fp8):")
 out = train("tinyllama_1_1b", smoke=True, tnn=True, steps=30,
             global_batch=8, seq_len=64, lr=3e-3, ckpt_dir=None,
             ckpt_every=100, microbatches=1, production_mesh=False,
-            log_every=10)
+            log_every=10,
+            tnn_backend="einsum",        # --tnn-backend
+            tnn_autotune=False,          # --tnn-autotune
+            tnn_mesh=None,               # --tnn-mesh data,model
+            tnn_precision="fp8",         # --tnn-precision
+            loss_scale=128.0)            # --loss-scale
 print(f"loss: {out['losses'][0]:.3f} -> {out['final_loss']:.3f}")

@@ -10,7 +10,19 @@ the CI host and shows:
   * kill/restore: checkpoint at step K, build a FRESH state, restore, and
     confirm losses continue from the checkpointed trajectory.
 
+The executor flags mirror ``repro.launch.train`` one-to-one:
+``--tnn-backend einsum|pallas`` routes contractions through the reference
+einsum or the Pallas plan compiler, ``--tnn-autotune`` turns on measured
+tile tuning + measured CSSE stage 2, ``--tnn-mesh data[,model]`` shard_maps
+every tensorized phase over the host mesh, and ``--tnn-precision
+fp8|fp8_e5m2|int8[:tile]`` (with ``--loss-scale``) runs the quantized
+execution path with delayed scaling (docs/PRECISION.md).  The
+checkpoint/restore round trip below carries all of it — including the
+quant amax history, which lives in params.
+
 Run:  PYTHONPATH=src python examples/train_tnn_lm.py [--steps 60]
+      PYTHONPATH=src python examples/train_tnn_lm.py \
+          --tnn-precision fp8 --loss-scale 128 --tnn-backend einsum
 """
 
 import argparse
@@ -29,6 +41,12 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tnn-backend", choices=["einsum", "pallas"],
+                    default=None)
+    ap.add_argument("--tnn-autotune", action="store_true")
+    ap.add_argument("--tnn-mesh", default=None, metavar="AXES")
+    ap.add_argument("--tnn-precision", default=None, metavar="POLICY")
+    ap.add_argument("--loss-scale", type=float, default=1.0)
     args = ap.parse_args()
 
     # Parameter accounting at example scale.
@@ -44,6 +62,11 @@ def main():
           f"tensorized: {tnn_params/1e6:.2f}M "
           f"({dense_params/tnn_params:.2f}x smaller)")
 
+    tnn_kw = dict(tnn_backend=args.tnn_backend,
+                  tnn_autotune=args.tnn_autotune,
+                  tnn_mesh=args.tnn_mesh,
+                  tnn_precision=args.tnn_precision,
+                  loss_scale=args.loss_scale)
     ckpt = tempfile.mkdtemp(prefix="repro-ckpt-")
     try:
         half = args.steps // 2
@@ -51,14 +74,14 @@ def main():
         out1 = train("tinyllama_1_1b", smoke=True, tnn=True, steps=half,
                      global_batch=args.batch, seq_len=args.seq, lr=3e-3,
                      ckpt_dir=ckpt, ckpt_every=10, microbatches=2,
-                     production_mesh=False)
+                     production_mesh=False, **tnn_kw)
         print(f"\n-- phase 2: fresh process restores and continues to "
               f"{args.steps} --")
         out2 = train("tinyllama_1_1b", smoke=True, tnn=True,
                      steps=args.steps, global_batch=args.batch,
                      seq_len=args.seq, lr=3e-3, ckpt_dir=ckpt,
                      ckpt_every=10, microbatches=2, production_mesh=False,
-                     resume=True)
+                     resume=True, **tnn_kw)
         print(f"\nphase1 final {out1['final_loss']:.4f} -> "
               f"phase2 final {out2['final_loss']:.4f} "
               f"(restart resumed mid-trajectory)")

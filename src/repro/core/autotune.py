@@ -67,7 +67,11 @@ _DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
 # v2: device count entered the signature (multi-device hosts time kernels
 # under a different runtime than single-device ones; sharded runs must not
 # be served single-device entries).
-SWEEP_VERSION = 2
+# v3: quantization policy entered the signature and the sweep — quantized
+# step shapes time the fp8/int8 scaled kernels (different operand dtypes,
+# scale-epilogue inputs), so a bf16 entry must never be served to a
+# quantized run nor vice versa.
+SWEEP_VERSION = 3
 
 
 # ---------------------------------------------------------------------------
@@ -80,13 +84,24 @@ class StepShape:
     """The tuning key of one lowered op, before backend/device qualifiers.
 
     ``dims`` is ``(m, n, k)`` for a GEMM and ``(m, k, h, n)`` for a fused
-    chain ``(X[m,k] @ A[k,h]) @ B[h,n]``.
+    chain ``(X[m,k] @ A[k,h]) @ B[h,n]``.  ``policy`` is the quantization
+    tag (``QuantPolicy.tag``, e.g. ``"fp8_e4m3/tensor"``; empty =
+    unquantized): quantized shapes sweep the scaled kernels over
+    fp8/int8 operands, and the tag keys the cache so bf16 winners are
+    never served to quantized runs.
     """
 
     kind: str                           # "gemm" | "chain"
     dims: tuple[int, ...]
     transpose_rhs: bool = False         # gemm only
     dtype: str = "float32"
+    policy: str = ""                    # QuantPolicy.tag ("" = unquantized)
+
+    def quant_policy(self):
+        if not self.policy:
+            return None
+        from repro.precision.policy import QuantPolicy
+        return QuantPolicy.from_tag(self.policy)
 
     def elems(self) -> int:
         """Total operand+result elements — the measurement size guard."""
@@ -152,6 +167,7 @@ class TuneRecord:
             "kind": self.shape.kind, "dims": list(self.shape.dims),
             "transpose_rhs": self.shape.transpose_rhs,
             "dtype": self.shape.dtype,
+            "policy": self.shape.policy,
             "best": [self.best.block_m, self.best.block_n,
                      self.best.block_k],
             "best_s": self.best_s, "analytic_s": self.analytic_s,
@@ -162,7 +178,7 @@ class TuneRecord:
     def from_json(cls, d: dict) -> "TuneRecord":
         shape = StepShape(kind=d["kind"], dims=tuple(d["dims"]),
                           transpose_rhs=d["transpose_rhs"],
-                          dtype=d["dtype"])
+                          dtype=d["dtype"], policy=d.get("policy", ""))
         bm, bn, bk = d["best"]
         return cls(shape=shape,
                    best=TileConfig(block_m=bm, block_n=bn, block_k=bk),
@@ -226,6 +242,7 @@ class Tuner:
         payload = {
             "kind": shape.kind, "dims": shape.dims,
             "transpose_rhs": shape.transpose_rhs, "dtype": shape.dtype,
+            "policy": shape.policy,
             "backend": jax.default_backend(),
             "device": jax.devices()[0].device_kind,
             "num_devices": jax.device_count(),
@@ -268,6 +285,9 @@ class Tuner:
         return (time.perf_counter() - t0) / self.iters
 
     def _operands(self, shape: StepShape):
+        pol = shape.quant_policy()
+        if pol is not None:
+            return self._quant_operands(shape, pol)
         dtype = jnp.dtype(shape.dtype)
         key = jax.random.key(0)
         if shape.kind == "gemm":
@@ -283,6 +303,32 @@ class Tuner:
         a = jax.random.normal(ka, (k, h), jnp.float32).astype(dtype)
         b = jax.random.normal(kb, (h, n), jnp.float32).astype(dtype)
         return x, a, b
+
+    def _quant_operands(self, shape: StepShape, pol):
+        """Quantized operands + the scale vectors the scaled kernels take —
+        the sweep must time exactly the dispatch the quantized executor
+        performs (epilogue inputs included)."""
+        from repro.precision import quant as _q
+        key = jax.random.key(0)
+        if shape.kind == "gemm":
+            m, n, k = shape.dims
+            kx, kw = jax.random.split(key)
+            qx = _q.quantize(jax.random.normal(kx, (m, k), jnp.float32), pol)
+            wshape = (n, k) if shape.transpose_rhs else (k, n)
+            qw = _q.quantize(jax.random.normal(kw, wshape, jnp.float32), pol,
+                             scale=jnp.float32(1.0))
+            sr = jnp.full((1, n), qw.scale, jnp.float32)
+            return qx.q, qw.q, qx.row_scales(), sr
+        m, k, h, n = shape.dims
+        kx, ka, kb = jax.random.split(key, 3)
+        qx = _q.quantize(jax.random.normal(kx, (m, k), jnp.float32), pol)
+        qa = _q.quantize(jax.random.normal(ka, (k, h), jnp.float32), pol,
+                         scale=jnp.float32(1.0))
+        qb = _q.quantize(jax.random.normal(kb, (h, n), jnp.float32), pol,
+                         scale=jnp.float32(1.0))
+        s1 = qx.row_scales() * qa.scale
+        s2 = jnp.full((1, n), qb.scale, jnp.float32)
+        return qx.q, qa.q, qb.q, s1, s2
 
     def _candidates(self, shape: StepShape) -> list[TileConfig]:
         if shape.kind == "gemm":
@@ -316,27 +362,32 @@ class Tuner:
 
     def _run_config(self, shape: StepShape, tiles: TileConfig, operands):
         if shape.kind == "gemm":
-            x, w = operands
+            x, w, *scales = operands
 
             def call():
                 return matmul_pallas(
                     x, w, transpose_rhs=shape.transpose_rhs,
                     block_m=tiles.block_m, block_n=tiles.block_n,
-                    block_k=tiles.block_k, interpret=self.interpret)
+                    block_k=tiles.block_k, interpret=self.interpret,
+                    scales=tuple(scales) or None)
         else:
-            x, a, b = operands
+            x, a, b, *scales = operands
 
             def call():
                 return chain_pallas(
                     x, a, b, block_m=tiles.block_m, block_n=tiles.block_n,
-                    interpret=self.interpret)
+                    interpret=self.interpret, scales=tuple(scales) or None)
         # Always jit (also in interpret mode): measurement may run at trace
         # time under ensure_compile_time_eval, where a bare pallas_call has
         # no evaluation rule; the warmup iteration absorbs compile time.
         return jax.jit(call)
 
     def _measure(self, shape: StepShape) -> TuneRecord:
-        analytic = analytic_step_s(shape, self.hw)
+        # Quantized shapes get a byte-repriced analytic prediction (and
+        # fallback) — the roofline must describe the same dispatch the
+        # sweep times.
+        analytic = analytic_step_s(
+            shape, perf_model.apply_policy(self.hw, shape.quant_policy()))
         if shape.elems() > self.max_measure_elems:
             self.stats["skipped"] += 1
             return TuneRecord(shape=shape, best=TileConfig(),
@@ -391,19 +442,20 @@ class Tuner:
     # -- the protocol compile_plan consumes ---------------------------------
 
     def gemm_tiles(self, m: int, n: int, k: int, *, transpose_rhs: bool,
-                   dtype: str) -> TileConfig:
+                   dtype: str, policy: str = "") -> TileConfig:
         return self.record(StepShape("gemm", (m, n, k),
                                      transpose_rhs=transpose_rhs,
-                                     dtype=dtype)).best
+                                     dtype=dtype, policy=policy)).best
 
     def chain_tiles(self, m: int, k: int, h: int, n: int, *,
-                    dtype: str) -> TileConfig:
+                    dtype: str, policy: str = "") -> TileConfig:
         return self.record(StepShape("chain", (m, k, h, n),
-                                     dtype=dtype)).best
+                                     dtype=dtype, policy=policy)).best
 
     def should_fuse(self, m: int, k: int, h: int, n: int, *, dtype: str,
                     transpose_rhs1: bool = False,
-                    transpose_rhs2: bool = False) -> bool:
+                    transpose_rhs2: bool = False,
+                    policy: str = "") -> bool:
         """Measured fuse decision: chain vs the two-GEMM split it replaces.
 
         ``transpose_rhs1/2`` are the split GemmOps' actual VMEM-flip flags,
@@ -412,38 +464,44 @@ class Tuner:
         Unmeasured shapes (size guard) keep the structural default (fuse),
         matching what CSSE stage-2 models as ``fused_chain=True``.
         """
-        chain = self.record(StepShape("chain", (m, k, h, n), dtype=dtype))
+        chain = self.record(StepShape("chain", (m, k, h, n), dtype=dtype,
+                                      policy=policy))
         g1 = self.record(StepShape("gemm", (m, h, k),
                                    transpose_rhs=transpose_rhs1,
-                                   dtype=dtype))
+                                   dtype=dtype, policy=policy))
         g2 = self.record(StepShape("gemm", (m, n, h),
                                    transpose_rhs=transpose_rhs2,
-                                   dtype=dtype))
+                                   dtype=dtype, policy=policy))
         if not (chain.measured and g1.measured and g2.measured):
             return True
         return chain.best_s <= g1.best_s + g2.best_s
 
     # -- plan-level costing --------------------------------------------------
 
-    def op_latency(self, op, sizes,
-                   dtype: str = "float32") -> tuple[float, bool]:
+    def op_latency(self, op, sizes, dtype: str = "float32",
+                   policy_tag: str = "",
+                   hw: perf_model.HardwareModel | None = None
+                   ) -> tuple[float, bool]:
         """(seconds, measured?) for one lowered op."""
         if isinstance(op, GemmOp):
             rec = self.record(StepShape(
                 "gemm", (op.mat.m, op.mat.n, op.mat.k),
-                transpose_rhs=op.mat.transpose_rhs, dtype=dtype))
+                transpose_rhs=op.mat.transpose_rhs, dtype=dtype,
+                policy=policy_tag))
             return rec.latency_s, rec.measured
         if isinstance(op, ChainOp):
             rec = self.record(StepShape(
-                "chain", (op.m, op.k, op.h, op.n), dtype=dtype))
+                "chain", (op.m, op.k, op.h, op.n), dtype=dtype,
+                policy=policy_tag))
             return rec.latency_s, rec.measured
-        cost = perf_model.evaluate_step(op.step, sizes, self.hw)
+        cost = perf_model.evaluate_step(op.step, sizes, hw or self.hw)
         return cost.latency_s, False
 
     def plan_latency(self, plan: ContractionPlan, *,
                      fused_chain: bool = True,
                      dtype: str = "float32",
-                     mesh: perf_model.MeshSpec | None = None) -> float:
+                     mesh: perf_model.MeshSpec | None = None,
+                     policy=None) -> float:
         """Total measured latency of a plan's compiled lowering.
 
         Steps the size guard skipped and einsum-fallback steps are charged
@@ -458,14 +516,23 @@ class Tuner:
         as in :func:`perf_model.evaluate`, same byte convention included
         (``hw.dtype_bytes``, like every HBM term in the model): the two
         objectives must rank a given plan's collective identically.
+
+        With ``policy``, the sweep times the *quantized* kernels (fp8/int8
+        operands, scale epilogues) under policy-qualified cache keys, the
+        analytic fallback and the collective term both reprice at the
+        policy's byte width — the measured half of the precision-aware
+        stage 2.
         """
-        coll = perf_model.collective_cost(plan, mesh, self.hw)
+        hw = perf_model.apply_policy(self.hw, policy)
+        ptag = "" if policy is None or not policy.quantized else policy.tag
+        coll = perf_model.collective_cost(plan, mesh, hw)
         plan = perf_model.localize_plan(plan, mesh)
         compiled = compile_plan(plan, fuse=fused_chain, tuner=self,
-                                dtype=dtype)
+                                dtype=dtype, policy=policy)
         sizes = plan.network.sizes
-        return coll.latency_s + sum(self.op_latency(op, sizes, dtype)[0]
-                                    for op in compiled.ops)
+        return coll.latency_s + sum(
+            self.op_latency(op, sizes, dtype, policy_tag=ptag, hw=hw)[0]
+            for op in compiled.ops)
 
 
 # ---------------------------------------------------------------------------
@@ -489,17 +556,19 @@ class CalibratedModel:
     hw: perf_model.HardwareModel = perf_model.TPU_V5E
     dtype: str = "float32"
     mesh: perf_model.MeshSpec | None = None
+    policy: object = None        # QuantPolicy: time the quantized kernels
 
     def latency(self, plan: ContractionPlan,
                 fused_chain: bool = True) -> float:
         return self.tuner.plan_latency(plan, fused_chain=fused_chain,
-                                       dtype=self.dtype, mesh=self.mesh)
+                                       dtype=self.dtype, mesh=self.mesh,
+                                       policy=self.policy)
 
     def evaluate(self, plan: ContractionPlan,
                  fused_chain: bool = True) -> perf_model.PlanCost:
         analytic = perf_model.evaluate(plan, self.hw,
                                        fused_chain=fused_chain,
-                                       mesh=self.mesh)
+                                       mesh=self.mesh, policy=self.policy)
         return perf_model.PlanCost(
             latency_s=self.latency(plan, fused_chain=fused_chain),
             energy_j=analytic.energy_j, flops=analytic.flops,

@@ -67,7 +67,8 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             backend: str = "einsum", fused_chain: bool = True,
             interpret: bool | None = None, tuner=None,
             mesh=None, in_specs=None,
-            mesh_batch_axes=None) -> jax.Array:
+            mesh_batch_axes=None, policy=None,
+            input_scales=None) -> jax.Array:
     """Run the plan over concrete arrays (one per network node, in order).
 
     ``backend="einsum"`` lowers each step to ``jnp.einsum`` (reference
@@ -78,6 +79,16 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
     off-TPU).  ``tuner`` (a :class:`repro.core.autotune.Tuner`) makes the
     pallas backend compile with measured tile choices and fuse decisions
     instead of the fixed 128-tile defaults.  einsum ignores all three knobs.
+
+    ``policy`` (a :class:`repro.precision.QuantPolicy`) quantizes the
+    execution: input nodes are stored/streamed in the policy dtype
+    (fp8/int8), every contraction accumulates in f32 with the
+    dequantization scales applied as kernel epilogues (pallas backend) or
+    explicit dequantize-einsum steps (this reference backend), and
+    inter-step intermediates are requantized per-tensor.  The returned
+    array is always a real (dequantized) tensor.  ``input_scales`` (one
+    f32 scale or None per input node) overrides just-in-time amax scaling
+    — the delayed-scaling path of ``TensorizedLinear``.
 
     ``mesh`` (a ``jax.sharding.Mesh``) switches to SPMD execution through
     ``shard_map``: operands are laid out per ``in_specs`` (one
@@ -100,6 +111,8 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             f"got {tuple(t.shape)}")
     if out_dtype is None:
         out_dtype = tensors[0].dtype
+    if policy is not None and not policy.quantized:
+        policy = None                       # bf16 policy == historical path
 
     if mesh is not None:
         from repro.distributed import sharding as _shlib
@@ -110,15 +123,22 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
                                     accum_dtype=accum_dtype,
                                     out_dtype=out_dtype, backend=backend,
                                     fused_chain=fused_chain,
-                                    interpret=interpret, tuner=tuner)
+                                    interpret=interpret, tuner=tuner,
+                                    policy=policy, input_scales=input_scales)
 
     if backend == "pallas":
         from repro.core import plan_compiler
+        dtype = (jnp.dtype(policy.operand_dtype).name if policy is not None
+                 else jnp.dtype(tensors[0].dtype).name)
         compiled = plan_compiler.compile_plan(
-            plan, fuse=fused_chain, tuner=tuner,
-            dtype=jnp.dtype(tensors[0].dtype).name)
+            plan, fuse=fused_chain, tuner=tuner, dtype=dtype, policy=policy)
         return plan_compiler.run(compiled, tensors, accum_dtype=accum_dtype,
-                                 out_dtype=out_dtype, interpret=interpret)
+                                 out_dtype=out_dtype, interpret=interpret,
+                                 input_scales=input_scales)
+
+    if policy is not None:
+        return _execute_einsum_quantized(plan, tensors, policy, input_scales,
+                                         accum_dtype, out_dtype)
 
     if not plan.steps:                      # single-node network
         out = tensors[0]
@@ -143,10 +163,44 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
     return out.astype(out_dtype)
 
 
+def _execute_einsum_quantized(plan: ContractionPlan, tensors, policy,
+                              input_scales, accum_dtype,
+                              out_dtype) -> jax.Array:
+    """Reference semantics of the quantized execution: quantize the input
+    nodes (delayed scales when given), dequantize-einsum every step with
+    f32 accumulation, requantize intermediates per-tensor — the exact
+    quantization points the Pallas path fuses into its epilogues, kept as
+    separate jnp ops so the two can be parity-tested."""
+    import dataclasses as _dc
+
+    from repro.precision import quant as _q
+    inter_policy = _dc.replace(policy, granularity="tensor")
+    net = plan.network
+    qslots = dict(enumerate(_q.quantize_nodes(tensors, policy,
+                                              input_scales)))
+    if not plan.steps:
+        return _q.dequantize(qslots[0], out_dtype)
+    for step in plan.steps:
+        lhs = _q.dequantize(qslots[step.lhs], accum_dtype)
+        rhs = _q.dequantize(qslots[step.rhs], accum_dtype)
+        res = jnp.einsum(_einsum_spec(step), lhs, rhs,
+                         preferred_element_type=accum_dtype)
+        qslots[step.out] = _q.quantize(res, inter_policy)
+        for op in (step.lhs, step.rhs):
+            if op in qslots and not _used_later(plan, step, op):
+                del qslots[op]
+    out = _q.dequantize(qslots[plan.steps[-1].out], accum_dtype)
+    last_axes = plan.steps[-1].out_axes
+    if last_axes != net.output:
+        out = jnp.transpose(out, tuple(last_axes.index(a)
+                                       for a in net.output))
+    return out.astype(out_dtype)
+
+
 def _execute_sharded(sharded, mesh, tensors: Sequence[jax.Array], *,
                      accum_dtype, out_dtype, backend: str,
                      fused_chain: bool, interpret: bool | None,
-                     tuner) -> jax.Array:
+                     tuner, policy=None, input_scales=None) -> jax.Array:
     """SPMD dispatch of a :class:`~repro.distributed.sharding.ShardedPlan`.
 
     Each device executes the localized plan (Pallas plans compile *once*
@@ -159,35 +213,62 @@ def _execute_sharded(sharded, mesh, tensors: Sequence[jax.Array], *,
 
     local_plan = sharded.local_plan
     inner_dtype = accum_dtype if sharded.psum_axes else out_dtype
+
+    # Quantized SPMD: scales are computed *globally* (amax over the full
+    # tensors, or the caller's delayed scales) and enter the shard_map as
+    # replicated operands — every shard quantizes with the same scale, so
+    # dequantized partial sums psum exactly like the unquantized path.
+    # Tile granularity would tie scale groups to pre-shard row blocks, so
+    # the sharded path always quantizes per-tensor.
+    scales: list[jax.Array] = []
+    if policy is not None:
+        import dataclasses as _dc
+
+        from repro.precision import policy as _pol
+        policy = _dc.replace(policy, granularity="tensor")
+        for i, t in enumerate(tensors):
+            s = None if input_scales is None else input_scales[i]
+            if s is None:
+                s = _pol.compute_scale(_pol.amax_of(t), policy.qmax,
+                                       policy.margin)
+            scales.append(jnp.asarray(s, jnp.float32))
+
     if backend == "pallas":
         from repro.core import plan_compiler
+        dtype = (jnp.dtype(policy.operand_dtype).name if policy is not None
+                 else jnp.dtype(tensors[0].dtype).name)
         compiled = plan_compiler.compile_plan(
-            local_plan, fuse=fused_chain, tuner=tuner,
-            dtype=jnp.dtype(tensors[0].dtype).name,
-            mesh_factors=sharded.factors)
+            local_plan, fuse=fused_chain, tuner=tuner, dtype=dtype,
+            mesh_factors=sharded.factors, policy=policy)
 
-        def run_local(ts):
+        def run_local(ts, scs):
             return plan_compiler.run(compiled, ts,
                                      accum_dtype=accum_dtype,
                                      out_dtype=inner_dtype,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     input_scales=scs or None)
     else:
-        def run_local(ts):
+        def run_local(ts, scs):
             return execute(local_plan, ts, accum_dtype=accum_dtype,
                            out_dtype=inner_dtype, backend="einsum",
-                           fused_chain=fused_chain)
+                           fused_chain=fused_chain, policy=policy,
+                           input_scales=scs or None)
 
-    def per_shard(*local_tensors):
-        out = run_local(list(local_tensors))
+    num_nodes = len(tensors)
+
+    def per_shard(*args):
+        out = run_local(list(args[:num_nodes]), list(args[num_nodes:]))
         if sharded.psum_axes:
             out = jax.lax.psum(out, sharded.psum_axes)
         return out.astype(out_dtype)
 
+    from jax.sharding import PartitionSpec as _P
+    in_specs = tuple(sharded.in_specs) + (_P(),) * len(scales)
     # check_rep=False: the Pallas interpret path has no replication rule,
     # and the psum above is what (re-)establishes replication anyway.
-    fn = shard_map(per_shard, mesh=mesh, in_specs=sharded.in_specs,
+    fn = shard_map(per_shard, mesh=mesh, in_specs=in_specs,
                    out_specs=sharded.out_spec, check_rep=False)
-    return fn(*tensors)
+    return fn(*tensors, *scales)
 
 
 def _used_later(plan: ContractionPlan, current: ContractionStep, slot: int

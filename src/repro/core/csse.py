@@ -79,6 +79,13 @@ class SearchOptions:
                                       # step shapes plus the deferred-psum
                                       # collective term (both analytic and
                                       # measured objectives)
+    policy: object = None             # quantization policy (repro.precision.
+                                      # QuantPolicy): stage 2 prices every
+                                      # byte term at the policy's storage
+                                      # width (fp8/int8 halve HBM + ICI), and
+                                      # measured searches time the quantized
+                                      # kernels — a new axis candidates can
+                                      # flip winners over
 
 
 @dataclass
@@ -332,6 +339,11 @@ def _signature(net: TensorNetwork, opts: SearchOptions,
         # must never be served from disk for another.
         "mesh": (None if opts.mesh is None
                  else opts.mesh.signature_payload()),
+        # Quantization policy: a winner ranked for bf16 byte widths must
+        # never be served for an fp8/int8 search (and vice versa) — the
+        # policy reshapes every memory term the ranking weighed.
+        "policy": (None if opts.policy is None or not opts.policy.quantized
+                   else opts.policy.signature_payload()),
         "hw": (hw.name, hw.peak_flops, hw.hbm_bw, hw.dtype_bytes,
                hw.step_overhead_s, hw.ici_bw),
     }
@@ -390,12 +402,13 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
     measurements are themselves disk-cached, so a warm second run
     re-measures nothing.
     """
+    hw = perf_model.apply_policy(hw, opts.policy)
     measured_model = None
     if opts.objective == "measured":
         from repro.core import autotune
         measured_model = autotune.CalibratedModel(
             tuner or autotune.default_tuner(), hw,
-            dtype=opts.measure_dtype, mesh=opts.mesh)
+            dtype=opts.measure_dtype, mesh=opts.mesh, policy=opts.policy)
 
     def stage2_metric(plan: ContractionPlan,
                       cost: perf_model.PlanCost) -> float:
@@ -477,10 +490,12 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
 def fixed_plan(net: TensorNetwork, tree: TreeT,
                hw: perf_model.HardwareModel = perf_model.TPU_V5E,
                fused_chain: bool = False,
-               mesh: perf_model.MeshSpec | None = None) -> SearchResult:
+               mesh: perf_model.MeshSpec | None = None,
+               policy=None) -> SearchResult:
     """Wrap a hard-coded sequence (prior-work baselines) as a SearchResult."""
     plan = plan_from_tree(net, tree)
-    cost = perf_model.evaluate(plan, hw, fused_chain=fused_chain, mesh=mesh)
+    cost = perf_model.evaluate(plan, hw, fused_chain=fused_chain, mesh=mesh,
+                               policy=policy)
     return SearchResult(tree, plan, cost, [(plan.total_flops, tree)],
                         [(cost.metric("edp"), tree)], {"engine": "fixed"})
 

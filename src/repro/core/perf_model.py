@@ -28,6 +28,7 @@ comparisons (Fig. 13/14 reproductions), not absolute watts.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Mapping
@@ -67,6 +68,33 @@ class HardwareModel:
 
 
 TPU_V5E = HardwareModel()
+
+
+def apply_policy(hw: HardwareModel, policy) -> HardwareModel:
+    """Retarget a hardware model to a quantization policy's storage width.
+
+    The policy (:class:`repro.precision.QuantPolicy`) changes what the
+    executor streams — fp8/int8 operands and intermediates — so every
+    byte-denominated term (step HBM traffic, HBM energy, the deferred-psum
+    ICI payload) reprices at ``policy.dtype_bytes``.  Compute terms keep
+    the bf16 MXU peak: the quantized kernels upcast in VMEM, so FLOP
+    throughput is unchanged — the win this model captures is pure traffic,
+    which is exactly what the low-precision tensorized-training line of
+    work banks on.  ``dtype_bytes`` is already part of every CSSE/autotune
+    cache signature, so policy-retargeted searches can never collide with
+    bf16 entries.
+
+    Note the ICI term keeps :func:`collective_cost`'s storage-dtype
+    convention: the sharded executor all-reduces **f32 partial sums**
+    regardless of policy (exactness of the deferred reduction), so the
+    repriced collective is a *modeled* quantity — consistent with every
+    other byte term, which is all a ranking needs within one policy.
+    Shipping quantized psum payloads (all-reduce the q tensors + a scale
+    combine) is the open item that would realise it on the wire.
+    """
+    if policy is None or not policy.quantized:
+        return hw
+    return dataclasses.replace(hw, dtype_bytes=policy.dtype_bytes)
 
 # The paper's evaluation scale (§VI-B): baselines normalised to 256 MACs
 # (FETTA's 16 CEs x 4x4 PEs) at 1 GHz with LPDDR4.  Used to reproduce the
@@ -290,12 +318,17 @@ def evaluate_step(step: ContractionStep, sizes, hw: HardwareModel,
 
 def evaluate(plan: ContractionPlan, hw: HardwareModel = TPU_V5E,
              fused_chain: bool = False,
-             mesh: MeshSpec | None = None) -> PlanCost:
+             mesh: MeshSpec | None = None, policy=None) -> PlanCost:
     """Cost a full contraction plan.
 
     With ``fused_chain``, an intermediate consumed by the next step and small
     enough for VMEM residency skips its HBM write+read (Pallas fused
     execution / FETTA butterfly analogue).
+
+    With ``policy`` (a quantization policy), every byte term reprices at
+    the policy's storage width via :func:`apply_policy` — FP8/INT8 halve
+    HBM traffic, the VMEM-residency window for chaining doubles, and the
+    deferred-psum ICI payload shrinks by the same factor.
 
     With ``mesh``, the returned cost is *per device* of the SPMD execution:
     every step is priced at its per-shard dims (sharded axes scaled by their
@@ -304,6 +337,7 @@ def evaluate(plan: ContractionPlan, hw: HardwareModel = TPU_V5E,
     ``collective_s`` / ``bytes_ici`` (ring all-reduce at ICI bandwidth).
     This is CSSE stage-2's communication-aware objective.
     """
+    hw = apply_policy(hw, policy)
     coll = collective_cost(plan, mesh, hw)
     plan = localize_plan(plan, mesh)
     sizes = plan.network.sizes

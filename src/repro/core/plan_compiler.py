@@ -262,6 +262,12 @@ class CompiledPlan:
     plan: ContractionPlan
     ops: tuple[LoweredOp, ...]
     mesh_factors: tuple[tuple[AxisId, int], ...] | None = None
+    #: quantized-execution policy (repro.precision.QuantPolicy); None/bf16
+    #: keeps the historical full-precision dispatch.  The lowering itself
+    #: (matricization, fusion) is dtype-independent — the policy changes
+    #: what run() streams: fp8/int8 operands, scale epilogues in the
+    #: kernels, per-tensor requantized intermediates.
+    policy: object = None
 
     def report(self) -> dict:
         """Lowering summary — what the compiler actually did with the plan."""
@@ -289,6 +295,8 @@ class CompiledPlan:
                 for op in self.ops if not isinstance(op, EinsumOp)),
             "mesh_factors": (None if self.mesh_factors is None
                              else dict(self.mesh_factors)),
+            "policy": (None if self.policy is None
+                       or not self.policy.quantized else self.policy.tag),
         }
 
     def describe(self) -> str:
@@ -315,7 +323,7 @@ class CompiledPlan:
 def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                  vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
                  tuner=None, dtype: str = "float32",
-                 mesh_factors=None) -> CompiledPlan:
+                 mesh_factors=None, policy=None) -> CompiledPlan:
     """Lower every step; then (unless ``fuse=False``, the ablation CSSE
     stage-2 prices as ``fused_chain=False``) fuse eligible adjacent GEMM
     pairs.  ``vmem_budget`` may only tighten fusion: ``chain_pallas`` itself
@@ -332,7 +340,16 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     ``mesh_factors`` tags the result as a per-shard lowering (see
     :class:`CompiledPlan`); pass the localized plan — tile sweeps, fusion
     VMEM checks and measured fuse decisions then all happen at the shard
-    shapes each device dispatches."""
+    shapes each device dispatches.
+
+    ``policy`` (a :class:`repro.precision.QuantPolicy`) makes ``run``
+    execute quantized: same op structure, fp8/int8 operand streams with
+    scale epilogues.  It also qualifies every tuner lookup (the
+    measurement DB must never serve a bf16 tile winner to a quantized
+    run — the kernels being timed are different)."""
+    if policy is not None and not policy.quantized:
+        policy = None
+    ptag = "" if policy is None else policy.tag
     vmem_budget = min(vmem_budget, CHAIN_VMEM_BUDGET_BYTES)
     lowered: list[LoweredOp] = []
     for step in plan.steps:
@@ -345,13 +362,13 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
             if tuner is not None:
                 tiles = tuner.gemm_tiles(mat.m, mat.n, mat.k,
                                          transpose_rhs=mat.transpose_rhs,
-                                         dtype=dtype)
+                                         dtype=dtype, policy=ptag)
             lowered.append(GemmOp(step=step, mat=mat, tiles=tiles))
     if mesh_factors is not None:
         mesh_factors = tuple(mesh_factors)
     if not fuse:
         return CompiledPlan(plan=plan, ops=tuple(lowered),
-                            mesh_factors=mesh_factors)
+                            mesh_factors=mesh_factors, policy=policy)
 
     fused: list[LoweredOp] = []
     i = 0
@@ -365,10 +382,12 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                 if tuner.should_fuse(chain.m, chain.k, chain.h, chain.n,
                                      dtype=dtype,
                                      transpose_rhs1=a.mat.transpose_rhs,
-                                     transpose_rhs2=b.mat.transpose_rhs):
+                                     transpose_rhs2=b.mat.transpose_rhs,
+                                     policy=ptag):
                     chain = dataclasses.replace(
                         chain, tiles=tuner.chain_tiles(
-                            chain.m, chain.k, chain.h, chain.n, dtype=dtype))
+                            chain.m, chain.k, chain.h, chain.n, dtype=dtype,
+                            policy=ptag))
                 else:
                     chain = None     # measured: two GEMMs beat the chain
             if chain is not None:
@@ -378,7 +397,7 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
         fused.append(a)
         i += 1
     return CompiledPlan(plan=plan, ops=tuple(fused),
-                        mesh_factors=mesh_factors)
+                        mesh_factors=mesh_factors, policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -401,9 +420,11 @@ def _op_reads(op: LoweredOp) -> tuple[int, ...]:
 
 def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
         accum_dtype=jnp.float32, out_dtype=None,
-        interpret: bool | None = None) -> jax.Array:
+        interpret: bool | None = None, input_scales=None) -> jax.Array:
     """Execute a compiled plan; semantics match ``contraction.execute``:
-    f32 accumulation within a step, storage dtype between steps."""
+    f32 accumulation within a step, storage dtype between steps (the
+    *policy* dtype between steps when the plan compiled quantized —
+    ``input_scales`` then carries optional delayed per-node scales)."""
     plan = compiled.plan
     net = plan.network
     if out_dtype is None:
@@ -411,6 +432,11 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
     assert accum_dtype == jnp.float32, (
         "Pallas kernels accumulate in f32; use backend='einsum' for other "
         "accumulator dtypes")
+
+    if compiled.policy is not None and compiled.policy.quantized:
+        return _run_quantized(compiled, tensors, out_dtype=out_dtype,
+                              interpret=interpret,
+                              input_scales=input_scales)
 
     if not plan.steps:
         return tensors[0].astype(out_dtype)
@@ -461,6 +487,132 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
                 del slots[slot]
 
     out = slots[plan.steps[-1].out]
+    last_axes = plan.steps[-1].out_axes
+    if last_axes != net.output:
+        out = jnp.transpose(out, tuple(last_axes.index(a)
+                                       for a in net.output))
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized execution (CompiledPlan.policy set)
+# ---------------------------------------------------------------------------
+
+
+def _run_quantized(compiled: CompiledPlan, tensors: Sequence[jax.Array], *,
+                   out_dtype, interpret: bool | None,
+                   input_scales) -> jax.Array:
+    """Quantized dispatch: operands live in the policy dtype end to end.
+
+    Input nodes are quantized by the Pallas quantize kernel (delayed
+    scales when ``input_scales`` provides them); GEMM/chain ops stream the
+    quantized values with dequantization fused into their output epilogues
+    (:func:`repro.kernels.fused_contraction.matmul_pallas` ``scales=``);
+    intermediates requantize per-tensor between steps, so inter-step HBM
+    traffic runs at the policy's 1-byte width — exactly what the
+    precision-aware cost model charges.  Tile-granular input scales apply
+    where the lhs reaches its GEMM as a pure reshape; a layout flip that
+    would move the scale groups falls back to a per-tensor requantize
+    (same guard-not-error convention as the rest of the compiler).
+    Einsum-fallback steps dequantize, run the reference einsum, and
+    requantize.
+    """
+    import dataclasses as _dc
+
+    from repro.kernels.quantized import quantize_pallas
+    from repro.precision import policy as _pol
+    from repro.precision import quant as _q
+
+    policy = compiled.policy
+    inter_policy = _dc.replace(policy, granularity="tensor")
+    plan = compiled.plan
+    net = plan.network
+    sizes = net.sizes
+
+    def qin(x: jax.Array, scale) -> "_q.QTensor":
+        if x.ndim < 2:
+            return _q.quantize(x, policy, scale=scale)
+        if scale is None:
+            if policy.granularity == "tile":
+                amax = _pol.tile_amax(x, policy.tile_rows)
+            else:
+                amax = _pol.amax_of(x)
+            scale = _pol.compute_scale(amax, policy.qmax, policy.margin)
+        else:
+            scale = jnp.asarray(scale, jnp.float32)
+        rows = x.shape[0]
+        q2 = quantize_pallas(x.reshape(rows, -1), _q.expand_row_scales(scale, rows),
+                             policy, interpret=interpret)
+        return _q.QTensor(q=q2.reshape(x.shape), scale=scale)
+
+    def per_tensor(t: "_q.QTensor") -> "_q.QTensor":
+        return t if t.per_tensor else _q.requantize_per_tensor(t, policy)
+
+    qslots: dict[int, _q.QTensor] = {
+        i: qin(x, None if input_scales is None else input_scales[i])
+        for i, x in enumerate(tensors)}
+    if not plan.steps:
+        return _q.dequantize(qslots[0], out_dtype)
+
+    last_use: dict[int, int] = {}
+    for t, op in enumerate(compiled.ops):
+        for slot in _op_reads(op):
+            last_use[slot] = t
+    for t, op in enumerate(compiled.ops):
+        if isinstance(op, EinsumOp):
+            res = _einsum_step(op.step, _q.dequantize(qslots[op.step.lhs]),
+                               _q.dequantize(qslots[op.step.rhs]),
+                               jnp.float32)
+            out_slot = op.step.out
+        elif isinstance(op, GemmOp):
+            mat = op.mat
+            ql = qslots[op.step.lhs]
+            if not ql.per_tensor and (mat.lhs_perm is not None
+                                      or not mat.m_axes):
+                ql = per_tensor(ql)
+            x2 = _as_2d(ql.q, mat.lhs_perm, mat.m, mat.k)
+            sl = _q.expand_row_scales(ql.scale, mat.m)
+            qr = per_tensor(qslots[op.step.rhs])
+            if mat.transpose_rhs:
+                w2 = _as_2d(qr.q, mat.rhs_perm, mat.n, mat.k)
+            else:
+                w2 = _as_2d(qr.q, mat.rhs_perm, mat.k, mat.n)
+            sr = jnp.full((1, mat.n), qr.scale, jnp.float32)
+            tile_kw = {} if op.tiles is None else op.tiles.as_kwargs()
+            res = matmul_pallas(x2, w2, transpose_rhs=mat.transpose_rhs,
+                                out_dtype=jnp.float32, interpret=interpret,
+                                scales=(sl, sr), **tile_kw)
+            res = res.reshape(tuple(sizes[a] for a in mat.m_axes + mat.n_axes))
+            if mat.out_perm is not None:
+                res = jnp.transpose(res, mat.out_perm)
+            out_slot = op.step.out
+        else:                            # ChainOp
+            qx = qslots[op.first.lhs]
+            if not qx.per_tensor and (op.x_perm is not None
+                                      or not op.m_axes):
+                qx = per_tensor(qx)
+            qa = per_tensor(qslots[op.first.rhs])
+            qb = per_tensor(qslots[op.second.rhs])
+            x2 = _as_2d(qx.q, op.x_perm, op.m, op.k)
+            a2 = _as_2d(qa.q, op.a_perm, op.k, op.h)
+            b2 = _as_2d(qb.q, op.b_perm, op.h, op.n)
+            s1 = _q.expand_row_scales(qx.scale, op.m) * qa.scale
+            s2 = jnp.full((1, op.n), qb.scale, jnp.float32)
+            tile_kw = {} if op.tiles is None else op.tiles.as_kwargs(
+                with_k=False)
+            res = chain_pallas(x2, a2, b2, out_dtype=jnp.float32,
+                               interpret=interpret, scales=(s1, s2),
+                               **tile_kw)
+            res = res.reshape(tuple(sizes[ax] for ax in op.m_axes + op.n_axes))
+            if op.out_perm is not None:
+                res = jnp.transpose(res, op.out_perm)
+            out_slot = op.second.out
+        qslots[out_slot] = _q.quantize(res, inter_policy)
+        for slot in _op_reads(op):
+            if slot != out_slot and last_use[slot] == t and slot in qslots:
+                del qslots[slot]
+
+    out = _q.dequantize(qslots[plan.steps[-1].out])
     last_axes = plan.steps[-1].out_axes
     if last_axes != net.output:
         out = jnp.transpose(out, tuple(last_axes.index(a)

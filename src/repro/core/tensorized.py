@@ -35,6 +35,17 @@ import jax.numpy as jnp
 from repro.core import contraction, csse, factorizations, perf_model
 from repro.core.factorizations import Factorization
 from repro.core.tnetwork import TensorNetwork
+from repro.precision.policy import (
+    AMAX_KEY, QuantPolicy, amax_of, scale_from_history,
+)
+
+# AMAX_KEY (re-exported from repro.precision.policy) names the params
+# entry holding the delayed-scaling amax history of a quantized layer:
+# f32 ``[2 + num_cores, amax_history_len]``, row 0 = x, row 1 = dy,
+# rows 2+i = core i.  Updated through the gradient channel (the custom-vjp
+# bwd returns ``hist - new_hist`` and the optimizer applies ``p - g`` to
+# this key — see ``optim/adamw.py``), so the history advances once per
+# training step with no side-channel state.
 
 
 @dataclass(frozen=True)
@@ -59,6 +70,12 @@ class TNNConfig:
                                           # mesh axes the contraction batch
                                           # shards over (None = pod+data;
                                           # `train --tnn-mesh data,model`)
+    precision: QuantPolicy = QuantPolicy()
+                                          # quantized contraction execution
+                                          # (fp8_e4m3 | fp8_e5m2 | int8 with
+                                          # delayed scaling); the bf16
+                                          # default is the historical path.
+                                          # `train --tnn-precision fp8`
 
     def search_options(self, compute_dtype=None) -> csse.SearchOptions:
         # Autotuning swaps the analytic stage-2 objective for measured step
@@ -70,12 +87,20 @@ class TNNConfig:
         # pure MeshSpec mirror so the per-phase searches rank sequences by
         # per-device compute+memory plus the deferred-psum collective term
         # on exactly the mesh the executor will shard over.
+        # A quantized precision policy turns stage 2 precision-aware: every
+        # byte term prices at the policy width, measured searches time the
+        # quantized kernels, and the policy keys every cache signature.
         objective = "measured" if self.autotune else self.objective
-        dtype = jnp.dtype(compute_dtype or jnp.bfloat16).name
+        policy = self.precision if self.precision.quantized else None
+        if policy is not None:
+            dtype = jnp.dtype(policy.operand_dtype).name
+        else:
+            dtype = jnp.dtype(compute_dtype or jnp.bfloat16).name
         return csse.SearchOptions(objective=objective,
                                   fused_chain=self.fused_chain,
                                   measure_dtype=dtype,
-                                  mesh=self.mesh_spec())
+                                  mesh=self.mesh_spec(),
+                                  policy=policy)
 
     def mesh_spec(self):
         """The costing MeshSpec for this config's mesh (None off-mesh)."""
@@ -199,7 +224,8 @@ def layer_cost(fact: Factorization, batch: int,
     fp, bp, (wg_kind, dw, wg) = _plans(fact, batch, opts, hw)
     results = ([dw] if wg_kind == "shared" else []) + list(wg)
     ev = lambda r: perf_model.evaluate(  # noqa: E731
-        r.plan, hw, fused_chain=opts.fused_chain, mesh=opts.mesh)
+        r.plan, hw, fused_chain=opts.fused_chain, mesh=opts.mesh,
+        policy=opts.policy)
     fp_c, bp_c = ev(fp), ev(bp)
     wg_cs = [ev(r) for r in results]
     return {"fp": fp_c, "bp": bp_c,
@@ -231,6 +257,7 @@ class TensorizedLinear:
     autotune: bool = False               # tuned tiles on the pallas executor
     mesh: Any = None                     # jax Mesh: shard_map every phase
     mesh_axes: tuple[str, ...] | None = None   # batch-axis mesh targets
+    precision: QuantPolicy = QuantPolicy()     # fp8/int8 quantized execution
 
     # -- params -------------------------------------------------------------
 
@@ -244,6 +271,13 @@ class TensorizedLinear:
         params = {"cores": cores}
         if self.use_bias:
             params["bias"] = jnp.zeros((self.fact.M,), self.param_dtype)
+        if self.precision.quantized:
+            # Delayed-scaling state: one amax-history row per quantized
+            # tensor role (x, dy, each core); all-zero = bootstrap from the
+            # current tensor on the first step.
+            params[AMAX_KEY] = jnp.zeros(
+                (2 + self.fact.num_cores, self.precision.amax_history_len),
+                jnp.float32)
         return params
 
     def _tuner(self):
@@ -273,18 +307,31 @@ class TensorizedLinear:
         xt = x.reshape((batch,) + tuple(self.fact.in_dims))
         xt = xt.astype(self.compute_dtype)
         cores = tuple(c.astype(self.compute_dtype) for c in params["cores"])
-        if self.phase_paths:
+        if self.precision.quantized and self.phase_paths:
+            # Quantized execution with delayed scaling; a params dict
+            # without the amax entry (e.g. a pre-precision checkpoint)
+            # falls back to a zero history = just-in-time scales, and the
+            # history "gradient" lands on a constant, where jax drops it.
+            hist = params.get(AMAX_KEY, jnp.zeros(
+                (2 + self.fact.num_cores, self.precision.amax_history_len),
+                jnp.float32))
+            y = _tnn_apply_q(self.fact, self.opts, self.backend,
+                             self.autotune, self.mesh, self.mesh_axes,
+                             self.precision, xt, hist, *cores)
+        elif self.phase_paths:
             y = _tnn_apply(self.fact, self.opts, self.backend,
                            self.autotune, self.mesh, self.mesh_axes,
                            xt, *cores)
         else:
             fp, _, _ = _plans(self.fact, batch, self.opts)
+            policy = (self.precision if self.precision.quantized else None)
             y = contraction.execute(fp.plan, [xt, *cores],
                                     backend=self.backend,
                                     fused_chain=self.opts.fused_chain,
                                     tuner=self._tuner(),
                                     mesh=self.mesh,
-                                    mesh_batch_axes=self.mesh_axes)
+                                    mesh_batch_axes=self.mesh_axes,
+                                    policy=policy)
         y = y.reshape(tuple(lead) + (self.fact.M,))
         if self.use_bias:
             y = y + params["bias"].astype(self.compute_dtype)
@@ -353,6 +400,100 @@ def _tnn_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, res, dy):
 _tnn_apply.defvjp(_tnn_fwd, _tnn_bwd)
 
 
+# Quantized variant: same per-phase CSSE plans, executed under a
+# QuantPolicy with *delayed scaling*.  The amax history rides as a
+# differentiable argument purely to get a state-update channel: the bwd
+# rule returns ``hist - new_hist`` as its "gradient", and the optimizer's
+# quant_amax passthrough (``p - g``, see repro.optim.adamw) turns that
+# into ``new_hist`` — the history advances exactly once per optimizer
+# step, with no mutable side state and no change to the layer call
+# signature.  Scales are genuinely non-differentiable (quantization is a
+# straight-through identity at this granularity), so hijacking the
+# cotangent loses nothing.
+
+
+def _phase_scales(policy: QuantPolicy, hist, rows, tensors):
+    """Delayed per-tensor scales for one phase's input nodes.
+
+    ``rows[i]`` is the amax-history row backing ``tensors[i]`` (None =
+    just-in-time, e.g. the stashed dW intermediate which has no
+    cross-step identity).
+    """
+    out = []
+    for row, t in zip(rows, tensors):
+        if row is None:
+            out.append(None)
+        else:
+            out.append(scale_from_history(hist[row], amax_of(t),
+                                          policy.qmax, policy.margin))
+    return out
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _tnn_apply_q(fact: Factorization, opts: csse.SearchOptions, backend: str,
+                 autotune_flag: bool, mesh, mesh_axes, policy: QuantPolicy,
+                 x: jax.Array, amax_hist: jax.Array,
+                 *cores: jax.Array) -> jax.Array:
+    fp, _, _ = _plans(fact, x.shape[0], opts)
+    core_rows = list(range(2, 2 + len(cores)))
+    scales = _phase_scales(policy, amax_hist, [0] + core_rows, (x,) + cores)
+    return contraction.execute(fp.plan, [x, *cores], backend=backend,
+                               fused_chain=opts.fused_chain,
+                               tuner=_exec_tuner(backend, autotune_flag),
+                               mesh=mesh, mesh_batch_axes=mesh_axes,
+                               policy=policy, input_scales=scales)
+
+
+def _tnn_q_fwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, policy,
+               x, amax_hist, *cores):
+    y = _tnn_apply_q(fact, opts, backend, autotune_flag, mesh, mesh_axes,
+                     policy, x, amax_hist, *cores)
+    return y, (x, amax_hist, cores)
+
+
+def _tnn_q_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, policy,
+               res, dy):
+    x, hist, cores = res
+    batch = x.shape[0]
+    _, bp, (wg_kind, dw_res, wg) = _plans(fact, batch, opts)
+    exec_kw = dict(backend=backend, fused_chain=opts.fused_chain,
+                   tuner=_exec_tuner(backend, autotune_flag), mesh=mesh,
+                   mesh_batch_axes=mesh_axes, policy=policy)
+    dy = dy.astype(x.dtype)
+    core_rows = list(range(2, 2 + len(cores)))
+    s_x, s_dy, *s_cores = _phase_scales(
+        policy, hist, [0, 1] + core_rows, (x, dy) + cores)
+    dx = contraction.execute(bp.plan, [dy, *cores],
+                             input_scales=[s_dy, *s_cores], **exec_kw)
+    dcores = []
+    if wg_kind == "shared":
+        dw = contraction.execute(dw_res.plan, [x, dy],
+                                 input_scales=[s_x, s_dy], **exec_kw)
+        for i, w in enumerate(wg):
+            others = tuple(c for j, c in enumerate(cores) if j != i)
+            s_others = [s for j, s in enumerate(s_cores) if j != i]
+            dcores.append(contraction.execute(
+                w.plan, [dw, *others], input_scales=[None, *s_others],
+                **exec_kw))
+    else:
+        for i, w in enumerate(wg):
+            others = tuple(c for j, c in enumerate(cores) if j != i)
+            s_others = [s for j, s in enumerate(s_cores) if j != i]
+            dcores.append(contraction.execute(
+                w.plan, [x, dy, *others],
+                input_scales=[s_x, s_dy, *s_others], **exec_kw))
+    # The state-update channel: roll every history row one step with this
+    # step's observed amaxes and deliver the delta as the "gradient".
+    current = jnp.stack([amax_of(x), amax_of(dy)]
+                        + [amax_of(c) for c in cores])
+    new_hist = jnp.concatenate([current[:, None], hist[:, :-1]], axis=1)
+    d_hist = hist - new_hist
+    return (dx, d_hist, *dcores)
+
+
+_tnn_apply_q.defvjp(_tnn_q_fwd, _tnn_q_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Convenience constructor used by model configs
 # ---------------------------------------------------------------------------
@@ -374,4 +515,5 @@ def make_tensorized_linear(out_features: int, in_features: int,
                             backend=tnn.backend,
                             autotune=tnn.autotune,
                             mesh=tnn.mesh,
-                            mesh_axes=tnn.mesh_axes)
+                            mesh_axes=tnn.mesh_axes,
+                            precision=tnn.precision)

@@ -70,17 +70,51 @@ def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _matmul_scaled_kernel(x_ref, w_ref, sl_ref, sr_ref, o_ref, acc_ref, *,
+                          k_steps: int, transpose_rhs: bool):
+    """Quantized GEMM: fp8/int8 operand tiles, f32 accumulation, and the
+    dequantization scales applied as an *output epilogue* — never a
+    separate HBM pass.  Operand tiles upcast in VMEM before the dot (the
+    TPU MXU consumes low-precision operands natively; the upcast keeps the
+    kernel exact and portable under interpret mode — int8 products and
+    fp8 values are all representable in f32)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)   # [bm, bk] quantized -> f32
+    w = w_ref[...].astype(jnp.float32)
+    if transpose_rhs:
+        w = w.T                          # VMEM-local transpose, fused
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        # epilogue: per-row lhs scales x per-col rhs scales (outer product
+        # broadcast) — valid because scales never vary along K.
+        o_ref[...] = (acc_ref[...] * sl_ref[...] * sr_ref[...]
+                      ).astype(o_ref.dtype)
+
+
 def matmul_pallas(x: jax.Array, w: jax.Array, *, transpose_rhs: bool = False,
                   block_m: int = 128, block_n: int = 128, block_k: int = 128,
-                  out_dtype=None, interpret: bool | None = None) -> jax.Array:
-    """``C[M, N] = X[M, K] @ W`` with W stored ``[K, N]`` or ``[N, K]``."""
+                  out_dtype=None, interpret: bool | None = None,
+                  scales=None) -> jax.Array:
+    """``C[M, N] = X[M, K] @ W`` with W stored ``[K, N]`` or ``[N, K]``.
+
+    ``scales=(sl, sr)`` switches to the quantized kernel: ``x``/``w`` hold
+    fp8/int8 values, ``sl`` is the lhs dequantization scale per M row
+    (``[M, 1]`` f32), ``sr`` the rhs scale per N column (``[1, N]`` f32),
+    and the epilogue computes ``C = (Xq @ Wq) * sl * sr`` in one pass —
+    per-tensor scaling is the constant-vector special case.
+    """
     m, k = x.shape
     if transpose_rhs:
         n, k2 = w.shape
     else:
         k2, n = w.shape
     assert k == k2, f"contraction mismatch {k} vs {k2}"
-    out_dtype = out_dtype or x.dtype
+    out_dtype = out_dtype or (x.dtype if scales is None else jnp.float32)
     interpret = INTERPRET if interpret is None else interpret
 
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
@@ -100,18 +134,37 @@ def matmul_pallas(x: jax.Array, w: jax.Array, *, transpose_rhs: bool = False,
     else:
         w_spec = pl.BlockSpec((bk, bn), lambda i, j, s: (s, j))
 
+    # One launch configuration; the quantized variant only swaps the kernel
+    # body and appends the scale-vector operands.
+    if scales is None:
+        kernel = functools.partial(_matmul_kernel, k_steps=k_steps,
+                                   transpose_rhs=transpose_rhs)
+        scale_specs, scale_ops = [], ()
+    else:
+        sl, sr = scales
+        assert sl.shape == (m, 1) and sr.shape == (1, n), (sl.shape, sr.shape)
+        if mp:
+            sl = jnp.pad(sl, ((0, mp), (0, 0)))
+        if np_:
+            sr = jnp.pad(sr, ((0, 0), (0, np_)))
+        kernel = functools.partial(_matmul_scaled_kernel, k_steps=k_steps,
+                                   transpose_rhs=transpose_rhs)
+        scale_specs = [pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)),
+                       pl.BlockSpec((1, bn), lambda i, j, s: (0, j))]
+        scale_ops = (sl, sr)
+
     out = pl.pallas_call(
-        functools.partial(_matmul_kernel, k_steps=k_steps,
-                          transpose_rhs=transpose_rhs),
+        kernel,
         grid=(M // bm, N // bn, k_steps),
-        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)), w_spec],
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)), w_spec,
+                  *scale_specs],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w)
+    )(x, w, *scale_ops)
     return out[:m, :n]
 
 
@@ -131,20 +184,43 @@ def _chain_kernel(x_ref, a_ref, b_ref, o_ref, t_ref, *, h_dtype):
                          ).astype(o_ref.dtype)
 
 
+def _chain_scaled_kernel(x_ref, a_ref, b_ref, s1_ref, s2_ref, o_ref, t_ref,
+                         *, h_dtype):
+    """Quantized chain: the first dot's epilogue dequantizes the VMEM
+    intermediate (``s1`` folds the lhs row scales with A's scale), the
+    second dequantizes the output (``s2`` carries B's per-col scale).
+    The intermediate lives in VMEM as bf16 between the two MXU passes —
+    its HBM round-trip stays elided, same as the unquantized chain."""
+    t = jnp.dot(x_ref[...].astype(jnp.float32),
+                a_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    t_ref[...] = t * s1_ref[...]
+    o_ref[...] = (jnp.dot(t_ref[...].astype(h_dtype),
+                          b_ref[...].astype(h_dtype),
+                          preferred_element_type=jnp.float32)
+                  * s2_ref[...]).astype(o_ref.dtype)
+
+
 def chain_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
                  block_m: int = 128, block_n: int = 128,
-                 out_dtype=None, interpret: bool | None = None) -> jax.Array:
+                 out_dtype=None, interpret: bool | None = None,
+                 scales=None) -> jax.Array:
     """``Y[M, N] = (X[M, K] @ A[K, H]) @ B[H, N]`` — intermediate in VMEM.
 
     K and H must fit in VMEM alongside the tiles (true for TNN cores, where
     K = prod of a few factor dims and H = rank*factor products); the wrapper
     asserts a conservative budget.
+
+    ``scales=(s1, s2)`` switches to the quantized kernel: operands hold
+    fp8/int8 values, ``s1`` (``[M, 1]`` f32, the lhs row scales already
+    multiplied by A's scale) dequantizes the VMEM intermediate, ``s2``
+    (``[1, N]`` f32, B's scale per column) the output.
     """
     m, k = x.shape
     k2, h = a.shape
     h2, n = b.shape
     assert k == k2 and h == h2
-    out_dtype = out_dtype or x.dtype
+    out_dtype = out_dtype or (x.dtype if scales is None else jnp.float32)
     interpret = INTERPRET if interpret is None else interpret
 
     bm, bn = min(block_m, m), min(block_n, n)
@@ -159,13 +235,32 @@ def chain_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
         b = jnp.pad(b, ((0, 0), (0, np_)))
     M, N = m + mp, n + np_
 
+    # One launch configuration; the quantized variant swaps the kernel body
+    # (bf16 VMEM intermediate — operands are fp8/int8, which cannot hold
+    # the unscaled intermediate) and appends the scale-vector operands.
+    if scales is None:
+        kernel = functools.partial(_chain_kernel, h_dtype=x.dtype)
+        scale_specs, scale_ops = [], ()
+    else:
+        s1, s2 = scales
+        assert s1.shape == (m, 1) and s2.shape == (1, n), (s1.shape, s2.shape)
+        if mp:
+            s1 = jnp.pad(s1, ((0, mp), (0, 0)))
+        if np_:
+            s2 = jnp.pad(s2, ((0, 0), (0, np_)))
+        kernel = functools.partial(_chain_scaled_kernel, h_dtype=jnp.bfloat16)
+        scale_specs = [pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+                       pl.BlockSpec((1, bn), lambda i, j: (0, j))]
+        scale_ops = (s1, s2)
+
     out = pl.pallas_call(
-        functools.partial(_chain_kernel, h_dtype=x.dtype),
+        kernel,
         grid=(M // bm, N // bn),
         in_specs=[
             pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
             pl.BlockSpec((k, h), lambda i, j: (0, 0)),
             pl.BlockSpec((h, bn), lambda i, j: (0, j)),
+            *scale_specs,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
@@ -173,5 +268,5 @@ def chain_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(x, a, b)
+    )(x, a, b, *scale_ops)
     return out[:m, :n]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.tensorized import TNNConfig
+from repro.precision.policy import AMAX_KEY
 from repro.models.encdec import EncDec
 from repro.models.lm import LM
 from repro.optim.adamw import AdamW
@@ -39,10 +40,21 @@ def make_train_step(model, opt: AdamW, shard, microbatches: int = 1):
     activation stash (the dominant training buffer) shrinks by the same
     factor, trading one weight-grad pass per microbatch."""
 
+    # Static loss scaling (low-precision training): the loss is scaled up
+    # before the backward so tiny gradients survive, and AdamW divides the
+    # same factor back out of every true gradient (amax state deltas are
+    # exempt there).  loss_scale == 1.0 keeps the path bit-identical.
+    ls = getattr(opt, "loss_scale", 1.0)
+
     def grad_fn(params, mb):
         def loss_fn(p):
-            return model.loss(p, mb, shard)
-        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+            loss, metrics = model.loss(p, mb, shard)
+            return (loss * ls if ls != 1.0 else loss), metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if ls != 1.0:
+            loss = loss / ls
+        return (loss, metrics), grads
 
     def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
         params = state["params"]
@@ -53,17 +65,44 @@ def make_train_step(model, opt: AdamW, shard, microbatches: int = 1):
                 lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
                                     + x.shape[1:]), batch)
 
+            # quant_amax "gradients" are state deltas (hist - new_hist), not
+            # loss derivatives: they combine across microbatches by MAX of
+            # the observed amaxes (min of the deltas — rows other than the
+            # newest slot are identical), and are never averaged, so the
+            # delayed-scaling window always records the worst-case
+            # microbatch amax instead of a diluted mean.
+            def acc_combine(path, a, g):
+                if any(getattr(p, "key", None) == AMAX_KEY
+                       for p in path):
+                    return jnp.minimum(a, g)
+                return a + g
+
             def mb_step(acc, mb):
                 (loss, metrics), grads = grad_fn(params, mb)
-                acc = jax.tree.map(jnp.add, acc,
-                                   {"g": grads, "loss": loss})
+                acc = {"g": jax.tree_util.tree_map_with_path(
+                           acc_combine, acc["g"], grads),
+                       "loss": acc["loss"] + loss}
                 return acc, metrics
 
-            zero = {"g": jax.tree.map(
-                        lambda p: jnp.zeros(p.shape, p.dtype), params),
+            big = jnp.float32(jnp.finfo(jnp.float32).max)
+
+            def zero_like(path, p):
+                if any(getattr(p_, "key", None) == AMAX_KEY
+                       for p_ in path):
+                    return jnp.full(p.shape, big, p.dtype)
+                return jnp.zeros(p.shape, p.dtype)
+
+            zero = {"g": jax.tree_util.tree_map_with_path(zero_like, params),
                     "loss": jnp.zeros((), jnp.float32)}
             acc, metrics_seq = jax.lax.scan(mb_step, zero, split)
-            grads = jax.tree.map(lambda g: g / microbatches, acc["g"])
+
+            def mean_grads(path, g):
+                if any(getattr(p, "key", None) == AMAX_KEY
+                       for p in path):
+                    return g
+                return g / microbatches
+
+            grads = jax.tree_util.tree_map_with_path(mean_grads, acc["g"])
             loss = acc["loss"] / microbatches
             metrics = jax.tree.map(lambda m: m[-1], metrics_seq)
         new_params, new_opt, om = opt.update(grads, state["opt"], params)

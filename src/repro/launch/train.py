@@ -38,7 +38,9 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           resume: bool = True, log_every: int = 10,
           tnn_backend: str | None = None,
           tnn_autotune: bool = False,
-          tnn_mesh: str | None = None) -> dict:
+          tnn_mesh: str | None = None,
+          tnn_precision: str | None = None,
+          loss_scale: float = 1.0) -> dict:
     arch = cfgbase.get(arch_id)
     mesh = (make_production_mesh() if production_mesh else make_host_mesh())
     tnn_cfg = arch.tnn_default if tnn else None
@@ -61,6 +63,13 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
             raise SystemExit(f"--tnn-mesh axes {unknown} not in mesh "
                              f"{mesh.axis_names}")
         tnn_cfg = dataclasses.replace(tnn_cfg, mesh=mesh, mesh_axes=axes)
+    if tnn_cfg is not None and tnn_precision:
+        # Quantized contraction execution (fp8/int8 with delayed scaling):
+        # both executors run under the policy, CSSE prices every phase at
+        # the policy's byte widths, and the layers carry amax history.
+        from repro.precision import QuantPolicy
+        tnn_cfg = dataclasses.replace(
+            tnn_cfg, precision=QuantPolicy.parse(tnn_precision))
     model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=smoke)
     shard = sharding.make_sharder(mesh)
 
@@ -68,7 +77,8 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
         vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
         embed_dim=cfg.d_model if arch.input_kind == "embeds" else None))
 
-    opt = AdamW(lr=lr, total_steps=max(steps, 2), warmup_steps=min(20, steps))
+    opt = AdamW(lr=lr, total_steps=max(steps, 2), warmup_steps=min(20, steps),
+                loss_scale=loss_scale)
     params = model.init(jax.random.key(0))
     state = {"params": params, "opt": opt.init(params)}
 
@@ -148,6 +158,20 @@ def main() -> None:
                          "and CSSE stage-2 ranks sequences "
                          "communication-aware for that mesh (see "
                          "docs/SHARDING.md)")
+    ap.add_argument("--tnn-precision", default=None, metavar="POLICY",
+                    help="quantized contraction execution for tensorized "
+                         "layers: bf16 (default) | fp8[_e4m3] | fp8_e5m2 | "
+                         "int8. Layers carry delayed-scaling amax history "
+                         "(per-tensor — the training path ignores a "
+                         "':tile' suffix, which only engages on direct "
+                         "just-in-time-scaled executor calls), CSSE "
+                         "stage-2 prices every byte term at the policy "
+                         "width, and both executors run quantized (see "
+                         "docs/PRECISION.md)")
+    ap.add_argument("--loss-scale", type=float, default=1.0,
+                    help="static loss scaling for low-precision training: "
+                         "the loss is multiplied by this before backward "
+                         "and gradients divided back in AdamW")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -166,6 +190,9 @@ def main() -> None:
     if args.tnn_mesh is not None and not args.tnn:
         ap.error("--tnn-mesh requires --tnn (no tensorized contractions to "
                  "shard without it)")
+    if args.tnn_precision is not None and not args.tnn:
+        ap.error("--tnn-precision requires --tnn (no tensorized "
+                 "contractions to quantize without it)")
 
     def run(start_step: int) -> int:
         out = train(args.arch, smoke=args.smoke, tnn=args.tnn,
@@ -176,7 +203,9 @@ def main() -> None:
                     production_mesh=args.production_mesh,
                     tnn_backend=args.tnn_backend,
                     tnn_autotune=args.tnn_autotune,
-                    tnn_mesh=args.tnn_mesh)
+                    tnn_mesh=args.tnn_mesh,
+                    tnn_precision=args.tnn_precision,
+                    loss_scale=args.loss_scale)
         print(f"[train] done: final loss {out['final_loss']:.4f} "
               f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")
         return args.steps

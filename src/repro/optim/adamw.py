@@ -3,6 +3,22 @@
 Self-contained (no optax dependency); state is a pytree with the same
 structure as params, so the parameter PartitionSpecs apply verbatim to the
 optimizer moments — sharded optimizer state for free.
+
+Low-precision training support (``docs/PRECISION.md``):
+
+* ``loss_scale`` — static loss scaling: the train step multiplies the loss
+  by this factor (``launch/steps.py``), this optimizer divides the incoming
+  gradients back down before clipping/moments, so tiny fp8-era gradients
+  survive the bf16 backward without changing the update.
+* ``master_weights`` — keeps an f32 master copy of every parameter in the
+  optimizer state; updates apply to the master and the (possibly
+  low-precision) param leaf becomes a cast of it, so repeated tiny updates
+  never round away.
+* ``quant_amax`` passthrough — amax-history leaves of quantized
+  TensorizedLinear layers (``repro.core.tensorized.AMAX_KEY``) carry their
+  *state update* through the gradient channel (``g = hist - new_hist``).
+  They are excluded from the grad norm, never unscaled, clipped or
+  decayed; their update is the raw ``p - g = new_hist``.
 """
 
 from __future__ import annotations
@@ -13,11 +29,22 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.precision.policy import AMAX_KEY
+
 
 class OptState(NamedTuple):
     m: Any
     v: Any
     step: jax.Array
+    master: Any = None          # f32 weight copies (master_weights=True)
+
+
+def _path_has_amax(path) -> bool:
+    for p in path:
+        key = getattr(p, "key", getattr(p, "name", None))
+        if key == AMAX_KEY:
+            return True
+    return False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,12 +66,19 @@ class AdamW:
     # loop double-buffering copies the scanned operands, which costs more
     # than the fused elementwise chain it replaces (measured in the dry-run).
     chunk_threshold: int = 1 << 62
+    # static loss scaling: grads arrive multiplied by this (steps.py scales
+    # the loss); divided out here before gnorm/clip/moments.
+    loss_scale: float = 1.0
+    # f32 master copies in the optimizer state; params become casts.
+    master_weights: bool = False
 
     def init(self, params: Any) -> OptState:
         zeros = lambda p: jax.tree.map(  # noqa: E731
             lambda x: jnp.zeros(x.shape, self.moment_dtype), p)
+        master = (jax.tree.map(lambda x: x.astype(jnp.float32), params)
+                  if self.master_weights else None)
         return OptState(m=zeros(params), v=zeros(params),
-                        step=jnp.zeros((), jnp.int32))
+                        step=jnp.zeros((), jnp.int32), master=master)
 
     def schedule(self, step: jax.Array) -> jax.Array:
         step = step.astype(jnp.float32)
@@ -57,15 +91,33 @@ class AdamW:
 
     def update(self, grads: Any, state: OptState, params: Any
                ) -> tuple[Any, OptState, dict]:
-        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                             for g in jax.tree.leaves(grads)))
+        inv_ls = 1.0 / self.loss_scale
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+        paths = [p for p, _ in leaves_p]
+        flat_p = [leaf for _, leaf in leaves_p]
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_master = (treedef.flatten_up_to(state.master)
+                       if state.master is not None else [None] * len(flat_p))
+        amax = [_path_has_amax(p) for p in paths]
+
+        # Unscale first (loss scaling), excluding amax passthrough leaves —
+        # their "gradient" is a state delta, not a loss derivative.
+        if self.loss_scale != 1.0:
+            flat_g = [g if a else g.astype(jnp.float32) * inv_ls
+                      for g, a in zip(flat_g, amax)]
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g, a in zip(flat_g, amax) if not a))
         scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
         step = state.step + 1
         lr = self.schedule(step)
         b1c = 1 - self.b1 ** step.astype(jnp.float32)
         b2c = 1 - self.b2 ** step.astype(jnp.float32)
 
-        def upd(g, m, v, p):
+        def upd(g, m, v, p, master):
+            src = p if master is None else master
             g = g.astype(jnp.float32) * scale
             m = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
             v = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
@@ -73,27 +125,38 @@ class AdamW:
             vhat = v / b2c
             delta = mhat / (jnp.sqrt(vhat) + self.eps)
             if p.ndim >= 2:                         # decay matrices only
-                delta = delta + self.weight_decay * p.astype(jnp.float32)
-            new_p = p.astype(jnp.float32) - lr * delta
-            return (new_p.astype(p.dtype), m.astype(self.moment_dtype),
-                    v.astype(self.moment_dtype))
+                delta = delta + self.weight_decay * src.astype(jnp.float32)
+            new_master = src.astype(jnp.float32) - lr * delta
+            return (new_master.astype(p.dtype), m.astype(self.moment_dtype),
+                    v.astype(self.moment_dtype), new_master)
 
-        def upd_leaf(g, m, v, p):
+        def upd_leaf(g, m, v, p, master, is_amax):
+            if is_amax:
+                # Delayed-scaling state channel: g = hist - new_hist, so
+                # the raw SGD-with-lr-1 step IS the state update.  No
+                # moments, no decay, no clipping.
+                new = (p.astype(jnp.float32) - g.astype(jnp.float32)
+                       ).astype(p.dtype)
+                return new, m, v, new.astype(jnp.float32)
             if p.size > self.chunk_threshold and p.ndim >= 3:
                 def body(_, args):
                     return None, upd(*args)
-                _, (np_, nm, nv) = jax.lax.scan(body, None, (g, m, v, p))
-                return np_, nm, nv
-            return upd(g, m, v, p)
+                if master is None:
+                    _, (np_, nm, nv, nmaster) = jax.lax.scan(
+                        body, None, (g, m, v, p, p.astype(jnp.float32)))
+                else:
+                    _, (np_, nm, nv, nmaster) = jax.lax.scan(
+                        body, None, (g, m, v, p, master))
+                return np_, nm, nv, nmaster
+            return upd(g, m, v, p, master)
 
-        flat_p, treedef = jax.tree.flatten(params)
-        flat_g = treedef.flatten_up_to(grads)
-        flat_m = treedef.flatten_up_to(state.m)
-        flat_v = treedef.flatten_up_to(state.v)
-        out = [upd_leaf(g, m, v, p)
-               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        out = [upd_leaf(g, m, v, p, mw, a)
+               for g, m, v, p, mw, a in zip(flat_g, flat_m, flat_v, flat_p,
+                                            flat_master, amax)]
         new_params = treedef.unflatten([o[0] for o in out])
         new_m = treedef.unflatten([o[1] for o in out])
         new_v = treedef.unflatten([o[2] for o in out])
-        return new_params, OptState(new_m, new_v, step), {
+        new_master = (treedef.unflatten([o[3] for o in out])
+                      if state.master is not None else None)
+        return new_params, OptState(new_m, new_v, step, new_master), {
             "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,25 @@
+"""Mixed-precision contraction subsystem (FP8 / INT8 quantized execution).
+
+Public surface:
+
+* :class:`~repro.precision.policy.QuantPolicy` — what dtype a contraction
+  stores/streams, how scales are granulated, delayed-scaling window.
+* :func:`~repro.precision.quant.quantize` /
+  :func:`~repro.precision.quant.dequantize` — reference semantics (pure
+  jnp), the oracle the Pallas kernels are tested against.
+* scale math (:func:`~repro.precision.policy.compute_scale`,
+  :func:`~repro.precision.policy.scale_from_history`, ...) shared by the
+  executor, the kernels and the ``TensorizedLinear`` amax-history state.
+
+See ``docs/PRECISION.md`` for how policies thread through CSSE, the plan
+compiler, the autotuner and the training loop.
+"""
+
+from repro.precision.policy import (  # noqa: F401
+    ALIASES, AMAX_KEY, BF16, DTYPES, QuantPolicy, amax_of, compute_scale,
+    scale_from_history, tile_amax, update_history,
+)
+from repro.precision.quant import (  # noqa: F401
+    QTensor, dequantize, expand_row_scales, quantize, quantize_nodes,
+    requantize_per_tensor,
+)

@@ -1,0 +1,178 @@
+"""Quantization policies — the dtype axis of the contraction subsystem.
+
+A :class:`QuantPolicy` names what the contraction executor stores and
+streams between HBM and the MXU: ``bf16`` (the historical default — a
+no-op policy), ``fp8_e4m3`` / ``fp8_e5m2`` (FP8 with 448 / 57344 amax
+range), or ``int8`` (symmetric).  Accumulation is always f32 — the policy
+only changes the *operand/storage* dtype, exactly the knob the companion
+low-precision tensorized-training papers turn (PAPERS.md: "On-FPGA
+Training with Ultra Memory Reduction", "Ultra Memory-Efficient On-FPGA
+Training of Transformers") — so a policy halves HBM and ICI bytes without
+touching the contraction semantics CSSE searches over.
+
+Scaling granularity:
+
+* ``tensor`` — one f32 scale per tensor (the executor's fused path).
+* ``tile``  — one scale per contiguous group of ``tile_rows`` rows along
+  the tensor's leading axis (per-token-block activation scales); the
+  weight/rhs side of a contraction stays per-tensor, standard practice.
+
+Scales are derived from amax (max |x|): ``scale = amax * margin / qmax``.
+Training uses **delayed scaling**: the scale comes from a rolling amax
+*history* (:func:`scale_from_history`) threaded through the
+``TensorizedLinear`` custom-vjp (see ``docs/PRECISION.md``), so quantize
+kernels never need a same-step reduction over the tensor they quantize.
+
+This module is dependency-light (jnp only) so the cost model
+(``repro.core.perf_model``), the search (``csse``) and the autotuner can
+all key on policies without import cycles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+#: params-dict key of a quantized layer's delayed-scaling amax history —
+#: the single definition every consumer (repro.core.tensorized, the AdamW
+#: passthrough, the microbatch accumulator in launch/steps.py) imports, so
+#: the state-update channel can never silently stop matching.
+AMAX_KEY = "quant_amax"
+
+#: dtype name -> (jnp dtype, storage bytes, qmax = largest representable |x|)
+DTYPES = {
+    "bf16": (jnp.bfloat16, 2, None),
+    "fp8_e4m3": (jnp.float8_e4m3fn, 1, 448.0),
+    "fp8_e5m2": (jnp.float8_e5m2, 1, 57344.0),
+    "int8": (jnp.int8, 1, 127.0),
+}
+
+#: user-facing aliases accepted by ``QuantPolicy.parse`` / --tnn-precision
+ALIASES = {"fp8": "fp8_e4m3", "e4m3": "fp8_e4m3", "e5m2": "fp8_e5m2"}
+
+_EPS = 1e-12
+
+
+@dataclass(frozen=True)
+class QuantPolicy:
+    """How one contraction executes below bf16.  Hashable and cheap to
+    carry through ``SearchOptions`` / ``TNNConfig`` / lru_cache keys."""
+
+    dtype: str = "bf16"            # bf16 | fp8_e4m3 | fp8_e5m2 | int8
+    granularity: str = "tensor"    # tensor | tile (lhs row groups)
+    tile_rows: int = 128           # rows per scale group under "tile"
+    amax_history_len: int = 16     # delayed-scaling window
+    margin: float = 1.0            # scale headroom multiplier
+
+    def __post_init__(self):
+        assert self.dtype in DTYPES, f"unknown quant dtype {self.dtype!r}"
+        assert self.granularity in ("tensor", "tile"), self.granularity
+        assert self.tile_rows > 0 and self.amax_history_len > 0
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype != "bf16"
+
+    @property
+    def operand_dtype(self):
+        return DTYPES[self.dtype][0]
+
+    @property
+    def dtype_bytes(self) -> int:
+        return DTYPES[self.dtype][1]
+
+    @property
+    def qmax(self) -> float:
+        q = DTYPES[self.dtype][2]
+        assert q is not None, "bf16 policy has no quantization range"
+        return q
+
+    @property
+    def tag(self) -> str:
+        """Canonical cache-key string, e.g. ``fp8_e4m3/tensor``."""
+        if not self.quantized:
+            return ""
+        return f"{self.dtype}/{self.granularity}"
+
+    def signature_payload(self) -> tuple:
+        """Hash-stable tuple for disk-cache signatures (csse/autotune)."""
+        return (self.dtype, self.granularity, self.tile_rows,
+                self.amax_history_len, self.margin)
+
+    # -- parsing ------------------------------------------------------------
+
+    @classmethod
+    def parse(cls, name: str) -> "QuantPolicy":
+        """``fp8`` / ``fp8_e5m2:tile`` / ``int8`` / ``bf16`` -> policy."""
+        name = name.strip().lower()
+        gran = "tensor"
+        if ":" in name:
+            name, gran = name.split(":", 1)
+        name = ALIASES.get(name, name)
+        if name not in DTYPES:
+            raise ValueError(
+                f"unknown precision {name!r}; expected one of "
+                f"{sorted(DTYPES) + sorted(ALIASES)} (+ optional ':tile')")
+        return cls(dtype=name, granularity=gran)
+
+    @classmethod
+    def from_tag(cls, tag: str) -> "QuantPolicy":
+        """Inverse of :attr:`tag` (cache keys; scale params at defaults)."""
+        dtype, gran = tag.split("/", 1)
+        return cls(dtype=dtype, granularity=gran)
+
+
+#: the do-nothing default every existing call site implicitly uses
+BF16 = QuantPolicy()
+
+
+# ---------------------------------------------------------------------------
+# Scale math (shared by reference ops, kernels and the custom-vjp state)
+# ---------------------------------------------------------------------------
+
+
+def compute_scale(amax, qmax: float, margin: float = 1.0) -> jax.Array:
+    """f32 dequantization scale for a tensor (or tile) with given amax.
+
+    ``q = x / scale`` maps ``[-amax, amax]`` onto ``[-qmax/margin,
+    qmax/margin]``; the epsilon floor keeps all-zero tensors finite.
+    """
+    amax = jnp.asarray(amax, jnp.float32)
+    return jnp.maximum(amax, _EPS) * margin / qmax
+
+
+def amax_of(x: jax.Array) -> jax.Array:
+    """Per-tensor amax in f32 (the delayed-scaling statistic)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+
+def tile_amax(x: jax.Array, tile_rows: int) -> jax.Array:
+    """amax per group of ``tile_rows`` leading-axis rows -> shape [G].
+
+    A leading dim that does not divide into whole ``tile_rows`` groups
+    collapses to one group (per-tensor) — the same "guard, don't error"
+    convention the sharding layer uses for non-dividing axes.
+    """
+    rows = x.shape[0]
+    g = rows // tile_rows if rows % tile_rows == 0 and rows >= tile_rows else 1
+    flat = jnp.abs(x.astype(jnp.float32)).reshape(g, -1)
+    return jnp.max(flat, axis=1)
+
+
+def update_history(hist: jax.Array, amax) -> jax.Array:
+    """Roll the amax window: newest observation enters at slot 0."""
+    amax = jnp.asarray(amax, jnp.float32)
+    return jnp.concatenate([amax[None], hist[:-1]], axis=0)
+
+
+def scale_from_history(hist: jax.Array, current_amax, qmax: float,
+                       margin: float = 1.0) -> jax.Array:
+    """Delayed scale: max over the history window, bootstrapping from the
+    current tensor's amax while the history is still all-zero (step 0)."""
+    h = jnp.max(hist)
+    amax = jnp.where(h > 0, h, jnp.asarray(current_amax, jnp.float32))
+    return compute_scale(amax, qmax, margin)

@@ -1,0 +1,136 @@
+"""Quantize / dequantize reference ops and the quantized-tensor container.
+
+These are the *semantics* of the precision subsystem — pure jnp, used
+
+* directly by the einsum reference backend
+  (``contraction.execute(..., policy=...)``),
+* as the parity oracle for the Pallas kernels
+  (:mod:`repro.kernels.quantized` and the scaled-matmul epilogues in
+  :mod:`repro.kernels.fused_contraction`),
+* by the plan compiler's quantized dispatch
+  (:mod:`repro.core.plan_compiler`) for the pieces that are not worth a
+  kernel (requantizing an ND intermediate is one fused XLA elementwise
+  pass).
+
+A :class:`QTensor` is storage dtype + scale: ``x ≈ q.astype(f32) * scale``
+with ``scale`` either a scalar (per-tensor) or a ``[G]`` vector of
+leading-axis row-group scales (``granularity="tile"``, groups of
+``policy.tile_rows``).  Contracted axes never carry varying scales — that
+is what lets the GEMM kernels apply scales as an output epilogue instead
+of per-K-step corrections.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.precision.policy import (
+    QuantPolicy, amax_of, compute_scale, tile_amax,
+)
+
+
+def expand_row_scales(scale: jax.Array, rows: int) -> jax.Array:
+    """``[rows, 1]`` f32 per-row scales from a scalar or ``[G]`` group
+    vector — the single form every kernel epilogue consumes.  Group
+    vectors repeat over contiguous row blocks; valid whenever the groups
+    ride the (leading axis of the) row dimension, which is how every
+    producer in this package lays them out.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim == 0:
+        return jnp.full((rows, 1), scale, jnp.float32)
+    return jnp.repeat(scale, rows // scale.shape[0])[:, None]
+
+
+@dataclass(frozen=True)
+class QTensor:
+    """A quantized array plus its dequantization scale(s)."""
+
+    q: jax.Array                 # policy.operand_dtype, original shape
+    scale: jax.Array             # f32 scalar, or [G] leading-axis groups
+
+    @property
+    def per_tensor(self) -> bool:
+        return self.scale.ndim == 0
+
+    def row_scales(self) -> jax.Array:
+        """Scale per leading-axis row, shape ``[rows, 1]`` (f32)."""
+        return expand_row_scales(self.scale,
+                                 self.q.shape[0] if self.q.ndim else 1)
+
+
+def _expand(scale: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Broadcast a scale against an array: scalar as-is; a ``[G]`` group
+    vector repeats over its leading-axis row groups -> ``[rows, 1, ..]``."""
+    if scale.ndim == 0:
+        return scale
+    reps = shape[0] // scale.shape[0]
+    return jnp.repeat(scale, reps).reshape((shape[0],) + (1,) *
+                                           (len(shape) - 1))
+
+
+def _cast(x: jax.Array, scale: jax.Array, policy: QuantPolicy) -> jax.Array:
+    """Scale, saturate to the representable range, cast.  int8 rounds to
+    nearest; fp8 rounding is the dtype cast itself."""
+    y = x.astype(jnp.float32) / _expand(scale, x.shape)
+    y = jnp.clip(y, -policy.qmax, policy.qmax)
+    if policy.dtype == "int8":
+        y = jnp.round(y)
+    return y.astype(policy.operand_dtype)
+
+
+def quantize(x: jax.Array, policy: QuantPolicy,
+             scale: jax.Array | None = None) -> QTensor:
+    """Quantize per ``policy``.
+
+    ``scale`` overrides the just-in-time amax-derived scale — this is how
+    delayed scaling enters: the ``TensorizedLinear`` custom-vjp computes
+    scales from its amax history and passes them down, so quantization
+    here is a pure elementwise op with no same-step reduction.
+    """
+    assert policy.quantized, "quantize() called with a bf16 (no-op) policy"
+    if scale is None:
+        if policy.granularity == "tile" and x.ndim >= 1:
+            amax = tile_amax(x, policy.tile_rows)
+        else:
+            amax = amax_of(x)
+        scale = compute_scale(amax, policy.qmax, policy.margin)
+    else:
+        scale = jnp.asarray(scale, jnp.float32)
+    return QTensor(q=_cast(x, scale, policy), scale=scale)
+
+
+def dequantize(t: QTensor, dtype=jnp.float32) -> jax.Array:
+    """``q * scale`` back to a real dtype (f32 by default)."""
+    return (t.q.astype(jnp.float32) * _expand(t.scale, t.q.shape)
+            ).astype(dtype)
+
+
+def requantize_per_tensor(t: QTensor, policy: QuantPolicy) -> QTensor:
+    """Collapse tile scales to one per-tensor scale (dequant -> requant).
+
+    Used when a transpose/reshape is about to move the leading axis the
+    tile groups are attached to — per-tensor scales survive any layout
+    change, so this is the safe (slightly lossier) form.
+    """
+    if t.per_tensor:
+        return t
+    x = dequantize(t)
+    return quantize(x, QuantPolicy(dtype=policy.dtype, granularity="tensor",
+                                   tile_rows=policy.tile_rows,
+                                   amax_history_len=policy.amax_history_len,
+                                   margin=policy.margin))
+
+
+def quantize_nodes(tensors, policy: QuantPolicy,
+                   scales=None) -> list[QTensor]:
+    """Quantize every plan input node; ``scales[i]`` (when given and not
+    None) is that node's delayed per-tensor scale."""
+    out = []
+    for i, x in enumerate(tensors):
+        s = None if scales is None else scales[i]
+        out.append(quantize(x, policy, scale=s))
+    return out

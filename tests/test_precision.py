@@ -1,0 +1,559 @@
+"""Mixed-precision contraction subsystem tests.
+
+Layers:
+
+* quantize/dequantize semantics: round-trip error bounds per dtype,
+  tile-vs-tensor refinement, Pallas kernel parity vs the jnp reference;
+* scaled-matmul/chain kernels: parity vs the f32 einsum reference at
+  per-dtype tolerances (the table in ``docs/PRECISION.md``), and tight
+  parity between the pallas and einsum *quantized* backends;
+* precision-aware cost model: FP8 reduces modeled HBM+ICI bytes on every
+  ATIS-TT phase, and flips a CSSE stage-2 winner (ISSUE acceptance);
+* cache-key separation: a bf16 CSSE/autotune entry is never served to a
+  quantized run;
+* training integration: delayed-scaling amax state through the
+  custom-vjp gradient channel, AdamW passthrough/loss-scale/master
+  weights, FP8 gradient parity single-device and (via ``_needs8`` +
+  subprocess fallback) on an 8-device mesh, and end-to-end FP8-vs-bf16
+  loss parity on the small LM config.
+"""
+
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import contraction, csse, factorizations as F
+from repro.core import perf_model as pm
+from repro.core import tensorized as tz
+from repro.kernels.fused_contraction import chain_pallas, matmul_pallas
+from repro.kernels.quantized import dequantize_pallas, quantize_pallas
+from repro.precision import (
+    QuantPolicy, compute_scale, dequantize, quantize, scale_from_history,
+    update_history,
+)
+
+MESH8 = pm.MeshSpec(axes=(("data", 8),), axis_sharding=(("b", ("data",)),),
+                    device_kind="cpu")
+
+_needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (CI forced-host-device leg)")
+
+#: max-relative tolerance vs an f32 reference, per storage dtype
+#: (documented in docs/PRECISION.md; bench_precision uses the same table)
+TOL = {"fp8_e4m3": 2e-1, "fp8_e5m2": 3e-1, "int8": 8e-2}
+
+QUANT = ["fp8_e4m3", "fp8_e5m2", "int8"]
+
+
+def _atis_fact():
+    return F.tt((12, 8, 8), (8, 8, 12), 8)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.key(seed), shape,
+                             jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", QUANT)
+def test_roundtrip_error_bound(dtype):
+    """|deq(quant(x)) - x| is bounded by the dtype's quantization step."""
+    pol = QuantPolicy.parse(dtype)
+    x = _rand((64, 48), seed=1, scale=3.0)
+    t = quantize(x, pol)
+    err = jnp.max(jnp.abs(dequantize(t) - x))
+    if dtype == "int8":
+        # symmetric rounding: half a step
+        assert float(err) <= float(t.scale) * 0.5 + 1e-7
+    else:
+        # fp8: relative error 2^-(mantissa+1) of the amax-ranged value
+        mant = 3 if dtype == "fp8_e4m3" else 2
+        bound = float(jnp.max(jnp.abs(x))) * 2.0 ** -(mant + 1) + 1e-7
+        assert float(err) <= bound
+
+
+def test_tile_scaling_refines_per_tensor():
+    """Row-group scales beat one per-tensor scale on scale-skewed data.
+
+    int8 only: fixed-point error is proportional to the scale, so
+    refining scales to row groups is a direct win; fp8 is a
+    relative-error format whose accuracy barely depends on the scale
+    (any scale that avoids saturation lands in the same binade
+    structure), so no such ordering holds there."""
+    x = _rand((128, 64), seed=2) * jnp.linspace(0.01, 10, 128)[:, None]
+    qt = quantize(x, QuantPolicy(dtype="int8", granularity="tile",
+                                 tile_rows=32))
+    qp = quantize(x, QuantPolicy(dtype="int8"))
+    assert qt.scale.shape == (4,)
+    err_t = float(jnp.mean(jnp.abs(dequantize(qt) - x)))
+    err_p = float(jnp.mean(jnp.abs(dequantize(qp) - x)))
+    assert err_t < err_p
+
+
+def test_tile_scaling_nondividing_rows_falls_back():
+    x = _rand((100, 8), seed=3)
+    t = quantize(x, QuantPolicy(dtype="int8", granularity="tile",
+                                tile_rows=64))
+    assert t.scale.ndim == 1 and t.scale.shape == (1,)
+
+
+@pytest.mark.parametrize("dtype", QUANT)
+def test_quantize_kernel_matches_reference(dtype):
+    pol = QuantPolicy.parse(dtype)
+    x = _rand((100, 96), seed=4, scale=2.0)
+    t = quantize(x, pol)
+    qk = quantize_pallas(x, t.row_scales(), pol)
+    np.testing.assert_array_equal(np.asarray(qk, np.float32),
+                                  np.asarray(t.q, np.float32))
+    deq = dequantize_pallas(t.q, t.row_scales())
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(dequantize(t)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Scaled-matmul / chain kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", QUANT)
+@pytest.mark.parametrize("transpose_rhs", [False, True])
+def test_scaled_matmul_parity(dtype, transpose_rhs):
+    """Quantized GEMM with fused scale epilogue vs the f32 reference."""
+    pol = QuantPolicy.parse(dtype)
+    x = _rand((100, 96), seed=5)
+    w = _rand((96, 120), seed=6)
+    qx = quantize(x, pol)
+    qw = quantize(w.T if transpose_rhs else w, pol)
+    sl = qx.row_scales()
+    sr = jnp.full((1, 120), qw.scale, jnp.float32)
+    got = matmul_pallas(qx.q, qw.q, transpose_rhs=transpose_rhs,
+                        scales=(sl, sr))
+    want = x @ w
+    rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    assert rel < TOL[dtype]
+
+
+@pytest.mark.parametrize("dtype", QUANT)
+def test_scaled_matmul_padded_blocks(dtype):
+    """Non-dividing dims exercise the padded scale vectors."""
+    pol = QuantPolicy.parse(dtype)
+    x, w = _rand((70, 30), seed=7), _rand((30, 50), seed=8)
+    qx, qw = quantize(x, pol), quantize(w, pol)
+    got = matmul_pallas(qx.q, qw.q, block_m=32, block_n=32, block_k=16,
+                        scales=(qx.row_scales(),
+                                jnp.full((1, 50), qw.scale, jnp.float32)))
+    rel = float(jnp.max(jnp.abs(got - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < TOL[dtype]
+
+
+@pytest.mark.parametrize("dtype", QUANT)
+def test_scaled_chain_parity(dtype):
+    pol = QuantPolicy.parse(dtype)
+    x, a, b = _rand((100, 64), 9), _rand((64, 48), 10), _rand((48, 80), 11)
+    qx, qa, qb = (quantize(t, pol) for t in (x, a, b))
+    s1 = qx.row_scales() * qa.scale
+    s2 = jnp.full((1, 80), qb.scale, jnp.float32)
+    got = chain_pallas(qx.q, qa.q, qb.q, scales=(s1, s2))
+    want = (x @ a) @ b
+    rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    assert rel < TOL[dtype]
+
+
+# ---------------------------------------------------------------------------
+# Plan-level parity: pallas quantized vs einsum quantized vs f32
+# ---------------------------------------------------------------------------
+
+
+def _phase_nets(fact, tokens=128):
+    return {
+        "fp": fact.forward_network(batch_axes=(("b", tokens),)),
+        "bp": tz._bp_network(fact, tokens),
+        "wg0": tz._wg_network(fact, tokens, 0),
+    }
+
+
+@pytest.mark.parametrize("phase", ["fp", "bp", "wg0"])
+@pytest.mark.parametrize("dtype", ["fp8_e4m3", "int8"])
+def test_plan_execution_parity(phase, dtype):
+    pol = QuantPolicy.parse(dtype)
+    net = _phase_nets(_atis_fact())[phase]
+    plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+    arrays = [_rand(net.node_shape(i), seed=20 + i, scale=0.25)
+              for i in range(net.num_nodes)]
+    want = contraction.execute(plan, arrays)
+    scale = float(jnp.max(jnp.abs(want)))
+    ge = contraction.execute(plan, arrays, policy=pol)
+    gp = contraction.execute(plan, arrays, policy=pol, backend="pallas")
+    assert float(jnp.max(jnp.abs(ge - want))) / scale < TOL[dtype]
+    assert float(jnp.max(jnp.abs(gp - want))) / scale < TOL[dtype]
+    # both quantized backends share every quantization point on unfused
+    # plans; fused chains keep the intermediate in VMEM bf16, so allow the
+    # dtype-level slack rather than exact equality.
+    assert float(jnp.max(jnp.abs(gp - ge))) / scale < TOL[dtype]
+
+
+def test_bf16_policy_is_noop():
+    net = _phase_nets(_atis_fact())["fp"]
+    plan = csse.search(net).plan
+    arrays = [_rand(net.node_shape(i), seed=40 + i)
+              for i in range(net.num_nodes)]
+    want = contraction.execute(plan, arrays)
+    got = contraction.execute(plan, arrays, policy=QuantPolicy())
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Precision-aware cost model (ISSUE acceptance: bytes + flip)
+# ---------------------------------------------------------------------------
+
+
+def test_fp8_reduces_modeled_bytes_every_phase():
+    """FP8 halves HBM bytes on every ATIS-TT phase network, and the ICI
+    payload of every mesh-sharded contracted phase."""
+    fact = _atis_fact()
+    fp8 = QuantPolicy.parse("fp8_e4m3")
+    nets = dict(_phase_nets(fact))
+    nets["dw"] = tz._dw_network(fact, 128)
+    for i in range(fact.num_cores):
+        nets[f"wg{i}"] = tz._wg_network(fact, 128, i)
+    for name, net in nets.items():
+        plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+        for mesh in (None, MESH8):
+            cb = pm.evaluate(plan, fused_chain=True, mesh=mesh)
+            cq = pm.evaluate(plan, fused_chain=True, mesh=mesh, policy=fp8)
+            assert cq.bytes_hbm == cb.bytes_hbm // 2, (name, mesh)
+            assert cq.bytes_ici <= cb.bytes_ici, (name, mesh)
+            if cb.bytes_ici:
+                assert cq.bytes_ici == cb.bytes_ici // 2, (name, mesh)
+
+
+@pytest.mark.parametrize("dtype", ["fp8_e4m3", "int8"])
+def test_stage2_winner_flips_under_quantization(dtype):
+    """Halving every byte term re-ranks the WG candidates: the memory-bound
+    runner-up overtakes the bf16 winner once HBM traffic halves (latency
+    objective, fused chains) — the precision axis genuinely steers CSSE."""
+    pol = QuantPolicy.parse(dtype)
+    net = tz._wg_network(_atis_fact(), 128, 0)
+    b16 = csse.search(net, csse.SearchOptions(objective="latency",
+                                              fused_chain=True))
+    quant = csse.search(net, csse.SearchOptions(objective="latency",
+                                                fused_chain=True,
+                                                policy=pol))
+    assert b16.tree != quant.tree
+    # and the quantized winner is genuinely better under the fp8 pricing
+    b16_repriced = pm.evaluate(b16.plan, fused_chain=True, policy=pol)
+    assert quant.cost.latency_s <= b16_repriced.latency_s
+
+
+# ---------------------------------------------------------------------------
+# Cache-key separation (bf16 entries never served to quantized runs)
+# ---------------------------------------------------------------------------
+
+
+def test_csse_signature_keyed_on_policy():
+    net = _atis_fact().forward_network(batch_axes=(("b", 128),))
+    hw = pm.TPU_V5E
+    sigs = {
+        csse._signature(net, csse.SearchOptions(), hw),
+        csse._signature(net, csse.SearchOptions(
+            policy=QuantPolicy.parse("fp8_e4m3")), hw),
+        csse._signature(net, csse.SearchOptions(
+            policy=QuantPolicy.parse("fp8_e5m2")), hw),
+        csse._signature(net, csse.SearchOptions(
+            policy=QuantPolicy.parse("int8")), hw),
+        csse._signature(net, csse.SearchOptions(
+            policy=QuantPolicy.parse("int8:tile")), hw),
+    }
+    assert len(sigs) == 5
+    # the bf16 (no-op) policy must key identically to no policy at all
+    assert csse._signature(net, csse.SearchOptions(policy=QuantPolicy()),
+                           hw) in sigs
+
+
+def test_autotune_cache_key_separation(tmp_path):
+    """A bf16 tune record on disk is a miss for the fp8-tagged shape."""
+    from repro.core import autotune
+    tuner = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
+                           max_configs=2)
+    base = autotune.StepShape("gemm", (32, 32, 32))
+    fp8 = autotune.StepShape("gemm", (32, 32, 32),
+                             policy="fp8_e4m3/tensor")
+    assert tuner.signature(base) != tuner.signature(fp8)
+    tuner.record(base)
+    fresh = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
+                           max_configs=2)
+    fresh.record(fp8)
+    assert fresh.stats["disk_hits"] == 0 and fresh.stats["measured"] == 1
+    # same shape again: now it hits its own (policy-tagged) entry
+    again = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
+                           max_configs=2)
+    rec = again.record(fp8)
+    assert again.stats["disk_hits"] == 1 and rec.shape.policy == fp8.policy
+
+
+def test_quantized_sweep_times_quantized_kernels(tmp_path):
+    from repro.core import autotune
+    tuner = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
+                           max_configs=2)
+    rec = tuner.record(autotune.StepShape("gemm", (64, 64, 64),
+                                          policy="int8/tensor"))
+    assert rec.measured and rec.best_s < float("inf")
+    ops = tuner._operands(rec.shape)
+    assert ops[0].dtype == jnp.int8 and ops[1].dtype == jnp.int8
+    assert ops[2].shape == (64, 1) and ops[3].shape == (1, 64)
+
+
+# ---------------------------------------------------------------------------
+# Scale state (delayed scaling) units
+# ---------------------------------------------------------------------------
+
+
+def test_scale_from_history_bootstrap_and_max():
+    hist = jnp.zeros((4,))
+    s0 = scale_from_history(hist, 2.0, qmax=127.0)
+    assert float(s0) == pytest.approx(2.0 / 127.0)      # bootstrap
+    hist = update_history(hist, 3.0)
+    hist = update_history(hist, 1.0)
+    s1 = scale_from_history(hist, 0.5, qmax=127.0)
+    assert float(s1) == pytest.approx(3.0 / 127.0)      # max over window
+    assert float(compute_scale(0.0, 127.0)) > 0          # eps floor
+
+
+def test_update_history_rolls_window():
+    hist = jnp.asarray([1.0, 2.0, 3.0])
+    new = update_history(hist, 9.0)
+    np.testing.assert_allclose(np.asarray(new), [9.0, 1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# Training integration
+# ---------------------------------------------------------------------------
+
+
+def _layers(dtype="fp8_e4m3", **over):
+    base = tz.TNNConfig(enabled=True, method="tt", rank=8, num_factors=3)
+    quant = dataclasses.replace(base, precision=QuantPolicy.parse(dtype),
+                                **over)
+    l0 = tz.make_tensorized_linear(768, 768, base,
+                                   compute_dtype=jnp.float32)
+    lq = tz.make_tensorized_linear(768, 768, quant,
+                                   compute_dtype=jnp.float32)
+    return l0, lq
+
+
+def test_fp8_gradient_parity_single_device():
+    """FP8 end-to-end custom-vjp grads track the full-precision layer at
+    the dtype tolerance, and the amax history advances through the
+    gradient channel."""
+    l0, lq = _layers("fp8_e4m3")
+    params = lq.init(jax.random.key(0))
+    assert tz.AMAX_KEY in params
+    p0 = {k: v for k, v in params.items() if k != tz.AMAX_KEY}
+    x = _rand((16, 8, 768), seed=50)
+
+    g0 = jax.grad(lambda p: (l0(p, x) ** 2).sum())(p0)
+    gq = jax.jit(jax.grad(lambda p: (lq(p, x) ** 2).sum()))(params)
+    for a, b in zip(jax.tree.leaves(g0["cores"]),
+                    jax.tree.leaves(gq["cores"])):
+        scale = max(float(jnp.max(jnp.abs(a))), 1e-6)
+        assert float(jnp.max(jnp.abs(b - a))) / scale < TOL["fp8_e4m3"]
+    # state channel: p - g is the rolled history with this step's amaxes
+    new_hist = params[tz.AMAX_KEY] - gq[tz.AMAX_KEY]
+    assert bool(jnp.all(new_hist[:, 0] > 0))
+    assert bool(jnp.all(new_hist[:, 1:] == 0))
+
+
+def test_quantized_layer_without_amax_state_still_runs():
+    """Pre-precision checkpoints (no amax entry) fall back to just-in-time
+    scales instead of failing."""
+    _, lq = _layers("int8")
+    params = lq.init(jax.random.key(0))
+    del params[tz.AMAX_KEY]
+    x = _rand((4, 768), seed=51)
+    y = lq(params, x)
+    assert y.shape == (4, 768)
+    g = jax.grad(lambda p: (lq(p, x) ** 2).sum())(params)
+    assert tz.AMAX_KEY not in g
+
+
+def test_adamw_amax_passthrough_and_loss_scale():
+    from repro.optim.adamw import AdamW
+    opt = AdamW(lr=1e-2, loss_scale=64.0, warmup_steps=0, total_steps=10,
+                min_lr_ratio=1.0)
+    params = {"w": jnp.ones((4, 4)), "quant_amax": jnp.zeros((2, 3))}
+    state = opt.init(params)
+    new_hist = jnp.asarray([[1.0, 0, 0], [2.0, 0, 0]])
+    grads = {"w": jnp.full((4, 4), 0.5) * 64.0,     # scaled by loss_scale
+             "quant_amax": params["quant_amax"] - new_hist}
+    new_params, new_state, metrics = opt.update(grads, state, params)
+    # passthrough: the amax leaf became exactly the new history
+    np.testing.assert_allclose(np.asarray(new_params["quant_amax"]),
+                               np.asarray(new_hist))
+    # grad norm saw the *unscaled* gradient, amax leaf excluded
+    assert float(metrics["grad_norm"]) == pytest.approx(
+        float(jnp.sqrt(jnp.sum(jnp.square(jnp.full((4, 4), 0.5))))))
+    # and the unscale+clip left a sane finite update on w
+    assert bool(jnp.all(jnp.isfinite(new_params["w"])))
+    assert float(jnp.max(jnp.abs(new_params["w"] - params["w"]))) > 0
+
+
+def test_microbatch_amax_accumulation_takes_max():
+    """Gradient accumulation must record the worst-case microbatch amax in
+    the delayed-scaling window, not the microbatch mean — an outlier
+    microbatch would otherwise saturate against a diluted scale."""
+    from repro.launch import steps as steps_lib
+    from repro.optim.adamw import AdamW
+
+    _, lq = _layers("fp8_e4m3")
+    params = lq.init(jax.random.key(0))
+
+    class Model:
+        def loss(self, p, batch, shard):
+            return (lq(p, batch["x"]) ** 2).sum(), {}
+
+    opt = AdamW(lr=1e-3, warmup_steps=0, total_steps=10)
+    step = steps_lib.make_train_step(Model(), opt, shard=lambda x, a: x,
+                                     microbatches=2)
+    # microbatch 0 tiny, microbatch 1 large: the window must see ~8, not
+    # the ~4 a sum/2 accumulation would record.
+    x = jnp.concatenate([_rand((8, 768), seed=70) * 0.01,
+                         _rand((8, 768), seed=71) * 8.0])
+    state = {"params": params, "opt": opt.init(params)}
+    new_state, _ = jax.jit(step)(state, {"x": x})
+    hist = new_state["params"][tz.AMAX_KEY]
+    want = float(jnp.max(jnp.abs(x[8:])))
+    assert float(hist[0, 0]) == pytest.approx(want, rel=1e-5)
+
+
+def test_adamw_master_weights_round_trip():
+    from repro.optim.adamw import AdamW
+    opt = AdamW(lr=1e-4, master_weights=True, weight_decay=0.0,
+                warmup_steps=0, total_steps=10, min_lr_ratio=1.0)
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.master is not None
+    assert state.master["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((4, 4), 1e-3, jnp.bfloat16)}
+    p, s, _ = opt.update(grads, state, params)
+    # the f32 master moved even though the bf16 cast may round
+    assert float(jnp.max(jnp.abs(s.master["w"] - 1.0))) > 0
+    assert p["w"].dtype == jnp.bfloat16
+    # repeated tiny updates accumulate in the master, not the bf16 param
+    for _ in range(3):
+        p, s, _ = opt.update(grads, s, p)
+    assert float(jnp.max(jnp.abs(s.master["w"] - 1.0))) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh (native on the CI forced-host-device leg)
+# ---------------------------------------------------------------------------
+
+
+def _mesh8():
+    n = jax.device_count()
+    return jax.make_mesh((8, n // 8), ("data", "model"))
+
+
+@_needs8
+@pytest.mark.parametrize("backend", ["einsum", "pallas"])
+def test_sharded_quantized_execution_parity(backend):
+    """Quantized sharded execute matches the f32 reference at the dtype
+    tolerance.  (Input scales are global, so shards quantize inputs
+    identically; *intermediates* requantize with per-shard amax, which is
+    a different — equally valid — quantization than the single-device
+    run, hence the dtype-level rather than exact comparison.)"""
+    pol = QuantPolicy.parse("fp8_e4m3")
+    net = _phase_nets(_atis_fact())["fp"]
+    plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+    arrays = [_rand(net.node_shape(i), seed=60 + i, scale=0.125)
+              for i in range(net.num_nodes)]
+    want = contraction.execute(plan, arrays)
+    got = contraction.execute(plan, arrays, policy=pol, backend=backend,
+                              mesh=_mesh8())
+    scale = max(float(jnp.max(jnp.abs(want))), 1e-6)
+    tol = TOL["fp8_e4m3"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * scale)
+
+
+@_needs8
+def test_sharded_fp8_layer_grads_match_single_device():
+    l0, lq = _layers("fp8_e4m3")
+    lm = dataclasses.replace(lq, mesh=_mesh8(), mesh_axes=("data",))
+    params = lq.init(jax.random.key(0))
+    x = _rand((16, 8, 768), seed=61)
+
+    g1 = jax.grad(lambda p: (lq(p, x) ** 2).sum())(params)
+    gm = jax.jit(jax.grad(lambda p: (lm(p, x) ** 2).sum()))(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gm)):
+        scale = max(float(jnp.max(jnp.abs(a))), 1e-6)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=5e-2, atol=5e-2 * scale)
+
+
+@pytest.mark.slow
+def test_sharded_fp8_parity_8dev_subprocess():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.core import contraction, csse, factorizations as F
+        from repro.precision import QuantPolicy
+        pol = QuantPolicy.parse("fp8_e4m3")
+        fact = F.tt((12, 8, 8), (8, 8, 12), 8)
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
+        net = fact.forward_network(batch_axes=(("b", 128),))
+        plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+        arrays = [jax.random.normal(jax.random.key(i), net.node_shape(i),
+                                    jnp.float32) / 8
+                  for i in range(net.num_nodes)]
+        want = contraction.execute(plan, arrays)   # f32 reference
+        for backend in ("einsum", "pallas"):
+            got = contraction.execute(plan, arrays, policy=pol,
+                                      backend=backend, mesh=mesh)
+            err = float(jnp.max(jnp.abs(got - want))
+                        / jnp.max(jnp.abs(want)))
+            assert err < 2e-1, (backend, err)   # fp8_e4m3 dtype tolerance
+        print("QUANT-SHARDED8 OK")
+    """)
+    import os
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600,
+                         env={**os.environ, "PYTHONPATH": "src"},
+                         cwd=repo)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "QUANT-SHARDED8 OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# End-to-end loss parity (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fp8_training_loss_parity():
+    """FP8 training (delayed scaling + loss scaling) tracks the bf16 loss
+    trajectory on the small LM config within the documented tolerance
+    (docs/PRECISION.md: |final bf16 - final fp8| < 0.05 after 20 smoke
+    steps)."""
+    from repro.launch.train import train
+    kw = dict(smoke=True, tnn=True, steps=20, global_batch=8, seq_len=64,
+              lr=3e-3, ckpt_dir=None, ckpt_every=100, microbatches=1,
+              production_mesh=False, log_every=100)
+    out_b = train("tinyllama_1_1b", **kw)
+    out_q = train("tinyllama_1_1b", tnn_precision="fp8",
+                  loss_scale=128.0, **kw)
+    assert out_q["final_loss"] < out_q["losses"][0], "fp8 run not learning"
+    assert abs(out_b["final_loss"] - out_q["final_loss"]) < 0.05

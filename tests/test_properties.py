@@ -13,6 +13,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import contraction, csse, factorizations as F, perf_model
 from repro.core.tnetwork import plan_from_tree
 from repro.optim import compression
+from repro.precision import (
+    DTYPES, QuantPolicy, compute_scale, dequantize, quantize,
+    scale_from_history, update_history,
+)
 
 _dims = st.lists(st.integers(2, 5), min_size=2, max_size=3)
 _methods = st.sampled_from(["tt", "ttm", "tr", "ht", "bt"])
@@ -89,6 +93,56 @@ def test_int8_quantisation_error_bound(rows, cols):
     deq = compression.dequantize_int8(q, scale)
     # symmetric per-tensor int8: error bounded by half a quantisation step
     assert float(jnp.max(jnp.abs(deq - x))) <= float(scale) * 0.5 + 1e-7
+
+
+_quant_dtypes = st.sampled_from(["fp8_e4m3", "fp8_e5m2", "int8"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(_quant_dtypes,
+       st.floats(0.0, 1e6, allow_nan=False),
+       st.floats(1.0, 4.0))
+def test_compute_scale_positive_and_monotone(dtype, amax, margin):
+    """Scales are strictly positive (eps floor) and monotone in amax."""
+    qmax = DTYPES[dtype][2]
+    s = float(compute_scale(amax, qmax, margin))
+    assert s > 0 and math.isfinite(s)
+    assert float(compute_scale(amax * 2 + 1e-6, qmax, margin)) > s
+    if amax > 1e-9:
+        # definition: amax maps to qmax/margin
+        assert s == pytest.approx(amax * margin / qmax, rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_quant_dtypes, st.integers(1, 40), st.integers(1, 16),
+       st.floats(0.01, 100.0))
+def test_quantize_respects_range(dtype, rows, cols, spread):
+    """Quantized values never exceed the dtype's representable range, and
+    the round-trip error is bounded by one quantization step."""
+    pol = QuantPolicy.parse(dtype)
+    x = jnp.asarray(np.random.default_rng(rows * cols).standard_normal(
+        (rows, cols)) * spread, jnp.float32)
+    t = quantize(x, pol)
+    q32 = np.asarray(t.q, np.float32)
+    assert np.all(np.abs(q32) <= pol.qmax)
+    step = float(t.scale) * (1.0 if dtype == "int8"
+                             else pol.qmax * 2.0 ** -3)
+    assert float(jnp.max(jnp.abs(dequantize(t) - x))) <= step + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.0, 1e4), min_size=1, max_size=8),
+       st.floats(1e-6, 1e4))
+def test_scale_from_history_uses_window_max(amaxes, current):
+    """The delayed scale always reflects the window max — and bootstraps
+    from the current amax only while the history is all-zero."""
+    hist = jnp.zeros((len(amaxes),))
+    for a in amaxes:
+        hist = update_history(hist, a)
+    s = float(scale_from_history(hist, current, qmax=127.0))
+    hmax = max(amaxes)
+    expect = hmax if hmax > 0 else current
+    assert s == pytest.approx(float(compute_scale(expect, 127.0)), rel=1e-6)
 
 
 @settings(max_examples=12, deadline=None)
