@@ -73,25 +73,24 @@ def _plan_compiler_records(rows):
         for r in rows]
 
 
-def _autotune_records(rows):
-    return [schema.make_record(
-        r["name"], r["wall_s"], fusion_hit_rate=r["fusion_hit_rate"],
-        **{k: v for k, v in r.items()
-           if k not in ("name", "wall_s", "fusion_hit_rate")})
-        for r in rows]
+def _flat_records(*named):
+    """Adapter for modules whose rows already use schema field names:
+    ``named`` fields pass through as record fields, the rest as metrics."""
+    fields = ("name", "wall_s", "fusion_hit_rate") + named
+
+    def adapt(rows):
+        return [schema.make_record(
+            r["name"], r["wall_s"], fusion_hit_rate=r["fusion_hit_rate"],
+            **{k: r[k] for k in named},
+            **{k: v for k, v in r.items() if k not in fields})
+            for r in rows]
+    return adapt
 
 
-_sharded_records = _autotune_records   # same flat row shape
-
-
-def _precision_records(rows):
-    return [schema.make_record(
-        r["name"], r["wall_s"], fusion_hit_rate=r["fusion_hit_rate"],
-        dtype=r["dtype"], policy=r["policy"],
-        **{k: v for k, v in r.items()
-           if k not in ("name", "wall_s", "fusion_hit_rate", "dtype",
-                        "policy")})
-        for r in rows]
+_autotune_records = _flat_records()
+_sharded_records = _flat_records()
+_precision_records = _flat_records("dtype", "policy")
+_memory_records = _flat_records("dtype", "policy", "peak_bytes")
 
 
 def _suite(smoke: bool):
@@ -111,6 +110,9 @@ def _suite(smoke: bool):
         ("FP8/INT8 quantized contraction: bytes moved + wall, bf16 vs "
          "fp8 vs int8",
          "bench_precision", _precision_records),
+        ("Peak activation memory: plan peaks, budgeted CSSE, stash "
+         "policies (store/recompute/quantized)",
+         "bench_memory", _memory_records),
     ]
     if not smoke:
         suite = [
@@ -134,7 +136,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
                     help="CPU-cheap subset (plan_compiler + autotune + "
-                         "sharded + precision) — CI's bench-smoke job")
+                         "sharded + precision + memory) — CI's "
+                         "bench-smoke job")
     ap.add_argument("--json-dir", default=None,
                     help="write BENCH_<module>.json files here")
     ap.add_argument("--baseline", default=None,
@@ -147,6 +150,12 @@ def main(argv=None) -> None:
                     help="write all records (merged) as a new baseline "
                          "JSON — how benchmarks/baselines/*.json are "
                          "refreshed")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append the wall_s/peak_bytes delta table "
+                         "(markdown) here; defaults to "
+                         "$GITHUB_STEP_SUMMARY when set, so CI renders "
+                         "the per-benchmark deltas without artifact "
+                         "downloads")
     args = ap.parse_args(argv)
 
     import importlib
@@ -186,8 +195,16 @@ def main(argv=None) -> None:
             all_records, baseline, gate=args.gate)
         all_failures += [f"regression: {f}" for f in gate_failures]
         print(f"\nregression gate: {len(baseline)} baseline records, "
-              f"gate {args.gate}x -> "
+              f"gate {args.gate}x (wall_s + peak_bytes) -> "
               f"{'PASS' if not gate_failures else 'FAIL'}")
+        summary = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+        if summary:
+            with open(summary, "a") as f:
+                f.write("## bench-smoke deltas vs baseline\n\n")
+                f.write(schema.delta_table(all_records, baseline))
+                f.write(f"\n\ngate {args.gate}x: "
+                        f"{'PASS' if not gate_failures else 'FAIL'}\n")
+            print(f"wrote delta table to {summary}")
 
     print("\n" + "=" * 70)
     if all_failures:

@@ -10,14 +10,20 @@ Every benchmark row normalises to one flat record:
                                # (None = module is dtype-agnostic)
      "policy": str | None,     # quantization policy tag ("fp8_e4m3/tensor",
                                # ...; None = unquantized execution)
+     "peak_bytes": int | None, # peak memory of the case (probe: measured
+                               # on stats-capable devices, deterministic
+                               # live-bytes model on CPU; None = module
+                               # does not probe memory)
      "device": str,            # jax backend:device_kind
      "git_sha": str,           # HEAD at run time ("unknown" outside git)
      "metrics": dict}          # benchmark-specific extras (floats/strs)
 
 ``benchmarks/run.py`` writes one ``BENCH_<module>.json`` per module
 (``{"schema": 1, "records": [...]}``) and CI's bench-smoke job uploads them
-as artifacts and gates ``wall_s`` regressions against the checked-in
-baseline (:func:`regression_failures`).
+as artifacts and gates ``wall_s`` *and* ``peak_bytes`` regressions against
+the checked-in baseline (:func:`regression_failures`), rendering the
+per-benchmark delta table into ``$GITHUB_STEP_SUMMARY``
+(:func:`delta_table`).
 """
 
 from __future__ import annotations
@@ -47,6 +53,7 @@ def device() -> str:
 def make_record(name: str, wall_s: float,
                 fusion_hit_rate: float | None = None,
                 dtype: str | None = None, policy: str | None = None,
+                peak_bytes: int | None = None,
                 **metrics) -> dict:
     return {
         "name": name,
@@ -55,6 +62,7 @@ def make_record(name: str, wall_s: float,
                             else float(fusion_hit_rate)),
         "dtype": dtype,
         "policy": policy,
+        "peak_bytes": None if peak_bytes is None else int(peak_bytes),
         "device": device(),
         "git_sha": git_sha(),
         "metrics": metrics,
@@ -79,11 +87,18 @@ def load_json(path: str) -> list[dict]:
 def regression_failures(records: list[dict], baseline: list[dict],
                         gate: float = 1.5,
                         min_wall_s: float = 0.05) -> list[str]:
-    """Names whose wall_s regressed more than ``gate``x vs the baseline.
+    """Names whose wall_s or peak_bytes regressed more than ``gate``x.
 
-    Records whose baseline wall_s is under ``min_wall_s`` are not gated —
-    sub-50ms timings are dominated by dispatch/timer noise and would make
-    the gate flap; they are still emitted and uploaded for trend tracking.
+    wall_s: records whose baseline wall_s is under ``min_wall_s`` are not
+    gated — sub-50ms timings are dominated by dispatch/timer noise and
+    would make the gate flap; they are still emitted and uploaded for
+    trend tracking.
+
+    peak_bytes: gated whenever both sides carry a value — memory probes
+    are deterministic on CI's CPU leg (modeled live-bytes accounting), so
+    there is no noise floor to carve out; a peak regression is a real
+    planner/stash change, exactly what must not ship silently.
+
     New records (absent from the baseline) never fail; deleting a
     baselined record does.
     """
@@ -95,6 +110,19 @@ def regression_failures(records: list[dict], baseline: list[dict],
         if got is None:
             failures.append(f"{name}: present in baseline but not emitted")
             continue
+        base_peak = base.get("peak_bytes")
+        got_peak = got.get("peak_bytes")
+        if base_peak is not None:
+            if got_peak is None:
+                # A record that stops probing memory is a loss of gate
+                # coverage, not a pass — same policy as a vanished record.
+                failures.append(
+                    f"{name}: baseline has peak_bytes {base_peak} but the "
+                    f"record no longer emits it")
+            elif got_peak > gate * base_peak:
+                failures.append(
+                    f"{name}: peak_bytes {got_peak} > {gate}x baseline "
+                    f"{base_peak}")
         if base["wall_s"] < min_wall_s:
             continue
         if got["wall_s"] > gate * base["wall_s"]:
@@ -102,3 +130,45 @@ def regression_failures(records: list[dict], baseline: list[dict],
                 f"{name}: wall_s {got['wall_s']:.4f} > {gate}x baseline "
                 f"{base['wall_s']:.4f}")
     return failures
+
+
+def delta_table(records: list[dict], baseline: list[dict]) -> str:
+    """Markdown wall_s / peak_bytes delta table vs the baseline — what CI
+    appends to ``$GITHUB_STEP_SUMMARY`` so a red gate is diagnosable
+    without downloading artifacts."""
+
+    def fmt_delta(got, base):
+        if base is None:
+            return "new" if got is not None else "-"
+        if got is None:
+            return "missing"
+        if base == 0:
+            return "-" if got == 0 else "from 0"
+        return f"{(got / base - 1) * 100:+.1f}%"
+
+    by_name = {r["name"]: r for r in baseline}
+    lines = [
+        "| benchmark | wall_s | baseline | Δ | peak_bytes | baseline | Δ |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        base = by_name.get(r["name"], {})
+        bw = base.get("wall_s")
+        bp = base.get("peak_bytes")
+        gp = r.get("peak_bytes")
+        lines.append(
+            f"| {r['name']} "
+            f"| {r['wall_s']:.4f} "
+            f"| {'-' if bw is None else f'{bw:.4f}'} "
+            f"| {fmt_delta(r['wall_s'], bw)} "
+            f"| {'-' if gp is None else gp} "
+            f"| {'-' if bp is None else bp} "
+            f"| {fmt_delta(gp, bp)} |")
+    emitted = {r["name"] for r in records}
+    for base in baseline:
+        if base["name"] not in emitted:
+            bp = base.get("peak_bytes")
+            lines.append(f"| {base['name']} | missing | "
+                         f"{base['wall_s']:.4f} | missing | - | "
+                         f"{'-' if bp is None else bp} | missing |")
+    return "\n".join(lines)

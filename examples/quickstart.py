@@ -7,17 +7,21 @@
 3. Price the same layer under an FP8 quantization policy — halved
    HBM/ICI bytes, and a precision-aware stage 2 that can pick different
    sequences.
-4. Train a small tensorized transformer for a few steps, under the full
+4. Plan memory: the per-plan peak-footprint model as a CSSE budget
+   constraint, and the activation-stash planner that fits a training
+   budget by quantized stashing + gradient accumulation.
+5. Train a small tensorized transformer for a few steps, under the full
    executor flag surface.
 
-The train() keyword arguments demonstrated in step 4 mirror the CLI
+The train() keyword arguments demonstrated in step 5 mirror the CLI
 one-to-one (see docs/ARCHITECTURE.md, docs/SHARDING.md,
-docs/PRECISION.md):
+docs/PRECISION.md, docs/MEMORY.md):
 
     python -m repro.launch.train --arch tinyllama_1_1b --smoke --tnn \
         --tnn-backend pallas|einsum  --tnn-autotune  \
         --tnn-mesh data[,model]      --tnn-precision fp8|int8[:tile] \
-        --loss-scale 128
+        --tnn-remat store|recompute|quantized  \
+        --tnn-memory-budget 64MB     --loss-scale 128
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -64,7 +68,30 @@ for phase in ("fp", "bp", "wg"):
     print(f"  {phase}: HBM {b.bytes_hbm:>8d}B -> {q.bytes_hbm:>8d}B under "
           f"fp8 ({b.bytes_hbm / q.bytes_hbm:.1f}x less traffic)")
 
-# -- 4. A tensorized layer is a drop-in module (here: int8 execution) --------
+# -- 4. Memory planning: budget-constrained CSSE + the stash planner ---------
+from repro import memory
+from repro.configs import base as cfgbase
+from repro.core import perf_model
+from repro.core.tensorized import TNNConfig
+from repro.core.tnetwork import plan_from_tree
+
+peaks = sorted(perf_model.peak_bytes(plan_from_tree(net, t))
+               for _, t in result.candidates)
+budgeted = csse.search(net, csse.SearchOptions(objective="latency",
+                                               memory_budget=peaks[0]))
+print(f"\nCSSE under a {peaks[0]}B budget: winner peak "
+      f"{budgeted.cost.peak_bytes}B (free winner: "
+      f"{result.cost.peak_bytes}B) — latency traded for footprint")
+
+tnn_q = TNNConfig(enabled=True, method="tt", rank=8, num_factors=3,
+                  targets=("mlp",), remat="quantized")
+smoke_cfg = cfgbase.get("tinyllama_1_1b").smoke(tnn_q)
+mb, report = memory.plan_microbatches(
+    smoke_cfg, 8, 64, memory.parse_budget("96KB"), tnn_q.stash_policy())
+print(f"stash planner: fp8 stash + {mb} microbatches fits 96KB "
+      f"(peak {memory.format_bytes(report.peak_bytes)})")
+
+# -- 5. A tensorized layer is a drop-in module (here: int8 execution) --------
 layer = TensorizedLinear(fact=fact, compute_dtype=jnp.float32,
                          precision=QuantPolicy.parse("int8"))
 params = layer.init(jax.random.key(0))   # includes the quant_amax history
@@ -86,5 +113,7 @@ out = train("tinyllama_1_1b", smoke=True, tnn=True, steps=30,
             tnn_autotune=False,          # --tnn-autotune
             tnn_mesh=None,               # --tnn-mesh data,model
             tnn_precision="fp8",         # --tnn-precision
+            tnn_remat="quantized",       # --tnn-remat
+            tnn_memory_budget="256KB",   # --tnn-memory-budget
             loss_scale=128.0)            # --loss-scale
 print(f"loss: {out['losses'][0]:.3f} -> {out['final_loss']:.3f}")

@@ -14,15 +14,19 @@ The executor flags mirror ``repro.launch.train`` one-to-one:
 ``--tnn-backend einsum|pallas`` routes contractions through the reference
 einsum or the Pallas plan compiler, ``--tnn-autotune`` turns on measured
 tile tuning + measured CSSE stage 2, ``--tnn-mesh data[,model]`` shard_maps
-every tensorized phase over the host mesh, and ``--tnn-precision
+every tensorized phase over the host mesh, ``--tnn-precision
 fp8|fp8_e5m2|int8[:tile]`` (with ``--loss-scale``) runs the quantized
-execution path with delayed scaling (docs/PRECISION.md).  The
-checkpoint/restore round trip below carries all of it — including the
-quant amax history, which lives in params.
+execution path with delayed scaling (docs/PRECISION.md), and
+``--tnn-remat store|recompute|quantized`` with ``--tnn-memory-budget 64MB``
+controls the activation stash + gradient-accumulation planner
+(docs/MEMORY.md).  The checkpoint/restore round trip below carries all of
+it — including the quant amax history, which lives in params.
 
 Run:  PYTHONPATH=src python examples/train_tnn_lm.py [--steps 60]
       PYTHONPATH=src python examples/train_tnn_lm.py \
           --tnn-precision fp8 --loss-scale 128 --tnn-backend einsum
+      PYTHONPATH=src python examples/train_tnn_lm.py \
+          --tnn-remat quantized --tnn-memory-budget 256KB
 """
 
 import argparse
@@ -46,6 +50,11 @@ def main():
     ap.add_argument("--tnn-autotune", action="store_true")
     ap.add_argument("--tnn-mesh", default=None, metavar="AXES")
     ap.add_argument("--tnn-precision", default=None, metavar="POLICY")
+    ap.add_argument("--tnn-remat", default=None, metavar="POLICY",
+                    help="store | recompute | quantized[:dtype]")
+    ap.add_argument("--tnn-memory-budget", default=None, metavar="BYTES",
+                    help="e.g. '256KB' — caps the activation stash via "
+                         "the microbatch planner and CSSE plan peaks")
     ap.add_argument("--loss-scale", type=float, default=1.0)
     args = ap.parse_args()
 
@@ -66,6 +75,8 @@ def main():
                   tnn_autotune=args.tnn_autotune,
                   tnn_mesh=args.tnn_mesh,
                   tnn_precision=args.tnn_precision,
+                  tnn_remat=args.tnn_remat,
+                  tnn_memory_budget=args.tnn_memory_budget,
                   loss_scale=args.loss_scale)
     ckpt = tempfile.mkdtemp(prefix="repro-ckpt-")
     try:

@@ -38,6 +38,7 @@ calibration report (:mod:`repro.analysis.calibrate`).
 from __future__ import annotations
 
 import concurrent.futures
+import dataclasses
 import hashlib
 import itertools
 import json
@@ -569,12 +570,9 @@ class CalibratedModel:
         analytic = perf_model.evaluate(plan, self.hw,
                                        fused_chain=fused_chain,
                                        mesh=self.mesh, policy=self.policy)
-        return perf_model.PlanCost(
-            latency_s=self.latency(plan, fused_chain=fused_chain),
-            energy_j=analytic.energy_j, flops=analytic.flops,
-            bytes_hbm=analytic.bytes_hbm, steps=analytic.steps,
-            bytes_ici=analytic.bytes_ici,
-            collective_s=analytic.collective_s)
+        return dataclasses.replace(
+            analytic,
+            latency_s=self.latency(plan, fused_chain=fused_chain))
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,11 @@ Two-stage search over contraction sequences of a tensor network:
   lowering and step costs come from timed executions, falling back to the
   analytic roofline for unmeasured steps.  That is the paper's
   model-matches-implementation property, enforced by measurement.
+  With ``SearchOptions.memory_budget`` set, stage 2 additionally treats the
+  modeled live-tensor peak (:func:`repro.core.perf_model.plan_peak_elems`,
+  priced at the policy storage width and per-shard mesh factors) as a hard
+  constraint: infeasible candidates never win while any feasible sequence
+  exists — the search trades latency for footprint (docs/MEMORY.md).
 
 Results are memoised in-process and on disk (keyed by the network signature
 and search options) so model building never pays the search twice — the
@@ -86,6 +91,16 @@ class SearchOptions:
                                       # measured searches time the quantized
                                       # kernels — a new axis candidates can
                                       # flip winners over
+    memory_budget: int | None = None  # peak-footprint constraint (bytes,
+                                      # per device): stage 2 drops every
+                                      # candidate whose modeled live-tensor
+                                      # peak (perf_model.plan_peak_elems x
+                                      # policy width / mesh factors) exceeds
+                                      # it and ranks the survivors by the
+                                      # objective; with no feasible
+                                      # candidate the minimum-peak sequence
+                                      # wins (documented degradation, never
+                                      # an error) — docs/MEMORY.md
 
 
 @dataclass
@@ -344,6 +359,10 @@ def _signature(net: TensorNetwork, opts: SearchOptions,
         # policy reshapes every memory term the ranking weighed.
         "policy": (None if opts.policy is None or not opts.policy.quantized
                    else opts.policy.signature_payload()),
+        # Memory budget: a winner chosen under one budget (or none) must
+        # never be served for another — feasibility filtering reshapes the
+        # stage-2 ranking, so budgets can flip winners.
+        "memory_budget": opts.memory_budget,
         "hw": (hw.name, hw.peak_flops, hw.hbm_bw, hw.dtype_bytes,
                hw.step_overhead_s, hw.ici_bw),
     }
@@ -469,7 +488,20 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
                                    mesh=opts.mesh)
         scored.append((stage2_metric(plan, cost), tree, plan, cost))
     scored.sort(key=lambda x: x[0])
-    best_metric, tree, plan, cost = scored[0]
+    # Memory budget: a hard constraint, not a tiebreak.  Rank only the
+    # candidates whose modeled peak fits; when nothing fits, degrade to the
+    # minimum-peak sequence (the least-infeasible plan) and say so in stats.
+    chosen = scored
+    if opts.memory_budget is not None:
+        feasible = [s for s in scored
+                    if s[3].peak_bytes <= opts.memory_budget]
+        if feasible:
+            chosen = feasible
+            stats["budget"] = "feasible"
+        else:
+            chosen = sorted(scored, key=lambda x: x[3].peak_bytes)
+            stats["budget"] = "infeasible"
+    best_metric, tree, plan, cost = chosen[0]
     stats["stage2_s"] = time.perf_counter() - t0 - stats["stage1_s"]
     if measured_model is not None:
         stats["stage2"] = "measured"

@@ -235,6 +235,36 @@ def collective_cost(plan: ContractionPlan, mesh: MeshSpec | None,
                           psum_devices=psum)
 
 
+def plan_peak_elems(plan: ContractionPlan) -> int:
+    """Peak live-tensor footprint (elements) of executing ``plan``.
+
+    Live-tensor accounting that mirrors the executor's slot lifetime rules
+    exactly (``contraction.execute`` frees an operand after its last use):
+    every input node is resident from the start, each step's output joins
+    the live set before its operands can be freed, and the peak is taken at
+    the step boundary where lhs, rhs and out coexist.  Elements, not bytes —
+    the hardware model multiplies by its (policy-repriced) ``dtype_bytes``.
+    One implementation, shared with ``peak_intermediate_elems``:
+    :meth:`~repro.core.tnetwork.ContractionPlan.peak_live_elems`.
+    """
+    return plan.peak_live_elems(include_inputs=True)
+
+
+def peak_bytes(plan: ContractionPlan, hw: "HardwareModel | None" = None,
+               mesh: MeshSpec | None = None, policy=None) -> int:
+    """Modeled peak memory (bytes) of one plan execution on one device.
+
+    Composes the three axes the planner cares about: the contraction
+    schedule (live-tensor accounting over steps), the quantization policy
+    (fp8/int8 storage widths via :func:`apply_policy`) and the mesh (each
+    device holds per-shard operands — :func:`localize_plan`).  This is the
+    quantity CSSE's ``memory_budget`` constrains and the CPU fallback of
+    the measured probe (``repro.memory.probe``) reports.
+    """
+    hw = apply_policy(hw or TPU_V5E, policy)
+    return plan_peak_elems(localize_plan(plan, mesh)) * hw.dtype_bytes
+
+
 @dataclass(frozen=True)
 class StepCost:
     flops: int
@@ -260,6 +290,7 @@ class PlanCost:
     steps: tuple[StepCost, ...] = field(repr=False, default=())
     bytes_ici: int = 0
     collective_s: float = 0.0
+    peak_bytes: int = 0      # live-tensor peak of the (localized) schedule
 
     @property
     def edp(self) -> float:
@@ -292,6 +323,7 @@ class PlanCost:
             "flops": float(self.flops),
             "memory": float(self.bytes_hbm),
             "collective": float(self.bytes_ici),
+            "peak_bytes": float(self.peak_bytes),
         }[objective]
 
 
@@ -367,4 +399,5 @@ def evaluate(plan: ContractionPlan, hw: HardwareModel = TPU_V5E,
               + coll.bytes_ici * hw.e_ici_byte)
     return PlanCost(latency_s=latency, energy_j=energy, flops=flops,
                     bytes_hbm=bytes_hbm, steps=tuple(step_costs),
-                    bytes_ici=coll.bytes_ici, collective_s=coll.latency_s)
+                    bytes_ici=coll.bytes_ici, collective_s=coll.latency_s,
+                    peak_bytes=plan_peak_elems(plan) * hw.dtype_bytes)

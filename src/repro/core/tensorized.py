@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.core import contraction, csse, factorizations, perf_model
 from repro.core.factorizations import Factorization
 from repro.core.tnetwork import TensorNetwork
+from repro.memory.stash import STORE, StashPolicy, stash, stashed_amax, unstash
 from repro.precision.policy import (
     AMAX_KEY, QuantPolicy, amax_of, scale_from_history,
 )
@@ -76,6 +77,19 @@ class TNNConfig:
                                           # delayed scaling); the bf16
                                           # default is the historical path.
                                           # `train --tnn-precision fp8`
+    remat: str = "store"                  # activation stash policy of the
+                                          # custom-vjp: store | recompute |
+                                          # quantized[:dtype] (repro.memory.
+                                          # StashPolicy; `train --tnn-remat
+                                          # quantized`, docs/MEMORY.md)
+    memory_budget: int | None = None      # bytes: CSSE stage-2 peak-
+                                          # footprint constraint per plan +
+                                          # the trainer's stash/microbatch
+                                          # planner envelope
+                                          # (`train --tnn-memory-budget`)
+
+    def stash_policy(self) -> StashPolicy:
+        return StashPolicy.parse(self.remat)
 
     def search_options(self, compute_dtype=None) -> csse.SearchOptions:
         # Autotuning swaps the analytic stage-2 objective for measured step
@@ -100,7 +114,8 @@ class TNNConfig:
                                   fused_chain=self.fused_chain,
                                   measure_dtype=dtype,
                                   mesh=self.mesh_spec(),
-                                  policy=policy)
+                                  policy=policy,
+                                  memory_budget=self.memory_budget)
 
     def mesh_spec(self):
         """The costing MeshSpec for this config's mesh (None off-mesh)."""
@@ -235,7 +250,11 @@ def layer_cost(fact: Factorization, batch: int,
                 flops=sum(c.flops for c in wg_cs),
                 bytes_hbm=sum(c.bytes_hbm for c in wg_cs),
                 bytes_ici=sum(c.bytes_ici for c in wg_cs),
-                collective_s=sum(c.collective_s for c in wg_cs))}
+                collective_s=sum(c.collective_s for c in wg_cs),
+                # WG contractions run one after another with frees in
+                # between: the group's working-set peak is the worst
+                # single plan, not the sum.
+                peak_bytes=max((c.peak_bytes for c in wg_cs), default=0))}
 
 
 # ---------------------------------------------------------------------------
@@ -258,6 +277,7 @@ class TensorizedLinear:
     mesh: Any = None                     # jax Mesh: shard_map every phase
     mesh_axes: tuple[str, ...] | None = None   # batch-axis mesh targets
     precision: QuantPolicy = QuantPolicy()     # fp8/int8 quantized execution
+    remat: StashPolicy = STORE           # fwd->bwd activation stash policy
 
     # -- params -------------------------------------------------------------
 
@@ -317,11 +337,11 @@ class TensorizedLinear:
                 jnp.float32))
             y = _tnn_apply_q(self.fact, self.opts, self.backend,
                              self.autotune, self.mesh, self.mesh_axes,
-                             self.precision, xt, hist, *cores)
+                             self.precision, self.remat, xt, hist, *cores)
         elif self.phase_paths:
             y = _tnn_apply(self.fact, self.opts, self.backend,
                            self.autotune, self.mesh, self.mesh_axes,
-                           xt, *cores)
+                           self.remat, xt, *cores)
         else:
             fp, _, _ = _plans(self.fact, batch, self.opts)
             policy = (self.precision if self.precision.quantized else None)
@@ -354,9 +374,9 @@ def _exec_tuner(backend: str, autotune_flag: bool):
     return autotune.default_tuner()
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
 def _tnn_apply(fact: Factorization, opts: csse.SearchOptions, backend: str,
-               autotune_flag: bool, mesh, mesh_axes,
+               autotune_flag: bool, mesh, mesh_axes, remat: StashPolicy,
                x: jax.Array, *cores: jax.Array) -> jax.Array:
     fp, _, _ = _plans(fact, x.shape[0], opts)
     return contraction.execute(fp.plan, [x, *cores], backend=backend,
@@ -365,14 +385,21 @@ def _tnn_apply(fact: Factorization, opts: csse.SearchOptions, backend: str,
                                mesh=mesh, mesh_batch_axes=mesh_axes)
 
 
-def _tnn_fwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, x, *cores):
+def _tnn_fwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, remat,
+             x, *cores):
     y = _tnn_apply(fact, opts, backend, autotune_flag, mesh, mesh_axes,
-                   x, *cores)
-    return y, (x, cores)
+                   remat, x, *cores)
+    # The stash policy decides what survives fwd->bwd: x as-is (store /
+    # recompute — the latter is rematerialized by the model's per-layer
+    # jax.checkpoint, so nothing here persists), or a quantized payload
+    # (docs/MEMORY.md).  Cores are params — always alive, never "stash".
+    return y, (stash(x, remat), cores)
 
 
-def _tnn_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, res, dy):
-    x, cores = res
+def _tnn_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, remat,
+             res, dy):
+    xres, cores = res
+    x = unstash(xres, remat, cores[0].dtype if cores else dy.dtype)
     batch = x.shape[0]
     _, bp, (wg_kind, dw_res, wg) = _plans(fact, batch, opts)
     tuner = _exec_tuner(backend, autotune_flag)
@@ -429,10 +456,10 @@ def _phase_scales(policy: QuantPolicy, hist, rows, tensors):
     return out
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
 def _tnn_apply_q(fact: Factorization, opts: csse.SearchOptions, backend: str,
                  autotune_flag: bool, mesh, mesh_axes, policy: QuantPolicy,
-                 x: jax.Array, amax_hist: jax.Array,
+                 remat: StashPolicy, x: jax.Array, amax_hist: jax.Array,
                  *cores: jax.Array) -> jax.Array:
     fp, _, _ = _plans(fact, x.shape[0], opts)
     core_rows = list(range(2, 2 + len(cores)))
@@ -444,16 +471,34 @@ def _tnn_apply_q(fact: Factorization, opts: csse.SearchOptions, backend: str,
                                policy=policy, input_scales=scales)
 
 
+def _stash_policy_q(policy: QuantPolicy, remat: StashPolicy) -> StashPolicy:
+    """Quantized-execution runs stash in the *execution* policy's dtype:
+    the WG phase quantizes x with the same delayed scale anyway, so the
+    stashed payload reproduces the executor's bits exactly (lossless vs
+    ``store``) — the remat dtype only governs the bf16 path."""
+    return StashPolicy(mode=remat.mode, dtype=policy.dtype)
+
+
 def _tnn_q_fwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, policy,
-               x, amax_hist, *cores):
+               remat, x, amax_hist, *cores):
     y = _tnn_apply_q(fact, opts, backend, autotune_flag, mesh, mesh_axes,
-                     policy, x, amax_hist, *cores)
-    return y, (x, amax_hist, cores)
+                     policy, remat, x, amax_hist, *cores)
+    sp = _stash_policy_q(policy, remat)
+    s_x = None
+    if sp.quantized:
+        # Pin the stash scale to the delayed scale the executor used, so
+        # the backward's re-quantization of x-hat is bit-identical.
+        s_x = scale_from_history(amax_hist[0], amax_of(x), policy.qmax,
+                                 policy.margin)
+    return y, (stash(x, sp, scale=s_x), amax_hist, cores)
 
 
 def _tnn_q_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, policy,
-               res, dy):
-    x, hist, cores = res
+               remat, res, dy):
+    xres, hist, cores = res
+    sp = _stash_policy_q(policy, remat)
+    x = unstash(xres, sp, cores[0].dtype if cores else dy.dtype)
+    amax_x = stashed_amax(xres, x)
     batch = x.shape[0]
     _, bp, (wg_kind, dw_res, wg) = _plans(fact, batch, opts)
     exec_kw = dict(backend=backend, fused_chain=opts.fused_chain,
@@ -461,8 +506,9 @@ def _tnn_q_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, policy,
                    mesh_batch_axes=mesh_axes, policy=policy)
     dy = dy.astype(x.dtype)
     core_rows = list(range(2, 2 + len(cores)))
-    s_x, s_dy, *s_cores = _phase_scales(
-        policy, hist, [0, 1] + core_rows, (x, dy) + cores)
+    s_x = scale_from_history(hist[0], amax_x, policy.qmax, policy.margin)
+    s_dy, *s_cores = _phase_scales(
+        policy, hist, [1] + core_rows, (dy,) + cores)
     dx = contraction.execute(bp.plan, [dy, *cores],
                              input_scales=[s_dy, *s_cores], **exec_kw)
     dcores = []
@@ -484,7 +530,9 @@ def _tnn_q_bwd(fact, opts, backend, autotune_flag, mesh, mesh_axes, policy,
                 input_scales=[s_x, s_dy, *s_others], **exec_kw))
     # The state-update channel: roll every history row one step with this
     # step's observed amaxes and deliver the delta as the "gradient".
-    current = jnp.stack([amax_of(x), amax_of(dy)]
+    # amax_x is the *forward* statistic (stashed exactly under a quantized
+    # stash), so the delayed-scaling window never drifts with the stash.
+    current = jnp.stack([amax_x, amax_of(dy)]
                         + [amax_of(c) for c in cores])
     new_hist = jnp.concatenate([current[:, None], hist[:, :-1]], axis=1)
     d_hist = hist - new_hist
@@ -516,4 +564,5 @@ def make_tensorized_linear(out_features: int, in_features: int,
                             autotune=tnn.autotune,
                             mesh=tnn.mesh,
                             mesh_axes=tnn.mesh_axes,
-                            precision=tnn.precision)
+                            precision=tnn.precision,
+                            remat=tnn.stash_policy())

@@ -216,15 +216,24 @@ class ContractionPlan:
     def total_mem_elems(self) -> int:
         return self.total_read_elems + self.total_write_elems
 
-    @property
-    def peak_intermediate_elems(self) -> int:
-        """Max live intermediate footprint (elements) over the schedule."""
+    def peak_live_elems(self, include_inputs: bool = False) -> int:
+        """Max live-tensor footprint (elements) over the schedule.
+
+        Mirrors the executor's slot lifetimes exactly (an operand is freed
+        after its last use).  With ``include_inputs`` the input nodes are
+        resident from the start — the whole-working-set quantity the
+        memory planner budgets (``perf_model.plan_peak_elems``); without,
+        only intermediates count.
+        """
         last_use: dict[int, int] = {}
         for t, s in enumerate(self.steps):
             last_use[s.lhs] = t
             last_use[s.rhs] = t
         live: dict[int, int] = {}
-        peak = 0
+        if include_inputs:
+            live = {i: self.network.node_numel(i)
+                    for i in range(self.network.num_nodes)}
+        peak = sum(live.values())
         for t, s in enumerate(self.steps):
             live[s.out] = math.prod(s.out_shape)
             peak = max(peak, sum(live.values()))
@@ -232,6 +241,11 @@ class ContractionPlan:
                 if op in live and last_use.get(op) == t:
                     del live[op]
         return peak
+
+    @property
+    def peak_intermediate_elems(self) -> int:
+        """Max live intermediate footprint (elements) over the schedule."""
+        return self.peak_live_elems(include_inputs=False)
 
     def describe(self) -> str:
         """Human-readable dump (used in logs / EXPERIMENTS.md)."""

@@ -26,6 +26,16 @@ ENC_FRAMES_DECODE = 1024   # fixed encoder stub length for enc-dec decode cells
 def build_model(arch: ArchConfig, tnn: TNNConfig | None = None,
                 smoke: bool = False):
     cfg = arch.smoke(tnn) if smoke else arch.model(tnn)
+    if (tnn is not None and tnn.enabled
+            and tnn.stash_policy().mode == "recompute"
+            and hasattr(cfg, "remat") and not cfg.remat):
+        # The "recompute" stash policy is realised at the model level:
+        # per-layer jax.checkpoint (nothing_saveable) drops every
+        # tensorized custom-vjp residual and re-runs the FP plans inside
+        # the backward pass; only the layer-boundary inputs persist
+        # (repro.memory.stash, docs/MEMORY.md).
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=True)
     return (EncDec(cfg) if arch.model_kind == "encdec" else LM(cfg)), cfg
 
 

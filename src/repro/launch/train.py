@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import memory
 from repro.checkpoint import store
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import base as cfgbase
@@ -40,6 +41,8 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           tnn_autotune: bool = False,
           tnn_mesh: str | None = None,
           tnn_precision: str | None = None,
+          tnn_remat: str | None = None,
+          tnn_memory_budget=None,
           loss_scale: float = 1.0) -> dict:
     arch = cfgbase.get(arch_id)
     mesh = (make_production_mesh() if production_mesh else make_host_mesh())
@@ -70,8 +73,52 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
         from repro.precision import QuantPolicy
         tnn_cfg = dataclasses.replace(
             tnn_cfg, precision=QuantPolicy.parse(tnn_precision))
+    budget = memory.parse_budget(tnn_memory_budget)
+    if tnn_cfg is not None and tnn_remat:
+        # Activation stash policy of every tensorized custom-vjp:
+        # store (default) | recompute | quantized[:dtype].  Parsed here so
+        # a bad flag fails before any compilation, and the *normalized*
+        # tag is stored so downstream string comparisons (build_model's
+        # recompute gate) can never miss a case/whitespace variant.
+        tnn_cfg = dataclasses.replace(
+            tnn_cfg, remat=memory.StashPolicy.parse(tnn_remat).tag())
+    if tnn_cfg is not None and budget is not None:
+        # The budget constrains both levels: CSSE stage-2 rejects plans
+        # whose modeled live-tensor peak exceeds it, and the stash planner
+        # below fits the per-step activation stash by microbatching.
+        tnn_cfg = dataclasses.replace(tnn_cfg, memory_budget=budget)
     model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=smoke)
     shard = sharding.make_sharder(mesh)
+
+    mem_probe = None
+    if tnn_cfg is not None and hasattr(cfg, "num_layers"):
+        stash_policy = tnn_cfg.stash_policy()
+        # Data-parallel factor of the host batch, derived from the same
+        # batch_spec the trainer lays data out with: each device stashes
+        # only its batch slice, keeping planner numbers in the same
+        # per-device units as the CSSE budget.
+        batch_axes = sharding.batch_spec(mesh)[0] or ()
+        if isinstance(batch_axes, str):
+            batch_axes = (batch_axes,)
+        dp = 1
+        for a in batch_axes:
+            dp *= mesh.shape[a]
+        if budget is not None:
+            planned, report = memory.plan_microbatches(
+                cfg, global_batch, seq_len, budget, stash_policy,
+                at_least=microbatches, shards=dp)
+            if planned != microbatches:
+                print(f"[train] memory planner: budget "
+                      f"{memory.format_bytes(budget)} -> "
+                      f"{planned} microbatches "
+                      f"(stash {memory.format_bytes(report.peak_bytes)})")
+                microbatches = planned
+        mem_probe = memory.probe_training(cfg, global_batch, seq_len,
+                                          microbatches, stash_policy,
+                                          shards=dp)
+        print(f"[train] activation stash [{stash_policy.tag()}]: "
+              f"{memory.format_bytes(mem_probe.peak_bytes)}/device "
+              f"({mem_probe.source})")
 
     data = SyntheticLM(DataConfig(
         vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
@@ -130,6 +177,10 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
     wall = time.time() - t_start
     return {"losses": history, "final_loss": history[-1] if history else None,
             "wall_s": wall, "stragglers": len(watchdog.straggler_events),
+            "peak_activation_bytes": (mem_probe.peak_bytes
+                                      if mem_probe else None),
+            "peak_source": mem_probe.source if mem_probe else None,
+            "microbatches": microbatches,
             "state": state}
 
 
@@ -168,6 +219,21 @@ def main() -> None:
                          "stage-2 prices every byte term at the policy "
                          "width, and both executors run quantized (see "
                          "docs/PRECISION.md)")
+    ap.add_argument("--tnn-remat", default=None, metavar="POLICY",
+                    help="activation stash policy of the tensorized "
+                         "custom-vjp: store (default) | recompute (model-"
+                         "level per-layer jax.checkpoint re-runs the FP "
+                         "plans inside the backward) | quantized[:dtype] "
+                         "(fp8/int8 stash; lossless under --tnn-precision, "
+                         "~2x stash reduction vs bf16 store). See "
+                         "docs/MEMORY.md")
+    ap.add_argument("--tnn-memory-budget", default=None, metavar="BYTES",
+                    help="peak activation-memory budget ('64MB', '1.5GB', "
+                         "or raw bytes): CSSE stage-2 never picks a plan "
+                         "whose modeled live-tensor peak exceeds it, and "
+                         "the stash planner raises the microbatch count "
+                         "(gradient accumulation) until the per-step "
+                         "activation stash fits")
     ap.add_argument("--loss-scale", type=float, default=1.0,
                     help="static loss scaling for low-precision training: "
                          "the loss is multiplied by this before backward "
@@ -193,6 +259,12 @@ def main() -> None:
     if args.tnn_precision is not None and not args.tnn:
         ap.error("--tnn-precision requires --tnn (no tensorized "
                  "contractions to quantize without it)")
+    if args.tnn_remat is not None and not args.tnn:
+        ap.error("--tnn-remat requires --tnn (no tensorized stash to "
+                 "manage without it)")
+    if args.tnn_memory_budget is not None and not args.tnn:
+        ap.error("--tnn-memory-budget requires --tnn (the budget "
+                 "constrains tensorized plans and stashes)")
 
     def run(start_step: int) -> int:
         out = train(args.arch, smoke=args.smoke, tnn=args.tnn,
@@ -205,6 +277,8 @@ def main() -> None:
                     tnn_autotune=args.tnn_autotune,
                     tnn_mesh=args.tnn_mesh,
                     tnn_precision=args.tnn_precision,
+                    tnn_remat=args.tnn_remat,
+                    tnn_memory_budget=args.tnn_memory_budget,
                     loss_scale=args.loss_scale)
         print(f"[train] done: final loss {out['final_loss']:.4f} "
               f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")

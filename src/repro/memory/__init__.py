@@ -1,0 +1,36 @@
+"""Memory-aware execution planning — the fourth axis after speed
+(plan compiler + autotuner), scale (SPMD sharding) and precision
+(fp8/int8 quantization).
+
+Three pieces (docs/MEMORY.md):
+
+* :mod:`repro.memory.stash` — :class:`StashPolicy`
+  (``store | recompute | quantized``): what the ``TensorizedLinear``
+  custom-vjp keeps from forward to backward.
+* :mod:`repro.memory.planner` — deterministic activation-stash accounting
+  (:func:`stash_report`) and budget fitting (:func:`plan_microbatches`,
+  :func:`parse_budget`).
+* :mod:`repro.memory.probe` — measured peak bytes from device allocator
+  stats, with the deterministic modeled fallback CI gates on.
+
+The per-plan half of the model (live-tensor peak of one contraction
+schedule) lives with the rest of the cost model in
+:func:`repro.core.perf_model.plan_peak_elems` and enters CSSE as
+``SearchOptions.memory_budget``.
+"""
+
+from repro.memory.planner import (
+    MemoryReport, StashSite, format_bytes, parse_budget, plan_microbatches,
+    stash_report, tnn_stash_sites,
+)
+from repro.memory.probe import (
+    ProbeResult, device_memory_stats, measure, probe_plan, probe_training,
+)
+from repro.memory.stash import STORE, StashPolicy
+
+__all__ = [
+    "MemoryReport", "ProbeResult", "STORE", "StashPolicy", "StashSite",
+    "device_memory_stats", "format_bytes", "measure", "parse_budget",
+    "plan_microbatches", "probe_plan", "probe_training", "stash_report",
+    "tnn_stash_sites",
+]

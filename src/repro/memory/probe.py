@@ -1,0 +1,134 @@
+"""Peak-memory probe: device memory stats with a deterministic fallback.
+
+Two sources, one result type:
+
+* **measured** — on backends that expose allocator statistics (TPU/GPU),
+  :func:`measure` wraps a callable, blocks on its outputs and reads
+  ``peak_bytes_in_use`` from ``Device.memory_stats()``.  The number is the
+  allocator's high-water mark over the call, net of what was already
+  resident — exactly what an OOM cares about.
+
+* **modeled** — the CPU backend (CI, laptops) has no allocator stats, so
+  the probe falls back to deterministic live-bytes accounting: for a
+  contraction plan, :func:`repro.core.perf_model.plan_peak_elems` priced
+  at the actual operand width (policy-aware, per-shard under a mesh); for
+  a training step, the planner's stash report
+  (:func:`repro.memory.planner.stash_report`).  Deterministic means the
+  CI memory gate (``benchmarks/run.py --gate``) never flaps: the same
+  config always probes to the same byte count.
+
+Every result carries its ``source`` so reports can never pass a modeled
+number off as a measurement (``docs/MEMORY.md``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+
+from repro.core import perf_model
+from repro.core.tnetwork import ContractionPlan
+from repro.memory.planner import stash_report
+from repro.memory.stash import STORE, StashPolicy
+
+
+@dataclass(frozen=True)
+class ProbeResult:
+    peak_bytes: int
+    source: str                  # "measured:<device_kind>" | "modeled"
+    detail: dict = field(default_factory=dict)
+
+    @property
+    def measured(self) -> bool:
+        return self.source.startswith("measured")
+
+
+def device_memory_stats(device=None) -> dict | None:
+    """The backend allocator's stats dict, or None where unsupported
+    (the CPU backend returns None / raises — both read as unsupported)."""
+    d = device or jax.local_devices()[0]
+    try:
+        stats = d.memory_stats()
+    except Exception:  # noqa: BLE001 — backend-specific unsupported errors
+        return None
+    if not stats or "peak_bytes_in_use" not in stats:
+        return None
+    return stats
+
+
+def measure(fn: Callable, *args, device=None) -> ProbeResult | None:
+    """Run ``fn(*args)`` and report the device peak over the call, or
+    None when the backend exposes no stats (callers then fall back to a
+    modeled probe — see :func:`probe_plan` / :func:`probe_training`).
+
+    ``peak_bytes_in_use`` is the allocator's process-lifetime high-water
+    mark; a call is only attributable when it *raises* that mark.  When a
+    larger earlier workload already set the mark, this probe cannot know
+    the call's own peak and returns None rather than passing the stale
+    high-water off as a measurement — run memory probes first (or in a
+    fresh process) to get measured numbers.
+    """
+    d = device or jax.local_devices()[0]
+    before = device_memory_stats(d)
+    if before is None:
+        return None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    after = device_memory_stats(d)
+    if after["peak_bytes_in_use"] <= before["peak_bytes_in_use"]:
+        return None    # mark not raised: peak belongs to earlier work
+    peak = max(0, after["peak_bytes_in_use"] - before.get("bytes_in_use", 0))
+    return ProbeResult(peak_bytes=peak,
+                       source=f"measured:{d.device_kind}",
+                       detail={"resident_before": before.get("bytes_in_use",
+                                                             0)})
+
+
+def probe_plan(plan: ContractionPlan, *, dtype_bytes: int | None = None,
+               policy=None, mesh=None,
+               run: Callable | None = None) -> ProbeResult:
+    """Peak footprint of executing one contraction plan.
+
+    With ``run`` (a zero-arg callable executing the plan) and a
+    stats-capable device, the result is measured; otherwise it is the
+    modeled live-tensor peak at ``dtype_bytes`` width (default: the
+    policy storage width, else bf16).  ``mesh`` (a
+    :class:`~repro.core.perf_model.MeshSpec`) models the per-shard view.
+    """
+    if run is not None:
+        got = measure(run)
+        if got is not None:
+            return got
+    if dtype_bytes is None:
+        dtype_bytes = (policy.dtype_bytes
+                       if policy is not None and policy.quantized else 2)
+    elems = perf_model.plan_peak_elems(perf_model.localize_plan(plan, mesh))
+    return ProbeResult(peak_bytes=elems * dtype_bytes, source="modeled",
+                       detail={"elems": elems, "dtype_bytes": dtype_bytes})
+
+
+def probe_training(cfg, global_batch: int, seq_len: int,
+                   microbatches: int = 1, stash: StashPolicy = STORE,
+                   run: Callable | None = None,
+                   shards: int = 1) -> ProbeResult:
+    """Peak activation stash of one training step of ``cfg``, per device.
+
+    Measured around ``run()`` when the device supports it; the CPU
+    fallback is the planner's deterministic stash report — the quantity
+    ``tests/test_memory.py`` and ``benchmarks/bench_memory.py`` assert
+    the >=2x quantized-stash reduction on.  ``shards`` is the
+    data-parallel factor (see :func:`repro.memory.planner.stash_report`).
+    """
+    if run is not None:
+        got = measure(run)
+        if got is not None:
+            return got
+    report = stash_report(cfg, global_batch, seq_len, microbatches, stash,
+                          shards)
+    return ProbeResult(peak_bytes=report.peak_bytes, source="modeled",
+                       detail={"layer_bytes": report.layer_bytes,
+                               "microbatches": report.microbatches,
+                               "shards": report.detail["shards"],
+                               "stash": stash.tag()})

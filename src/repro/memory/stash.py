@@ -1,0 +1,155 @@
+"""Stash policies — what the ``TensorizedLinear`` custom-vjp keeps alive.
+
+The dominant training buffer of a tensorized model is not the cores (they
+are the compressed part) but the *activation stash*: every layer's
+custom-vjp saves its input ``x`` from forward to backward so the WG phase
+can contract it against ``dY``.  A :class:`StashPolicy` names what is
+actually stored across that fwd->bwd gap:
+
+* ``store``      — ``x`` in the layer's compute dtype (the historical
+  behaviour; bf16 at model scale).
+* ``recompute``  — nothing at the custom-vjp level: the model wraps each
+  layer in ``jax.checkpoint(..., nothing_saveable)`` so only the layer
+  *boundary* input survives and the FP plan re-runs inside the backward
+  pass to regenerate the residuals (``launch/steps.py`` threads
+  ``TNNConfig.remat`` into the model config's per-layer remat).
+* ``quantized``  — ``x`` as an fp8/int8 payload plus an f32 scale (and the
+  f32 amax, so delayed-scaling histories advance on the *exact* statistic).
+  Under a quantized execution policy this is lossless relative to
+  ``store``: the WG executor would have quantized ``x`` with the same
+  delayed scale anyway, so stashing the quantized form changes no
+  gradient bit.  Under bf16 execution it is a lossy 2x (bf16->fp8)
+  compression of the stash, tolerance-tested in ``tests/test_memory.py``.
+
+Policies are tiny frozen dataclasses so they ride through
+``jax.custom_vjp`` nondiff arguments, ``TNNConfig`` and lru_cache keys.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.precision.policy import (
+    DTYPES, QuantPolicy, amax_of, compute_scale,
+)
+
+MODES = ("store", "recompute", "quantized")
+
+
+@dataclass(frozen=True)
+class StashPolicy:
+    """How a tensorized layer stores its activation residual."""
+
+    mode: str = "store"            # store | recompute | quantized
+    dtype: str = "fp8_e4m3"        # quantized mode: stash storage dtype
+
+    def __post_init__(self):
+        # ValueError (not assert) so direct construction validates as
+        # strongly as parse(), including under ``python -O``.
+        if self.mode not in MODES:
+            raise ValueError(f"unknown stash mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+        if self.dtype not in DTYPES or self.dtype == "bf16":
+            raise ValueError(
+                f"unknown stash dtype {self.dtype!r}; expected one of "
+                f"{sorted(d for d in DTYPES if d != 'bf16')}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode == "quantized"
+
+    @property
+    def quant_policy(self) -> QuantPolicy:
+        """The per-tensor quantization policy backing a quantized stash."""
+        return QuantPolicy(dtype=self.dtype, granularity="tensor")
+
+    def stash_bytes(self, elems: int, compute_dtype) -> int:
+        """Activation-payload bytes this policy keeps for an
+        ``elems``-element activation.
+
+        ``recompute`` keeps nothing at the custom-vjp boundary (the layer
+        input is accounted at the checkpoint boundary by the planner);
+        ``quantized`` keeps the payload at the stash dtype's width — its
+        two f32 scalars (scale + amax) are *metadata*, reported separately
+        via :meth:`meta_bytes` so activation accounting compares payloads
+        to payloads (docs/MEMORY.md).
+        """
+        if self.mode == "recompute":
+            return 0
+        if self.mode == "quantized":
+            return elems * DTYPES[self.dtype][1]
+        return elems * jnp.dtype(compute_dtype).itemsize
+
+    def meta_bytes(self) -> int:
+        """Per-stash scalar metadata (f32 scale + amax under quantized)."""
+        return 8 if self.mode == "quantized" else 0
+
+    def tag(self) -> str:
+        return self.mode if not self.quantized else f"quantized:{self.dtype}"
+
+    @classmethod
+    def parse(cls, name: str) -> "StashPolicy":
+        """``store`` / ``recompute`` / ``quantized[:fp8_e4m3|int8|...]``."""
+        name = name.strip().lower()
+        dtype = "fp8_e4m3"
+        if ":" in name:
+            name, dtype = name.split(":", 1)
+            from repro.precision.policy import ALIASES
+            dtype = ALIASES.get(dtype, dtype)
+        if name not in MODES:
+            raise ValueError(
+                f"unknown stash policy {name!r}; expected one of {MODES} "
+                f"(+ optional ':<quant dtype>' for quantized)")
+        if dtype not in DTYPES or dtype == "bf16":
+            raise ValueError(
+                f"unknown stash dtype {dtype!r}; expected one of "
+                f"{sorted(d for d in DTYPES if d != 'bf16')}")
+        return cls(mode=name, dtype=dtype)
+
+
+#: default policy — today's behaviour, byte-identical to pre-memory code
+STORE = StashPolicy()
+
+
+# ---------------------------------------------------------------------------
+# Residual pack/unpack (used inside the custom-vjp fwd/bwd rules)
+# ---------------------------------------------------------------------------
+
+
+def stash(x: jax.Array, policy: StashPolicy,
+          scale: jax.Array | None = None) -> tuple:
+    """Pack ``x`` into this policy's residual pytree.
+
+    ``scale`` (delayed-scaling path) pins the quantization scale so the
+    backward's re-quantization reproduces the forward's bits exactly.
+    Returns ``(payload, scale, amax)`` — scale/amax are f32 scalars under
+    ``quantized`` and ``None`` otherwise, keeping the residual structure
+    static per policy (jax requires pytree stability across fwd/bwd).
+    """
+    if not policy.quantized:
+        return (x, None, None)
+    from repro.precision import quant as _q
+    amax = amax_of(x)
+    if scale is None:
+        scale = compute_scale(amax, policy.quant_policy.qmax)
+    qt = _q.quantize(x, policy.quant_policy, scale=scale)
+    return (qt.q, qt.scale, amax)
+
+
+def unstash(res: tuple, policy: StashPolicy, dtype) -> jax.Array:
+    """Reconstruct the activation from a :func:`stash` residual."""
+    payload, scale, _ = res
+    if not policy.quantized:
+        return payload
+    from repro.precision import quant as _q
+    return _q.dequantize(_q.QTensor(q=payload, scale=scale), dtype)
+
+
+def stashed_amax(res: tuple, x_hat: jax.Array) -> jax.Array:
+    """The amax statistic for history updates: the exact forward amax when
+    stashed, else the amax of the reconstructed activation."""
+    _, _, amax = res
+    return amax if amax is not None else amax_of(x_hat)

@@ -10,9 +10,9 @@
 import os
 import tempfile
 
-os.environ.setdefault("REPRO_CSSE_CACHE",
-                      tempfile.mkdtemp(prefix="repro-csse-test-"))
+os.environ.setdefault("REPRO_CSSE_CACHE", tempfile.mkdtemp(prefix="repro-csse-test-"))
 # Same isolation for the autotuner's measurement cache (repro.core.autotune):
 # tests must measure fresh (and never pollute the repo-level cache).
-os.environ.setdefault("REPRO_AUTOTUNE_CACHE",
-                      tempfile.mkdtemp(prefix="repro-autotune-test-"))
+os.environ.setdefault(
+    "REPRO_AUTOTUNE_CACHE", tempfile.mkdtemp(prefix="repro-autotune-test-")
+)

@@ -16,18 +16,16 @@ def _batch_for(arch, cfg, B=2, T=16):
     key = jax.random.key(1)
     if arch.model_kind == "encdec":
         return {
-            "enc_embeds": jax.random.normal(key, (B, T, cfg.d_model),
-                                            jnp.float32) * 0.02,
+            "enc_embeds": jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)
+            * 0.02,
             "dec_inputs": jax.random.randint(key, (B, T), 0, cfg.vocab),
             "dec_targets": jax.random.randint(key, (B, T), 0, cfg.vocab),
         }
     if arch.input_kind == "embeds":
-        inputs = jax.random.normal(key, (B, T, cfg.d_model),
-                                   jnp.float32) * 0.02
+        inputs = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32) * 0.02
     else:
         inputs = jax.random.randint(key, (B, T), 0, cfg.vocab)
-    return {"inputs": inputs,
-            "targets": jax.random.randint(key, (B, T), 0, cfg.vocab)}
+    return {"inputs": inputs, "targets": jax.random.randint(key, (B, T), 0, cfg.vocab)}
 
 
 @pytest.mark.parametrize("arch_id", cfgbase.ARCH_IDS)
@@ -53,20 +51,21 @@ def test_smoke_forward_and_train_step(arch_id):
     step_fn = steps_lib.make_train_step(model, opt, lambda x, a: x)
     new_state, metrics = step_fn(state, batch)
     assert bool(jnp.isfinite(metrics["loss"]))
-    deltas = jax.tree.map(
-        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
-                                           - b.astype(jnp.float32)))),
-        state["params"], new_state["params"])
+
+    def leaf_delta(a, b):
+        return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+    deltas = jax.tree.map(leaf_delta, state["params"], new_state["params"])
     assert max(jax.tree.leaves(deltas)) > 0, "params did not move"
 
 
-@pytest.mark.parametrize("arch_id", ["tinyllama_1_1b", "rwkv6_7b",
-                                     "olmoe_1b_7b", "zamba2_7b"])
+@pytest.mark.parametrize(
+    "arch_id", ["tinyllama_1_1b", "rwkv6_7b", "olmoe_1b_7b", "zamba2_7b"]
+)
 def test_smoke_tnn_variant(arch_id):
     """The paper's technique must be switch-on-able for every family."""
     arch = cfgbase.get(arch_id)
-    tnn = TNNConfig(enabled=True, method="tt", rank=4, num_factors=2,
-                    targets=("mlp",))
+    tnn = TNNConfig(enabled=True, method="tt", rank=4, num_factors=2, targets=("mlp",))
     model, cfg = steps_lib.build_model(arch, tnn=tnn, smoke=True)
     params = model.init(jax.random.key(0))
     batch = _batch_for(arch, cfg)
@@ -75,12 +74,12 @@ def test_smoke_tnn_variant(arch_id):
     # TNN must shrink the MLP params vs the dense smoke config
     dense_model, _ = steps_lib.build_model(arch, smoke=True)
     dense_params = dense_model.init(jax.random.key(0))
-    assert (model.param_count(params)
-            < dense_model.param_count(dense_params))
+    assert model.param_count(params) < dense_model.param_count(dense_params)
 
 
-@pytest.mark.parametrize("arch_id", ["tinyllama_1_1b", "rwkv6_7b",
-                                     "zamba2_7b", "qwen3_moe_235b_a22b"])
+@pytest.mark.parametrize(
+    "arch_id", ["tinyllama_1_1b", "rwkv6_7b", "zamba2_7b", "qwen3_moe_235b_a22b"]
+)
 def test_smoke_decode_matches_forward(arch_id):
     arch = cfgbase.get(arch_id)
     model, cfg = steps_lib.build_model(arch, smoke=True)
@@ -89,8 +88,8 @@ def test_smoke_decode_matches_forward(arch_id):
     inputs = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab)
     logits, _ = model(params, inputs)
     lg, cache = model.prefill(params, inputs, max_len=T + 4)
-    diff = float(jnp.max(jnp.abs(lg.astype(jnp.float32)
-                                 - logits[:, -1].astype(jnp.float32))))
+    last = logits[:, -1].astype(jnp.float32)
+    diff = float(jnp.max(jnp.abs(lg.astype(jnp.float32) - last)))
     assert diff < 0.15, diff
     lg2, cache = model.decode_step(params, jnp.argmax(lg, -1), cache)
     assert lg2.shape == (B, cfg.vocab)
@@ -99,26 +98,61 @@ def test_smoke_decode_matches_forward(arch_id):
 def test_full_configs_match_assignment():
     """The full (non-smoke) configs carry the exact published dimensions."""
     checks = {
-        "rwkv6_7b": dict(num_layers=32, d_model=4096, d_ff=14336,
-                         vocab=65536),
-        "qwen3_moe_235b_a22b": dict(num_layers=94, d_model=4096,
-                                    num_heads=64, num_kv_heads=4,
-                                    vocab=151936),
+        "rwkv6_7b": dict(num_layers=32, d_model=4096, d_ff=14336, vocab=65536),
+        "qwen3_moe_235b_a22b": dict(
+            num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4, vocab=151936
+        ),
         "olmoe_1b_7b": dict(num_layers=16, d_model=2048, vocab=50304),
-        "llava_next_34b": dict(num_layers=60, d_model=7168, num_heads=56,
-                               num_kv_heads=8, d_ff=20480, vocab=64000),
-        "internlm2_1_8b": dict(num_layers=24, d_model=2048, num_heads=16,
-                               num_kv_heads=8, d_ff=8192, vocab=92544),
-        "phi4_mini_3_8b": dict(num_layers=32, d_model=3072, num_heads=24,
-                               num_kv_heads=8, d_ff=8192, vocab=200064),
-        "tinyllama_1_1b": dict(num_layers=22, d_model=2048, num_heads=32,
-                               num_kv_heads=4, d_ff=5632, vocab=32000),
-        "qwen2_7b": dict(num_layers=28, d_model=3584, num_heads=28,
-                         num_kv_heads=4, d_ff=18944, vocab=152064,
-                         qkv_bias=True),
-        "zamba2_7b": dict(num_layers=81, d_model=3584, num_heads=32,
-                          num_kv_heads=32, d_ff=14336, vocab=32000,
-                          ssm_state=64),
+        "llava_next_34b": dict(
+            num_layers=60,
+            d_model=7168,
+            num_heads=56,
+            num_kv_heads=8,
+            d_ff=20480,
+            vocab=64000,
+        ),
+        "internlm2_1_8b": dict(
+            num_layers=24,
+            d_model=2048,
+            num_heads=16,
+            num_kv_heads=8,
+            d_ff=8192,
+            vocab=92544,
+        ),
+        "phi4_mini_3_8b": dict(
+            num_layers=32,
+            d_model=3072,
+            num_heads=24,
+            num_kv_heads=8,
+            d_ff=8192,
+            vocab=200064,
+        ),
+        "tinyllama_1_1b": dict(
+            num_layers=22,
+            d_model=2048,
+            num_heads=32,
+            num_kv_heads=4,
+            d_ff=5632,
+            vocab=32000,
+        ),
+        "qwen2_7b": dict(
+            num_layers=28,
+            d_model=3584,
+            num_heads=28,
+            num_kv_heads=4,
+            d_ff=18944,
+            vocab=152064,
+            qkv_bias=True,
+        ),
+        "zamba2_7b": dict(
+            num_layers=81,
+            d_model=3584,
+            num_heads=32,
+            num_kv_heads=32,
+            d_ff=14336,
+            vocab=32000,
+            ssm_state=64,
+        ),
     }
     for arch_id, want in checks.items():
         cfg = cfgbase.get(arch_id).model()

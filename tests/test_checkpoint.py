@@ -1,0 +1,148 @@
+"""Checkpoint round-trip coverage: quant_amax leaves, f32 master weights,
+the pre-precision-checkpoint compat path, and resume-under-remat.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import factorizations as F
+from repro.core.tensorized import TensorizedLinear
+from repro.optim.adamw import AdamW
+from repro.precision import QuantPolicy
+from repro.precision.policy import AMAX_KEY
+
+
+def _quant_layer():
+    fact = F.tt((4, 4), (4, 4), 4)
+    return TensorizedLinear(
+        fact=fact,
+        compute_dtype=jnp.float32,
+        precision=QuantPolicy.parse("fp8"),
+    )
+
+
+def _tree_equal(a, b):
+    flat_a = jax.tree_util.tree_leaves(a)
+    flat_b = jax.tree_util.tree_leaves(b)
+    assert len(flat_a) == len(flat_b)
+    for x, y in zip(flat_a, flat_b):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- store round-trips ------------------------------------------------------
+
+
+def test_quant_amax_round_trip(tmp_path):
+    layer = _quant_layer()
+    params = layer.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (8, layer.fact.N), jnp.float32)
+
+    def loss(p):
+        return jnp.sum(layer(p, x) ** 2)
+
+    grads = jax.grad(loss)(params)
+    opt = AdamW(lr=1e-3, warmup_steps=0, total_steps=10)
+    new_params, opt_state, _ = opt.update(grads, opt.init(params), params)
+    state = {"params": new_params, "opt": opt_state}
+    assert bool(jnp.any(new_params[AMAX_KEY] != 0)), "history should advance"
+
+    store.save(str(tmp_path), 3, state)
+    step, restored = store.restore(str(tmp_path), state)
+    assert step == 3
+    _tree_equal(restored, state)
+
+    # The restored history drives identical scales -> identical outputs.
+    y0 = layer(new_params, x)
+    y1 = layer(restored["params"], x)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_master_weights_round_trip(tmp_path):
+    layer = _quant_layer()
+    params = jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16) if p.ndim >= 2 else p,
+        layer.init(jax.random.key(0)),
+    )
+    opt = AdamW(lr=1e-3, warmup_steps=0, total_steps=10, master_weights=True)
+    opt_state = opt.init(params)
+    masters = jax.tree_util.tree_leaves(opt_state.master)
+    assert all(m.dtype == jnp.float32 for m in masters)
+
+    state = {"params": params, "opt": opt_state}
+    store.save(str(tmp_path), 1, state)
+    _, restored = store.restore(str(tmp_path), state)
+    _tree_equal(restored, state)
+    # bf16 leaves survive the npz uint16 view round-trip bit-exactly.
+    for a, b in zip(params["cores"], restored["params"]["cores"]):
+        assert b.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint16), np.asarray(b).view(np.uint16)
+        )
+
+
+def test_pre_precision_checkpoint_compat(tmp_path):
+    """A checkpoint written before the precision subsystem (no quant_amax
+    leaf) restores into today's layer and still runs: the layer falls back
+    to a zero history = just-in-time scales."""
+    layer = _quant_layer()
+    params = layer.init(jax.random.key(0))
+    legacy = {k: v for k, v in params.items() if k != AMAX_KEY}
+    store.save(str(tmp_path), 7, {"params": legacy})
+    _, restored = store.restore(str(tmp_path), {"params": legacy})
+
+    x = jax.random.normal(jax.random.key(1), (8, layer.fact.N), jnp.float32)
+    y = layer(restored["params"], x)
+    assert y.shape == (8, layer.fact.M)
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+    def loss(p):
+        return jnp.sum(layer(p, x) ** 2)
+
+    grads = jax.grad(loss)(restored["params"])
+    assert AMAX_KEY not in grads, "no history leaf -> no history gradient"
+
+
+def test_manager_saves_and_retains(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=2, keep=2)
+    state = {"w": jnp.arange(8, dtype=jnp.float32)}
+    saved = [s for s in range(1, 9) if mgr.maybe_save(s, state)]
+    mgr.close()
+    assert saved == [2, 4, 6, 8]
+    assert store.latest_step(str(tmp_path)) == 8
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert kept == ["step_00000006", "step_00000008"]
+
+
+# -- resume under remat -----------------------------------------------------
+
+
+@pytest.mark.slow
+def test_resume_under_quantized_remat(tmp_path):
+    """Kill/restore with --tnn-remat quantized: the amax history and the
+    stash policy survive the round trip and training continues."""
+    from repro.launch.train import train
+
+    kw = dict(
+        smoke=True,
+        tnn=True,
+        global_batch=4,
+        seq_len=32,
+        lr=3e-3,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=3,
+        microbatches=2,
+        production_mesh=False,
+        log_every=100,
+        tnn_precision="fp8",
+        tnn_remat="quantized",
+    )
+    out1 = train("tinyllama_1_1b", steps=6, **kw)
+    assert store.latest_step(str(tmp_path)) == 6
+    out2 = train("tinyllama_1_1b", steps=12, resume=True, **kw)
+    assert len(out2["losses"]) == 6, "resume must continue from step 6"
+    assert out2["final_loss"] < out1["losses"][0], "no learning across resume"

@@ -29,8 +29,9 @@ def test_forward_matches_dense_reconstruction(method):
     params = layer.init(jax.random.key(0))
     w = layer.dense_weight(params)
     x = jax.random.normal(jax.random.key(1), (5, layer.fact.N))
-    np.testing.assert_allclose(np.asarray(layer(params, x)),
-                               np.asarray(x @ w.T), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(layer(params, x)), np.asarray(x @ w.T), rtol=1e-3, atol=1e-3
+    )
 
 
 @pytest.mark.parametrize("method", METHODS)
@@ -83,25 +84,26 @@ def test_phase_path_gradients(method):
     g1 = jax.grad(loss_tnn)(params, x)
     g2 = jax.grad(loss_dense)(params, x)
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
 
 
 def test_phase_paths_off_matches_on():
     fact = F.make("tt", **SMALL)
-    on = tensorized.TensorizedLinear(fact=fact, phase_paths=True,
-                                     compute_dtype=jnp.float32)
-    off = tensorized.TensorizedLinear(fact=fact, phase_paths=False,
-                                      compute_dtype=jnp.float32)
+    on = tensorized.TensorizedLinear(
+        fact=fact, phase_paths=True, compute_dtype=jnp.float32
+    )
+    off = tensorized.TensorizedLinear(
+        fact=fact, phase_paths=False, compute_dtype=jnp.float32
+    )
     params = on.init(jax.random.key(0))
     x = jax.random.normal(jax.random.key(1), (4, fact.N))
-    np.testing.assert_allclose(np.asarray(on(params, x)),
-                               np.asarray(off(params, x)), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(on(params, x)), np.asarray(off(params, x)), rtol=1e-5
+    )
     g_on = jax.grad(lambda p: jnp.sum(on(p, x) ** 2))(params)
     g_off = jax.grad(lambda p: jnp.sum(off(p, x) ** 2))(params)
     for a, b in zip(jax.tree.leaves(g_on), jax.tree.leaves(g_off)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
 
 
 def test_leading_dims_flattened():
@@ -118,23 +120,25 @@ def test_leading_dims_flattened():
 
 
 def _tiny_networks():
-    for method, args, b in [("tt", ((4, 3, 2), (2, 3, 4), 3), 7),
-                            ("ttm", ((4, 4), (4, 4), 3), 5),
-                            ("tr", ((3, 3), (3, 3), 2), 9),
-                            ("bt", ((4, 4), (4, 4), 2), 6)]:
+    for method, args, b in [
+        ("tt", ((4, 3, 2), (2, 3, 4), 3), 7),
+        ("ttm", ((4, 4), (4, 4), 3), 5),
+        ("tr", ((3, 3), (3, 3), 2), 9),
+        ("bt", ((4, 4), (4, 4), 2), 6),
+    ]:
         fact = F.make(method, *args)
         yield method, fact.forward_network(batch_axes=(("b", b),))
 
 
-@pytest.mark.parametrize("method,net", list(_tiny_networks()),
-                         ids=[m for m, _ in _tiny_networks()])
+@pytest.mark.parametrize(
+    "method,net", list(_tiny_networks()), ids=[m for m, _ in _tiny_networks()]
+)
 def test_search_engines_match_bruteforce(method, net):
     csse.clear_memo()
     dfs = csse.search(net, csse.SearchOptions(objective="flops", engine="dfs"))
     csse.clear_memo()
     dp = csse.search(net, csse.SearchOptions(objective="flops", engine="dp"))
-    brute = min(plan_from_tree(net, t).total_flops
-                for t in all_trees(net.num_nodes))
+    brute = min(plan_from_tree(net, t).total_flops for t in all_trees(net.num_nodes))
     assert dfs.candidates[0][0] == dp.candidates[0][0] == brute
 
 
@@ -143,8 +147,9 @@ def test_enlarged_space_beats_restricted():
     fact = F.tt((12, 8, 8), (8, 8, 12), 8)
     net = fact.forward_network(batch_axes=(("b", 128),))
     full = csse.search(net, csse.SearchOptions(objective="flops"))
-    anchored = csse.search(net, csse.SearchOptions(
-        objective="flops", anchor_input=True, allow_outer=False))
+    anchored = csse.search(
+        net, csse.SearchOptions(objective="flops", anchor_input=True, allow_outer=False)
+    )
     assert full.plan.total_flops <= anchored.plan.total_flops
     fixed = csse.fixed_plan(net, fact.fixed_tree(net))
     assert full.plan.total_flops <= fixed.plan.total_flops
@@ -173,18 +178,19 @@ def test_plan_execution_matches_single_einsum():
     fact = F.make("tr", (4, 4), (4, 4), 3)
     net = fact.forward_network(batch_axes=(("b", 6),))
     res = csse.search(net)
-    arrays = [jax.random.normal(jax.random.key(i), net.node_shape(i))
-              for i in range(net.num_nodes)]
+    arrays = [
+        jax.random.normal(jax.random.key(i), net.node_shape(i))
+        for i in range(net.num_nodes)
+    ]
     got = contraction.execute(res.plan, arrays)
     # direct hyperedge einsum reference
     import string
-    sym = {a: string.ascii_letters[i]
-           for i, a in enumerate(sorted(net.sizes))}
+
+    sym = {a: string.ascii_letters[i] for i, a in enumerate(sorted(net.sizes))}
     spec = ",".join("".join(sym[a] for a in node) for node in net.nodes)
     spec += "->" + "".join(sym[a] for a in net.output)
     want = jnp.einsum(spec, *arrays)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -199,8 +205,9 @@ def test_perf_model_monotone_in_flops():
     good = csse.search(net, csse.SearchOptions(objective="flops")).plan
     bad = plan_from_tree(net, fact.fixed_tree(net))
     # With ~1000x FLOPs difference the model must agree on the ordering.
-    assert (perf_model.evaluate(good, hw).latency_s
-            < perf_model.evaluate(bad, hw).latency_s)
+    assert (
+        perf_model.evaluate(good, hw).latency_s < perf_model.evaluate(bad, hw).latency_s
+    )
 
 
 def test_mxu_utilisation_penalises_small_dims():

@@ -32,23 +32,26 @@ class _FakeMesh:
 
 def test_param_specs_rules():
     mesh = _FakeMesh({"data": 16, "model": 16})
-    spec = sharding._spec_for(["layers", "attn", "q", "w"],
-                              (22, 2048, 2048), mesh, False)
+    spec = sharding._spec_for(
+        ["layers", "attn", "q", "w"], (22, 2048, 2048), mesh, False
+    )
     assert spec == P(None, None, "model")
-    spec = sharding._spec_for(["layers", "attn", "o", "w"],
-                              (22, 2048, 2048), mesh, False)
+    spec = sharding._spec_for(
+        ["layers", "attn", "o", "w"], (22, 2048, 2048), mesh, False
+    )
     assert spec == P(None, "model", None)
-    spec = sharding._spec_for(["layers", "mlp", "experts", "gate", "w"],
-                              (16, 64, 2048, 1024), mesh, False)
+    spec = sharding._spec_for(
+        ["layers", "mlp", "experts", "gate", "w"], (16, 64, 2048, 1024), mesh, False
+    )
     assert spec == P(None, "model", None, None)
     spec = sharding._spec_for(["embed"], (32000, 2048), mesh, False)
     assert spec == P("model", None)
-    spec = sharding._spec_for(["layers", "ln1", "scale"], (22, 2048), mesh,
-                              False)
+    spec = sharding._spec_for(["layers", "ln1", "scale"], (22, 2048), mesh, False)
     assert spec == P(None, None)
     # optimizer-state mirror keeps the same layout
-    spec = sharding._spec_for(["opt", "m", "layers", "attn", "q", "w"],
-                              (22, 2048, 2048), mesh, False)
+    spec = sharding._spec_for(
+        ["opt", "m", "layers", "attn", "q", "w"], (22, 2048, 2048), mesh, False
+    )
     assert spec == P(None, None, "model")
 
 
@@ -61,8 +64,9 @@ def test_param_specs_divisibility_guard():
 
 def test_fsdp_adds_data_axis():
     mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
-    spec = sharding._spec_for(["layers", "mlp", "gate", "w"],
-                              (22, 2048, 5632), mesh, True)
+    spec = sharding._spec_for(
+        ["layers", "mlp", "gate", "w"], (22, 2048, 5632), mesh, True
+    )
     assert spec == P(None, ("pod", "data"), "model")
 
 
@@ -117,16 +121,22 @@ def test_spmd_8dev_train_step_runs():
         print("SPMD8 OK", losses)
     """)
     import os
+
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=600,
-                         env={**os.environ, "PYTHONPATH": "src"},
-                         cwd=repo)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=repo,
+    )
     assert out.returncode == 0, out.stderr[-2000:]
     assert "SPMD8 OK" in out.stdout
 
 
 def test_elastic_mesh_builder():
     from repro.distributed import fault_tolerance as ft
+
     mesh = ft.healthy_device_mesh()
     assert mesh.size == len(jax.devices())

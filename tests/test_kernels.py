@@ -12,13 +12,14 @@ F32, BF16 = jnp.float32, jnp.bfloat16
 
 def _assert_close(got, want, dtype):
     tol = 1e-4 if dtype == F32 else 2.5e-2
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
 
 
-@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (200, 96, 72),
-                                   (64, 256, 128), (13, 7, 5), (1, 384, 256)])
+@pytest.mark.parametrize(
+    "m,k,n", [(128, 128, 128), (200, 96, 72), (64, 256, 128), (13, 7, 5), (1, 384, 256)]
+)
 @pytest.mark.parametrize("transpose_rhs", [False, True])
 @pytest.mark.parametrize("dtype", [F32, BF16])
 def test_fused_matmul(m, k, n, transpose_rhs, dtype):
@@ -31,8 +32,9 @@ def test_fused_matmul(m, k, n, transpose_rhs, dtype):
     _assert_close(got, want, dtype)
 
 
-@pytest.mark.parametrize("m,k,h,n", [(128, 64, 32, 128), (200, 96, 48, 130),
-                                     (64, 144, 96, 72)])
+@pytest.mark.parametrize(
+    "m,k,h,n", [(128, 64, 32, 128), (200, 96, 48, 130), (64, 144, 96, 72)]
+)
 @pytest.mark.parametrize("dtype", [F32, BF16])
 def test_fused_chain(m, k, h, n, dtype):
     x = jax.random.normal(jax.random.key(0), (m, k), dtype)
@@ -55,16 +57,22 @@ def test_linear_scan(mode, t, chunk, dtype):
     v = (jax.random.normal(jax.random.key(2), (bh, t, dv), F32) * 0.5).astype(dtype)
     ld = -jnp.exp(jax.random.normal(jax.random.key(3), (bh, t, dk), F32)) * 0.1
     u = jax.random.normal(jax.random.key(4), (bh, dk), F32) * 0.5
-    got, got_state = ops.linear_scan(q, k, v, ld, u, mode=mode, chunk=chunk,
-                                     use_pallas=True)
+    got, got_state = ops.linear_scan(
+        q, k, v, ld, u, mode=mode, chunk=chunk, use_pallas=True
+    )
     want, want_state = ref.linear_scan_batched(q, k, v, ld, u, mode=mode)
     assert got.shape == (bh, t, dv)
     tol = 5e-3 if dtype == F32 else 5e-2
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
     # the final-state output (what prefill hands to decode) must also match
-    np.testing.assert_allclose(np.asarray(got_state), np.asarray(want_state),
-                               rtol=max(tol, 1e-2), atol=max(tol, 1e-2))
+    np.testing.assert_allclose(
+        np.asarray(got_state),
+        np.asarray(want_state),
+        rtol=max(tol, 1e-2),
+        atol=max(tol, 1e-2),
+    )
 
 
 def test_linear_scan_state_continuity():
@@ -74,13 +82,10 @@ def test_linear_scan_state_continuity():
     k = jax.random.normal(jax.random.key(1), (bh, t, dk)) * 0.5
     v = jax.random.normal(jax.random.key(2), (bh, t, dv)) * 0.5
     ld = -jnp.ones((bh, t, dk)) * 0.05
-    a, sa = ops.linear_scan(q, k, v, ld, mode="ssd", chunk=64,
-                            use_pallas=True)
-    b, sb = ops.linear_scan(q, k, v, ld, mode="ssd", chunk=128,
-                            use_pallas=True)
+    a, sa = ops.linear_scan(q, k, v, ld, mode="ssd", chunk=64, use_pallas=True)
+    b, sb = ops.linear_scan(q, k, v, ld, mode="ssd", chunk=128, use_pallas=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), rtol=1e-4,
-                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("causal", [True, False])
@@ -89,15 +94,16 @@ def test_flash_attention_kernel(causal, qc, kc):
     """Pallas flash forward == the jnp blockwise twin (GQA, incl. lse)."""
     from repro.kernels.flash_attention import flash_attention_fwd
     from repro.models.blocks import _blockwise_attention_fwd_only
+
     B, Tq, Tk, KV, G, D = 2, 128, 128, 2, 3, 32
     q = jax.random.normal(jax.random.key(0), (B, Tq, KV * G, D)) * 0.5
     k = jax.random.normal(jax.random.key(1), (B, Tk, KV, D)) * 0.5
     v = jax.random.normal(jax.random.key(2), (B, Tk, KV, D)) * 0.5
-    got, got_lse = flash_attention_fwd(q, k, v, causal=causal,
-                                       q_chunk=qc, kv_chunk=kc)
+    got, got_lse = flash_attention_fwd(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
     want, want_lse = _blockwise_attention_fwd_only(
-        q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(got_lse), np.asarray(want_lse),
-                               rtol=2e-4, atol=2e-4)
+        q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(got_lse), np.asarray(want_lse), rtol=2e-4, atol=2e-4
+    )

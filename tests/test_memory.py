@@ -1,0 +1,456 @@
+"""Memory subsystem tests: footprint model, CSSE budget, stash policies,
+planner/probe, and the e2e >=2x-stash-reduction-at-loss-parity acceptance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import memory
+from repro.core import csse, factorizations as F, perf_model
+from repro.core.tensorized import TensorizedLinear, TNNConfig
+from repro.core.tnetwork import plan_from_tree
+from repro.memory.stash import StashPolicy, stash, unstash
+from repro.precision import QuantPolicy
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo(tmp_path, monkeypatch):
+    # Per-test disk cache: budget tests inspect the full stage-1 candidate
+    # list, which a disk-cached winner (a 1-candidate result) would hide.
+    monkeypatch.setenv("REPRO_CSSE_CACHE", str(tmp_path / "csse"))
+    csse.clear_memo()
+    yield
+    csse.clear_memo()
+
+
+def _net(rank=6, batch=32):
+    fact = F.tt((4, 4, 4), (4, 4, 4), rank)
+    return fact.forward_network(batch_axes=(("b", batch),))
+
+
+# -- footprint model --------------------------------------------------------
+
+
+def test_plan_peak_elems_hand_checked():
+    fact = F.tt((4, 4), (4, 4), 4)
+    net = fact.forward_network(batch_axes=(("b", 8),))
+    res = csse.search(net, csse.SearchOptions(objective="flops"))
+    plan = res.plan
+    # Replay the executor's slot lifetimes by hand.
+    last_use = {}
+    for t, s in enumerate(plan.steps):
+        last_use[s.lhs] = t
+        last_use[s.rhs] = t
+    live = {i: net.node_numel(i) for i in range(net.num_nodes)}
+    peak = sum(live.values())
+    for t, s in enumerate(plan.steps):
+        live[s.out] = int(np.prod(s.out_shape))
+        peak = max(peak, sum(live.values()))
+        for op in (s.lhs, s.rhs):
+            if op in live and last_use.get(op) == t:
+                del live[op]
+    assert perf_model.plan_peak_elems(plan) == peak
+    assert peak >= net.node_numel(0)
+
+
+def test_single_node_plan_peak():
+    from repro.core.tnetwork import TensorNetwork
+
+    net = TensorNetwork(
+        sizes={"a": 4, "b": 5},
+        nodes=(("a", "b"),),
+        node_names=("X",),
+        output=("a", "b"),
+    )
+    plan = plan_from_tree(net, 0)
+    assert perf_model.plan_peak_elems(plan) == 20
+
+
+def test_peak_bytes_policy_halves():
+    plan = csse.search(_net()).plan
+    bf16 = perf_model.peak_bytes(plan)
+    fp8 = perf_model.peak_bytes(plan, policy=QuantPolicy.parse("fp8"))
+    assert fp8 * 2 == bf16
+
+
+def test_peak_bytes_mesh_localizes():
+    plan = csse.search(_net(batch=64)).plan
+    mesh = perf_model.MeshSpec(axes=(("data", 8),), axis_sharding=(("b", ("data",)),))
+    full = perf_model.peak_bytes(plan)
+    shard = perf_model.peak_bytes(plan, mesh=mesh)
+    assert shard < full
+
+
+def test_evaluate_populates_peak_bytes():
+    plan = csse.search(_net()).plan
+    cost = perf_model.evaluate(plan)
+    assert cost.peak_bytes == perf_model.peak_bytes(plan)
+    assert cost.metric("peak_bytes") == float(cost.peak_bytes)
+
+
+# -- CSSE memory budget -----------------------------------------------------
+
+
+def _candidate_peaks(net, opts):
+    res = csse.search(net, opts)
+    return res, sorted(
+        perf_model.peak_bytes(plan_from_tree(net, t)) for _, t in res.candidates
+    )
+
+
+def test_budget_respected_whenever_feasible():
+    net = _net()
+    free_opts = csse.SearchOptions(objective="latency")
+    free, peaks = _candidate_peaks(net, free_opts)
+    assert len(set(peaks)) > 1, "need candidates with distinct peaks"
+    for budget in sorted(set(peaks)):
+        csse.clear_memo()
+        res = csse.search(
+            net, csse.SearchOptions(objective="latency", memory_budget=budget)
+        )
+        assert res.cost.peak_bytes <= budget, (
+            f"winner peak {res.cost.peak_bytes} exceeds budget {budget} "
+            f"though feasible candidates exist"
+        )
+        assert res.stats["budget"] == "feasible"
+
+
+def test_budget_can_flip_the_winner():
+    net = _net()
+    free = csse.search(net, csse.SearchOptions(objective="latency"))
+    tight = min(
+        perf_model.peak_bytes(plan_from_tree(net, t)) for _, t in free.candidates
+    )
+    assert free.cost.peak_bytes > tight, "latency winner is already minimal"
+    budgeted = csse.search(
+        net, csse.SearchOptions(objective="latency", memory_budget=tight)
+    )
+    assert budgeted.tree != free.tree
+    assert budgeted.cost.peak_bytes <= tight
+
+
+def test_infeasible_budget_degrades_to_min_peak():
+    net = _net()
+    _, peaks = _candidate_peaks(net, csse.SearchOptions(objective="latency"))
+    csse.clear_memo()
+    res = csse.search(net, csse.SearchOptions(objective="latency", memory_budget=1))
+    assert res.stats["budget"] == "infeasible"
+    assert res.cost.peak_bytes == peaks[0]
+
+
+def test_budget_in_cache_signature():
+    net = _net()
+    hw = perf_model.TPU_V5E
+    a = csse._signature(net, csse.SearchOptions(), hw)
+    b = csse._signature(net, csse.SearchOptions(memory_budget=1 << 20), hw)
+    c = csse._signature(net, csse.SearchOptions(memory_budget=1 << 21), hw)
+    assert len({a, b, c}) == 3, "budget must key the winner cache"
+
+
+def test_no_cross_budget_disk_hits(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CSSE_CACHE", str(tmp_path))
+    net = _net()
+    free = csse.search(net, csse.SearchOptions(objective="latency"))
+    tight = min(
+        perf_model.peak_bytes(plan_from_tree(net, t)) for _, t in free.candidates
+    )
+    budgeted = csse.search(
+        net, csse.SearchOptions(objective="latency", memory_budget=tight)
+    )
+    csse.clear_memo()  # force both through the disk cache
+    free2 = csse.search(net, csse.SearchOptions(objective="latency"))
+    budgeted2 = csse.search(
+        net, csse.SearchOptions(objective="latency", memory_budget=tight)
+    )
+    assert free2.tree == free.tree
+    assert budgeted2.tree == budgeted.tree
+    assert free2.tree != budgeted2.tree
+
+
+# -- stash policies ---------------------------------------------------------
+
+
+def test_stash_roundtrip_store():
+    x = jax.random.normal(jax.random.key(0), (8, 16), jnp.float32)
+    res = stash(x, StashPolicy.parse("store"))
+    assert unstash(res, StashPolicy.parse("store"), jnp.float32) is x
+
+
+def test_stash_roundtrip_quantized():
+    x = jax.random.normal(jax.random.key(0), (8, 16), jnp.float32)
+    pol = StashPolicy.parse("quantized:fp8_e4m3")
+    res = stash(x, pol)
+    assert res[0].dtype == jnp.float8_e4m3fn
+    x_hat = unstash(res, pol, jnp.float32)
+    rel = float(jnp.max(jnp.abs(x_hat - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.1
+
+
+def test_stash_bytes_accounting():
+    store = StashPolicy.parse("store")
+    quant = StashPolicy.parse("quantized")
+    rec = StashPolicy.parse("recompute")
+    elems = 1 << 16
+    assert store.stash_bytes(elems, jnp.bfloat16) == elems * 2
+    assert quant.stash_bytes(elems, jnp.bfloat16) == elems
+    assert quant.meta_bytes() == 8
+    assert rec.stash_bytes(elems, jnp.bfloat16) == 0
+    assert store.meta_bytes() == 0
+
+
+def test_stash_policy_parse_errors():
+    with pytest.raises(ValueError):
+        StashPolicy.parse("keep-everything")
+    with pytest.raises(ValueError):
+        StashPolicy.parse("quantized:fp8e4m3")  # typo'd dtype
+    with pytest.raises(ValueError):
+        StashPolicy.parse("quantized:bf16")  # bf16 stash == store
+    assert StashPolicy.parse("quantized:int8").dtype == "int8"
+    assert StashPolicy.parse("quantized:fp8").dtype == "fp8_e4m3"
+
+
+def _grads(layer, params, x):
+    def loss(p):
+        return jnp.sum(layer(p, x) ** 2)
+
+    return jax.grad(loss)(params)
+
+
+def test_quantized_stash_grads_close_on_bf16_path():
+    fact = F.tt((4, 4), (4, 4), 4)
+    store = TensorizedLinear(fact=fact, compute_dtype=jnp.float32)
+    quant = TensorizedLinear(
+        fact=fact,
+        compute_dtype=jnp.float32,
+        remat=StashPolicy.parse("quantized:fp8_e4m3"),
+    )
+    params = store.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (8, fact.N), jnp.float32)
+    g_s, g_q = _grads(store, params, x), _grads(quant, params, x)
+    # dx never touches the stash; core grads see fp8 error on x only.
+    for a, b in zip(g_s["cores"], g_q["cores"]):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-9
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=5e-2 * scale)
+
+
+def test_quantized_stash_is_lossless_under_quantized_execution():
+    fact = F.tt((4, 4), (4, 4), 4)
+    pol = QuantPolicy.parse("fp8")
+    store = TensorizedLinear(fact=fact, compute_dtype=jnp.float32, precision=pol)
+    quant = TensorizedLinear(
+        fact=fact,
+        compute_dtype=jnp.float32,
+        precision=pol,
+        remat=StashPolicy.parse("quantized"),
+    )
+    params = store.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (8, fact.N), jnp.float32)
+    g_s, g_q = _grads(store, params, x), _grads(quant, params, x)
+    for a, b in zip(g_s["cores"], g_q["cores"]):
+        assert bool(jnp.all(a == b)), "fp8 stash must replay the WG bits"
+    assert bool(jnp.all(g_s["quant_amax"] == g_q["quant_amax"]))
+
+
+def test_recompute_stash_grads_equal_store():
+    fact = F.tt((4, 4), (4, 4), 4)
+    store = TensorizedLinear(fact=fact, compute_dtype=jnp.float32)
+    rec = TensorizedLinear(
+        fact=fact,
+        compute_dtype=jnp.float32,
+        remat=StashPolicy.parse("recompute"),
+    )
+    params = store.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (8, fact.N), jnp.float32)
+    g_s, g_r = _grads(store, params, x), _grads(rec, params, x)
+    for a, b in zip(g_s["cores"], g_r["cores"]):
+        assert bool(jnp.all(a == b))
+
+
+def test_tnn_config_threads_budget_and_stash():
+    cfg = TNNConfig(remat="quantized:int8", memory_budget=1 << 20)
+    assert cfg.stash_policy() == StashPolicy(mode="quantized", dtype="int8")
+    assert cfg.search_options().memory_budget == 1 << 20
+
+
+# -- planner ----------------------------------------------------------------
+
+
+def test_parse_budget_units():
+    assert memory.parse_budget("64MB") == 64 * 2**20
+    assert memory.parse_budget("1.5gb") == int(1.5 * 2**30)
+    assert memory.parse_budget("512") == 512
+    assert memory.parse_budget(4096) == 4096
+    assert memory.parse_budget(None) is None
+    with pytest.raises(ValueError):
+        memory.parse_budget("64 parsecs")
+
+
+def _smoke_cfg(remat="store"):
+    from repro.configs import base as cfgbase
+
+    tnn = TNNConfig(
+        enabled=True, method="tt", rank=8, num_factors=3, targets=("mlp",),
+        remat=remat,
+    )
+    return cfgbase.get("tinyllama_1_1b").smoke(tnn), tnn
+
+
+def test_stash_report_hand_checked():
+    cfg, tnn = _smoke_cfg()
+    report = memory.stash_report(cfg, global_batch=8, seq_len=64)
+    tokens = 8 * 64
+    per_layer = tokens * (cfg.d_model + cfg.d_model + cfg.d_ff) * 2
+    assert report.layer_bytes == per_layer
+    assert report.peak_bytes == per_layer * cfg.num_layers
+    assert [s.name for s in report.sites] == ["mlp.gate", "mlp.up", "mlp.down"]
+
+
+def test_stash_report_quantized_and_recompute():
+    cfg, _ = _smoke_cfg()
+    store = memory.stash_report(cfg, 8, 64)
+    quant = memory.stash_report(cfg, 8, 64, stash=StashPolicy.parse("quantized"))
+    rec = memory.stash_report(cfg, 8, 64, stash=StashPolicy.parse("recompute"))
+    assert store.peak_bytes == 2 * quant.peak_bytes
+    assert quant.detail["meta_bytes"] == 8 * 3 * cfg.num_layers
+    assert rec.peak_bytes < quant.peak_bytes < store.peak_bytes
+
+
+def test_plan_microbatches_fits_budget():
+    cfg, _ = _smoke_cfg()
+    full = memory.stash_report(cfg, 8, 64).peak_bytes
+    mb, report = memory.plan_microbatches(cfg, 8, 64, full // 4)
+    assert mb == 4
+    assert report.peak_bytes <= full // 4
+    mb_free, _ = memory.plan_microbatches(cfg, 8, 64, None)
+    assert mb_free == 1
+    mb_max, report_max = memory.plan_microbatches(cfg, 8, 64, 1)
+    assert mb_max == 8, "unsatisfiable budget degrades to the maximal split"
+
+
+def test_stash_report_shards_divide_per_device():
+    cfg, _ = _smoke_cfg()
+    full = memory.stash_report(cfg, 8, 64)
+    sharded = memory.stash_report(cfg, 8, 64, shards=4)
+    assert sharded.peak_bytes * 4 == full.peak_bytes
+    assert sharded.detail["shards"] == 4
+    # non-dividing factor falls back to replicated accounting, not an error
+    odd = memory.stash_report(cfg, 8, 64, shards=3)
+    assert odd.peak_bytes == full.peak_bytes
+    assert odd.detail["shards"] == 1
+
+
+def test_plan_microbatches_respects_user_floor():
+    cfg, _ = _smoke_cfg()
+    mb, _ = memory.plan_microbatches(cfg, 8, 64, None, at_least=2)
+    assert mb == 2
+    # a floor no divisor reaches clamps to the maximal split, not a crash
+    mb, report = memory.plan_microbatches(cfg, 8, 64, None, at_least=16)
+    assert mb == 8 and report.microbatches == 8
+
+
+# -- probe ------------------------------------------------------------------
+
+
+def test_probe_plan_modeled_fallback_deterministic():
+    plan = csse.search(_net()).plan
+    a = memory.probe_plan(plan)
+    b = memory.probe_plan(plan)
+    assert a == b
+    assert a.peak_bytes == perf_model.peak_bytes(plan)
+    fp8 = memory.probe_plan(plan, policy=QuantPolicy.parse("fp8"))
+    assert fp8.peak_bytes * 2 == a.peak_bytes
+
+
+def test_probe_training_matches_planner():
+    cfg, tnn = _smoke_cfg("quantized")
+    probe = memory.probe_training(cfg, 8, 64, 2, tnn.stash_policy())
+    report = memory.stash_report(cfg, 8, 64, 2, tnn.stash_policy())
+    assert probe.peak_bytes == report.peak_bytes
+    if not probe.measured:
+        assert probe.source == "modeled"
+
+
+def test_probe_measure_none_on_statless_backend():
+    if memory.device_memory_stats() is not None:
+        pytest.skip("backend exposes allocator stats")
+    assert memory.measure(lambda: jnp.zeros((8,))) is None
+
+
+# -- e2e acceptance ---------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_quantized_stash_2x_at_loss_parity():
+    """ISSUE acceptance: on the smoke LM, --tnn-remat quantized with a
+    budget cuts measured peak activation bytes >=2x vs store at loss
+    parity (|d final loss| <= 1e-3 @ 20 steps).
+
+    The budget forces the planner to 4 microbatches; the store control
+    runs the same accumulation structure so the comparison isolates the
+    stash policy — under fp8 execution the quantized stash replays the
+    WG quantization bits exactly, so parity is in fact bitwise.
+    """
+    from repro.launch.train import train
+
+    kw = dict(
+        smoke=True,
+        tnn=True,
+        steps=20,
+        global_batch=8,
+        seq_len=64,
+        lr=3e-3,
+        ckpt_dir=None,
+        ckpt_every=100,
+        production_mesh=False,
+        log_every=100,
+        tnn_precision="fp8",
+    )
+    out_quant = train(
+        "tinyllama_1_1b",
+        microbatches=1,
+        tnn_remat="quantized",
+        tnn_memory_budget="96KB",
+        **kw,
+    )
+    assert out_quant["microbatches"] == 4, "budget should force accumulation"
+    out_store = train("tinyllama_1_1b", microbatches=out_quant["microbatches"], **kw)
+    ratio = out_store["peak_activation_bytes"] / out_quant["peak_activation_bytes"]
+    assert ratio >= 2.0, f"stash reduction {ratio:.2f}x < 2x"
+    dloss = abs(out_store["final_loss"] - out_quant["final_loss"])
+    assert dloss <= 1e-3, f"loss parity broken: |d| = {dloss:.2e}"
+    assert out_quant["final_loss"] < out_quant["losses"][0], "not learning"
+    # The budget run also beats the *default* (no-accumulation) store
+    # configuration by the microbatch factor on top of the dtype factor.
+    out_default = train("tinyllama_1_1b", microbatches=1, **kw)
+    assert (
+        out_default["peak_activation_bytes"]
+        >= 4 * out_quant["peak_activation_bytes"]
+    )
+
+
+@pytest.mark.slow
+def test_recompute_stash_trains_and_shrinks():
+    from repro.launch.train import train
+
+    kw = dict(
+        smoke=True,
+        tnn=True,
+        steps=8,
+        global_batch=8,
+        seq_len=32,
+        lr=3e-3,
+        ckpt_dir=None,
+        ckpt_every=100,
+        microbatches=1,
+        production_mesh=False,
+        log_every=100,
+    )
+    out_store = train("tinyllama_1_1b", **kw)
+    out_rec = train("tinyllama_1_1b", tnn_remat="recompute", **kw)
+    assert out_rec["peak_activation_bytes"] < out_store["peak_activation_bytes"]
+    assert out_rec["final_loss"] < out_rec["losses"][0], "not learning"
+    np.testing.assert_allclose(
+        out_rec["final_loss"], out_store["final_loss"], atol=5e-3
+    )

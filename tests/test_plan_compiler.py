@@ -13,9 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core import contraction, csse, factorizations as F, plan_compiler
-from repro.core.tensorized import (
-    TensorizedLinear, _bp_network, _wg_network,
-)
+from repro.core.tensorized import TensorizedLinear, _bp_network, _wg_network
 from repro.core.tnetwork import plan_from_tree
 
 F32, BF16 = jnp.float32, jnp.bfloat16
@@ -31,9 +29,10 @@ def _facts():
 
 
 def _random_inputs(net, dtype, seed=0):
-    return [jax.random.normal(jax.random.key(seed + i), net.node_shape(i),
-                              dtype)
-            for i in range(net.num_nodes)]
+    return [
+        jax.random.normal(jax.random.key(seed + i), net.node_shape(i), dtype)
+        for i in range(net.num_nodes)
+    ]
 
 
 def _assert_parity(plan, arrays, dtype):
@@ -42,9 +41,12 @@ def _assert_parity(plan, arrays, dtype):
     assert got.shape == want.shape and got.dtype == want.dtype
     tol = 1e-4 if dtype == F32 else 4e-2
     scale = max(float(np.abs(np.asarray(want, np.float32)).max()), 1e-6)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol, atol=tol * scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=tol,
+        atol=tol * scale,
+    )
 
 
 @pytest.mark.parametrize("method", ["tt", "ttm", "tr"])
@@ -109,10 +111,8 @@ def test_fused_chain_ablation():
     assert rep["num_chain"] == 0 and rep["num_ops"] == rep["num_steps"]
     arrays = _random_inputs(net, F32)
     want = contraction.execute(plan, arrays)
-    got = contraction.execute(plan, arrays, backend="pallas",
-                              fused_chain=False)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    got = contraction.execute(plan, arrays, backend="pallas", fused_chain=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
 
 
 def test_vmem_fused_transpose_occurs():
@@ -148,10 +148,12 @@ def test_weight_reconstruction_parity():
 def test_layer_grad_parity(method):
     """TensorizedLinear forward + FP/BP/WG grads match across backends."""
     fact = _facts()[method]
-    ref_layer = TensorizedLinear(fact=fact, opts=_OPTS,
-                                 compute_dtype=F32, backend="einsum")
-    pal_layer = TensorizedLinear(fact=fact, opts=_OPTS,
-                                 compute_dtype=F32, backend="pallas")
+    ref_layer = TensorizedLinear(
+        fact=fact, opts=_OPTS, compute_dtype=F32, backend="einsum"
+    )
+    pal_layer = TensorizedLinear(
+        fact=fact, opts=_OPTS, compute_dtype=F32, backend="pallas"
+    )
     params = ref_layer.init(jax.random.key(0))
     x = jax.random.normal(jax.random.key(1), (8, fact.N), F32)
 
@@ -160,12 +162,12 @@ def test_layer_grad_parity(method):
 
     want, want_g = jax.value_and_grad(lambda p: loss(ref_layer, p, x))(params)
     got, got_g = jax.value_and_grad(lambda p: loss(pal_layer, p, x))(params)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
     for w, g in zip(jax.tree.leaves(want_g), jax.tree.leaves(got_g)):
         scale = max(float(np.abs(np.asarray(w)).max()), 1e-6)
-        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
-                                   rtol=1e-4, atol=1e-4 * scale)
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-4 * scale
+        )
 
 
 def test_execute_rejects_unknown_backend():

@@ -34,16 +34,21 @@ from repro.core import tensorized as tz
 from repro.kernels.fused_contraction import chain_pallas, matmul_pallas
 from repro.kernels.quantized import dequantize_pallas, quantize_pallas
 from repro.precision import (
-    QuantPolicy, compute_scale, dequantize, quantize, scale_from_history,
+    QuantPolicy,
+    compute_scale,
+    dequantize,
+    quantize,
+    scale_from_history,
     update_history,
 )
 
-MESH8 = pm.MeshSpec(axes=(("data", 8),), axis_sharding=(("b", ("data",)),),
-                    device_kind="cpu")
+MESH8 = pm.MeshSpec(
+    axes=(("data", 8),), axis_sharding=(("b", ("data",)),), device_kind="cpu"
+)
 
 _needs8 = pytest.mark.skipif(
-    jax.device_count() < 8,
-    reason="needs 8 devices (CI forced-host-device leg)")
+    jax.device_count() < 8, reason="needs 8 devices (CI forced-host-device leg)"
+)
 
 #: max-relative tolerance vs an f32 reference, per storage dtype
 #: (documented in docs/PRECISION.md; bench_precision uses the same table)
@@ -57,8 +62,7 @@ def _atis_fact():
 
 
 def _rand(shape, seed=0, scale=1.0):
-    return jax.random.normal(jax.random.key(seed), shape,
-                             jnp.float32) * scale
+    return jax.random.normal(jax.random.key(seed), shape, jnp.float32) * scale
 
 
 # ---------------------------------------------------------------------------
@@ -92,8 +96,7 @@ def test_tile_scaling_refines_per_tensor():
     (any scale that avoids saturation lands in the same binade
     structure), so no such ordering holds there."""
     x = _rand((128, 64), seed=2) * jnp.linspace(0.01, 10, 128)[:, None]
-    qt = quantize(x, QuantPolicy(dtype="int8", granularity="tile",
-                                 tile_rows=32))
+    qt = quantize(x, QuantPolicy(dtype="int8", granularity="tile", tile_rows=32))
     qp = quantize(x, QuantPolicy(dtype="int8"))
     assert qt.scale.shape == (4,)
     err_t = float(jnp.mean(jnp.abs(dequantize(qt) - x)))
@@ -103,8 +106,7 @@ def test_tile_scaling_refines_per_tensor():
 
 def test_tile_scaling_nondividing_rows_falls_back():
     x = _rand((100, 8), seed=3)
-    t = quantize(x, QuantPolicy(dtype="int8", granularity="tile",
-                                tile_rows=64))
+    t = quantize(x, QuantPolicy(dtype="int8", granularity="tile", tile_rows=64))
     assert t.scale.ndim == 1 and t.scale.shape == (1,)
 
 
@@ -114,11 +116,13 @@ def test_quantize_kernel_matches_reference(dtype):
     x = _rand((100, 96), seed=4, scale=2.0)
     t = quantize(x, pol)
     qk = quantize_pallas(x, t.row_scales(), pol)
-    np.testing.assert_array_equal(np.asarray(qk, np.float32),
-                                  np.asarray(t.q, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(qk, np.float32), np.asarray(t.q, np.float32)
+    )
     deq = dequantize_pallas(t.q, t.row_scales())
-    np.testing.assert_allclose(np.asarray(deq), np.asarray(dequantize(t)),
-                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(deq), np.asarray(dequantize(t)), rtol=1e-6, atol=1e-6
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -137,8 +141,7 @@ def test_scaled_matmul_parity(dtype, transpose_rhs):
     qw = quantize(w.T if transpose_rhs else w, pol)
     sl = qx.row_scales()
     sr = jnp.full((1, 120), qw.scale, jnp.float32)
-    got = matmul_pallas(qx.q, qw.q, transpose_rhs=transpose_rhs,
-                        scales=(sl, sr))
+    got = matmul_pallas(qx.q, qw.q, transpose_rhs=transpose_rhs, scales=(sl, sr))
     want = x @ w
     rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
     assert rel < TOL[dtype]
@@ -150,9 +153,14 @@ def test_scaled_matmul_padded_blocks(dtype):
     pol = QuantPolicy.parse(dtype)
     x, w = _rand((70, 30), seed=7), _rand((30, 50), seed=8)
     qx, qw = quantize(x, pol), quantize(w, pol)
-    got = matmul_pallas(qx.q, qw.q, block_m=32, block_n=32, block_k=16,
-                        scales=(qx.row_scales(),
-                                jnp.full((1, 50), qw.scale, jnp.float32)))
+    got = matmul_pallas(
+        qx.q,
+        qw.q,
+        block_m=32,
+        block_n=32,
+        block_k=16,
+        scales=(qx.row_scales(), jnp.full((1, 50), qw.scale, jnp.float32)),
+    )
     rel = float(jnp.max(jnp.abs(got - x @ w)) / jnp.max(jnp.abs(x @ w)))
     assert rel < TOL[dtype]
 
@@ -189,8 +197,10 @@ def test_plan_execution_parity(phase, dtype):
     pol = QuantPolicy.parse(dtype)
     net = _phase_nets(_atis_fact())[phase]
     plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
-    arrays = [_rand(net.node_shape(i), seed=20 + i, scale=0.25)
-              for i in range(net.num_nodes)]
+    arrays = [
+        _rand(net.node_shape(i), seed=20 + i, scale=0.25)
+        for i in range(net.num_nodes)
+    ]
     want = contraction.execute(plan, arrays)
     scale = float(jnp.max(jnp.abs(want)))
     ge = contraction.execute(plan, arrays, policy=pol)
@@ -206,8 +216,7 @@ def test_plan_execution_parity(phase, dtype):
 def test_bf16_policy_is_noop():
     net = _phase_nets(_atis_fact())["fp"]
     plan = csse.search(net).plan
-    arrays = [_rand(net.node_shape(i), seed=40 + i)
-              for i in range(net.num_nodes)]
+    arrays = [_rand(net.node_shape(i), seed=40 + i) for i in range(net.num_nodes)]
     want = contraction.execute(plan, arrays)
     got = contraction.execute(plan, arrays, policy=QuantPolicy())
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
@@ -245,11 +254,10 @@ def test_stage2_winner_flips_under_quantization(dtype):
     objective, fused chains) — the precision axis genuinely steers CSSE."""
     pol = QuantPolicy.parse(dtype)
     net = tz._wg_network(_atis_fact(), 128, 0)
-    b16 = csse.search(net, csse.SearchOptions(objective="latency",
-                                              fused_chain=True))
-    quant = csse.search(net, csse.SearchOptions(objective="latency",
-                                                fused_chain=True,
-                                                policy=pol))
+    b16 = csse.search(net, csse.SearchOptions(objective="latency", fused_chain=True))
+    quant = csse.search(
+        net, csse.SearchOptions(objective="latency", fused_chain=True, policy=pol)
+    )
     assert b16.tree != quant.tree
     # and the quantized winner is genuinely better under the fp8 pricing
     b16_repriced = pm.evaluate(b16.plan, fused_chain=True, policy=pol)
@@ -264,50 +272,45 @@ def test_stage2_winner_flips_under_quantization(dtype):
 def test_csse_signature_keyed_on_policy():
     net = _atis_fact().forward_network(batch_axes=(("b", 128),))
     hw = pm.TPU_V5E
+
+    def sig(policy):
+        return csse._signature(net, csse.SearchOptions(policy=policy), hw)
+
     sigs = {
-        csse._signature(net, csse.SearchOptions(), hw),
-        csse._signature(net, csse.SearchOptions(
-            policy=QuantPolicy.parse("fp8_e4m3")), hw),
-        csse._signature(net, csse.SearchOptions(
-            policy=QuantPolicy.parse("fp8_e5m2")), hw),
-        csse._signature(net, csse.SearchOptions(
-            policy=QuantPolicy.parse("int8")), hw),
-        csse._signature(net, csse.SearchOptions(
-            policy=QuantPolicy.parse("int8:tile")), hw),
+        sig(None),
+        sig(QuantPolicy.parse("fp8_e4m3")),
+        sig(QuantPolicy.parse("fp8_e5m2")),
+        sig(QuantPolicy.parse("int8")),
+        sig(QuantPolicy.parse("int8:tile")),
     }
     assert len(sigs) == 5
     # the bf16 (no-op) policy must key identically to no policy at all
-    assert csse._signature(net, csse.SearchOptions(policy=QuantPolicy()),
-                           hw) in sigs
+    assert sig(QuantPolicy()) in sigs
 
 
 def test_autotune_cache_key_separation(tmp_path):
     """A bf16 tune record on disk is a miss for the fp8-tagged shape."""
     from repro.core import autotune
-    tuner = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
-                           max_configs=2)
+
+    tuner = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0, max_configs=2)
     base = autotune.StepShape("gemm", (32, 32, 32))
-    fp8 = autotune.StepShape("gemm", (32, 32, 32),
-                             policy="fp8_e4m3/tensor")
+    fp8 = autotune.StepShape("gemm", (32, 32, 32), policy="fp8_e4m3/tensor")
     assert tuner.signature(base) != tuner.signature(fp8)
     tuner.record(base)
-    fresh = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
-                           max_configs=2)
+    fresh = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0, max_configs=2)
     fresh.record(fp8)
     assert fresh.stats["disk_hits"] == 0 and fresh.stats["measured"] == 1
     # same shape again: now it hits its own (policy-tagged) entry
-    again = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
-                           max_configs=2)
+    again = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0, max_configs=2)
     rec = again.record(fp8)
     assert again.stats["disk_hits"] == 1 and rec.shape.policy == fp8.policy
 
 
 def test_quantized_sweep_times_quantized_kernels(tmp_path):
     from repro.core import autotune
-    tuner = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0,
-                           max_configs=2)
-    rec = tuner.record(autotune.StepShape("gemm", (64, 64, 64),
-                                          policy="int8/tensor"))
+
+    tuner = autotune.Tuner(cache_dir=str(tmp_path), iters=1, warmup=0, max_configs=2)
+    rec = tuner.record(autotune.StepShape("gemm", (64, 64, 64), policy="int8/tensor"))
     assert rec.measured and rec.best_s < float("inf")
     ops = tuner._operands(rec.shape)
     assert ops[0].dtype == jnp.int8 and ops[1].dtype == jnp.int8
@@ -322,12 +325,12 @@ def test_quantized_sweep_times_quantized_kernels(tmp_path):
 def test_scale_from_history_bootstrap_and_max():
     hist = jnp.zeros((4,))
     s0 = scale_from_history(hist, 2.0, qmax=127.0)
-    assert float(s0) == pytest.approx(2.0 / 127.0)      # bootstrap
+    assert float(s0) == pytest.approx(2.0 / 127.0)  # bootstrap
     hist = update_history(hist, 3.0)
     hist = update_history(hist, 1.0)
     s1 = scale_from_history(hist, 0.5, qmax=127.0)
-    assert float(s1) == pytest.approx(3.0 / 127.0)      # max over window
-    assert float(compute_scale(0.0, 127.0)) > 0          # eps floor
+    assert float(s1) == pytest.approx(3.0 / 127.0)  # max over window
+    assert float(compute_scale(0.0, 127.0)) > 0  # eps floor
 
 
 def test_update_history_rolls_window():
@@ -343,12 +346,9 @@ def test_update_history_rolls_window():
 
 def _layers(dtype="fp8_e4m3", **over):
     base = tz.TNNConfig(enabled=True, method="tt", rank=8, num_factors=3)
-    quant = dataclasses.replace(base, precision=QuantPolicy.parse(dtype),
-                                **over)
-    l0 = tz.make_tensorized_linear(768, 768, base,
-                                   compute_dtype=jnp.float32)
-    lq = tz.make_tensorized_linear(768, 768, quant,
-                                   compute_dtype=jnp.float32)
+    quant = dataclasses.replace(base, precision=QuantPolicy.parse(dtype), **over)
+    l0 = tz.make_tensorized_linear(768, 768, base, compute_dtype=jnp.float32)
+    lq = tz.make_tensorized_linear(768, 768, quant, compute_dtype=jnp.float32)
     return l0, lq
 
 
@@ -364,8 +364,7 @@ def test_fp8_gradient_parity_single_device():
 
     g0 = jax.grad(lambda p: (l0(p, x) ** 2).sum())(p0)
     gq = jax.jit(jax.grad(lambda p: (lq(p, x) ** 2).sum()))(params)
-    for a, b in zip(jax.tree.leaves(g0["cores"]),
-                    jax.tree.leaves(gq["cores"])):
+    for a, b in zip(jax.tree.leaves(g0["cores"]), jax.tree.leaves(gq["cores"])):
         scale = max(float(jnp.max(jnp.abs(a))), 1e-6)
         assert float(jnp.max(jnp.abs(b - a))) / scale < TOL["fp8_e4m3"]
     # state channel: p - g is the rolled history with this step's amaxes
@@ -389,20 +388,26 @@ def test_quantized_layer_without_amax_state_still_runs():
 
 def test_adamw_amax_passthrough_and_loss_scale():
     from repro.optim.adamw import AdamW
-    opt = AdamW(lr=1e-2, loss_scale=64.0, warmup_steps=0, total_steps=10,
-                min_lr_ratio=1.0)
+
+    opt = AdamW(
+        lr=1e-2, loss_scale=64.0, warmup_steps=0, total_steps=10, min_lr_ratio=1.0
+    )
     params = {"w": jnp.ones((4, 4)), "quant_amax": jnp.zeros((2, 3))}
     state = opt.init(params)
     new_hist = jnp.asarray([[1.0, 0, 0], [2.0, 0, 0]])
-    grads = {"w": jnp.full((4, 4), 0.5) * 64.0,     # scaled by loss_scale
-             "quant_amax": params["quant_amax"] - new_hist}
+    grads = {
+        "w": jnp.full((4, 4), 0.5) * 64.0,  # scaled by loss_scale
+        "quant_amax": params["quant_amax"] - new_hist,
+    }
     new_params, new_state, metrics = opt.update(grads, state, params)
     # passthrough: the amax leaf became exactly the new history
-    np.testing.assert_allclose(np.asarray(new_params["quant_amax"]),
-                               np.asarray(new_hist))
+    np.testing.assert_allclose(
+        np.asarray(new_params["quant_amax"]), np.asarray(new_hist)
+    )
     # grad norm saw the *unscaled* gradient, amax leaf excluded
     assert float(metrics["grad_norm"]) == pytest.approx(
-        float(jnp.sqrt(jnp.sum(jnp.square(jnp.full((4, 4), 0.5))))))
+        float(jnp.sqrt(jnp.sum(jnp.square(jnp.full((4, 4), 0.5)))))
+    )
     # and the unscale+clip left a sane finite update on w
     assert bool(jnp.all(jnp.isfinite(new_params["w"])))
     assert float(jnp.max(jnp.abs(new_params["w"] - params["w"]))) > 0
@@ -423,12 +428,12 @@ def test_microbatch_amax_accumulation_takes_max():
             return (lq(p, batch["x"]) ** 2).sum(), {}
 
     opt = AdamW(lr=1e-3, warmup_steps=0, total_steps=10)
-    step = steps_lib.make_train_step(Model(), opt, shard=lambda x, a: x,
-                                     microbatches=2)
+    step = steps_lib.make_train_step(Model(), opt, shard=lambda x, a: x, microbatches=2)
     # microbatch 0 tiny, microbatch 1 large: the window must see ~8, not
     # the ~4 a sum/2 accumulation would record.
-    x = jnp.concatenate([_rand((8, 768), seed=70) * 0.01,
-                         _rand((8, 768), seed=71) * 8.0])
+    x = jnp.concatenate(
+        [_rand((8, 768), seed=70) * 0.01, _rand((8, 768), seed=71) * 8.0]
+    )
     state = {"params": params, "opt": opt.init(params)}
     new_state, _ = jax.jit(step)(state, {"x": x})
     hist = new_state["params"][tz.AMAX_KEY]
@@ -438,8 +443,15 @@ def test_microbatch_amax_accumulation_takes_max():
 
 def test_adamw_master_weights_round_trip():
     from repro.optim.adamw import AdamW
-    opt = AdamW(lr=1e-4, master_weights=True, weight_decay=0.0,
-                warmup_steps=0, total_steps=10, min_lr_ratio=1.0)
+
+    opt = AdamW(
+        lr=1e-4,
+        master_weights=True,
+        weight_decay=0.0,
+        warmup_steps=0,
+        total_steps=10,
+        min_lr_ratio=1.0,
+    )
     params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
     state = opt.init(params)
     assert state.master is not None
@@ -476,15 +488,17 @@ def test_sharded_quantized_execution_parity(backend):
     pol = QuantPolicy.parse("fp8_e4m3")
     net = _phase_nets(_atis_fact())["fp"]
     plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
-    arrays = [_rand(net.node_shape(i), seed=60 + i, scale=0.125)
-              for i in range(net.num_nodes)]
+    arrays = [
+        _rand(net.node_shape(i), seed=60 + i, scale=0.125)
+        for i in range(net.num_nodes)
+    ]
     want = contraction.execute(plan, arrays)
-    got = contraction.execute(plan, arrays, policy=pol, backend=backend,
-                              mesh=_mesh8())
+    got = contraction.execute(plan, arrays, policy=pol, backend=backend, mesh=_mesh8())
     scale = max(float(jnp.max(jnp.abs(want))), 1e-6)
     tol = TOL["fp8_e4m3"]
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=tol, atol=tol * scale)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=tol, atol=tol * scale
+    )
 
 
 @_needs8
@@ -498,8 +512,9 @@ def test_sharded_fp8_layer_grads_match_single_device():
     gm = jax.jit(jax.grad(lambda p: (lm(p, x) ** 2).sum()))(params)
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gm)):
         scale = max(float(jnp.max(jnp.abs(a))), 1e-6)
-        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
-                                   rtol=5e-2, atol=5e-2 * scale)
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=5e-2, atol=5e-2 * scale
+        )
 
 
 @pytest.mark.slow
@@ -528,11 +543,16 @@ def test_sharded_fp8_parity_8dev_subprocess():
         print("QUANT-SHARDED8 OK")
     """)
     import os
+
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=600,
-                         env={**os.environ, "PYTHONPATH": "src"},
-                         cwd=repo)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=repo,
+    )
     assert out.returncode == 0, out.stderr[-2000:]
     assert "QUANT-SHARDED8 OK" in out.stdout
 
@@ -549,11 +569,21 @@ def test_fp8_training_loss_parity():
     (docs/PRECISION.md: |final bf16 - final fp8| < 0.05 after 20 smoke
     steps)."""
     from repro.launch.train import train
-    kw = dict(smoke=True, tnn=True, steps=20, global_batch=8, seq_len=64,
-              lr=3e-3, ckpt_dir=None, ckpt_every=100, microbatches=1,
-              production_mesh=False, log_every=100)
+
+    kw = dict(
+        smoke=True,
+        tnn=True,
+        steps=20,
+        global_batch=8,
+        seq_len=64,
+        lr=3e-3,
+        ckpt_dir=None,
+        ckpt_every=100,
+        microbatches=1,
+        production_mesh=False,
+        log_every=100,
+    )
     out_b = train("tinyllama_1_1b", **kw)
-    out_q = train("tinyllama_1_1b", tnn_precision="fp8",
-                  loss_scale=128.0, **kw)
+    out_q = train("tinyllama_1_1b", tnn_precision="fp8", loss_scale=128.0, **kw)
     assert out_q["final_loss"] < out_q["losses"][0], "fp8 run not learning"
     assert abs(out_b["final_loss"] - out_q["final_loss"]) < 0.05

@@ -14,8 +14,13 @@ from repro.core import contraction, csse, factorizations as F, perf_model
 from repro.core.tnetwork import plan_from_tree
 from repro.optim import compression
 from repro.precision import (
-    DTYPES, QuantPolicy, compute_scale, dequantize, quantize,
-    scale_from_history, update_history,
+    DTYPES,
+    QuantPolicy,
+    compute_scale,
+    dequantize,
+    quantize,
+    scale_from_history,
+    update_history,
 )
 
 _dims = st.lists(st.integers(2, 5), min_size=2, max_size=3)
@@ -35,18 +40,21 @@ def test_any_search_tree_is_correct(method, out_dims, in_dims, rank, batch):
     """Whatever tree CSSE returns, executing it equals the direct einsum."""
     fact = _make(method, out_dims, in_dims, rank)
     net = fact.forward_network(batch_axes=(("b", batch),))
-    res = csse.search(net, csse.SearchOptions(objective="flops",
-                                              num_candidates=2))
-    arrays = [jnp.asarray(np.random.default_rng(i).standard_normal(
-        net.node_shape(i)), jnp.float32) for i in range(net.num_nodes)]
+    res = csse.search(net, csse.SearchOptions(objective="flops", num_candidates=2))
+    arrays = [
+        jnp.asarray(
+            np.random.default_rng(i).standard_normal(net.node_shape(i)), jnp.float32
+        )
+        for i in range(net.num_nodes)
+    ]
     got = contraction.execute(res.plan, arrays)
     import string
+
     sym = {a: string.ascii_letters[i] for i, a in enumerate(sorted(net.sizes))}
     spec = ",".join("".join(sym[a] for a in node) for node in net.nodes)
     spec += "->" + "".join(sym[a] for a in net.output)
     want = jnp.einsum(spec, *arrays)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
 
 
 @settings(max_examples=25, deadline=None)
@@ -55,7 +63,8 @@ def test_compression_accounting(method, out_dims, in_dims, rank):
     """num_params equals the sum of core sizes; dense_params = M*N."""
     fact = _make(method, out_dims, in_dims, rank)
     assert fact.num_params == sum(
-        math.prod(fact.core_shape(i)) for i in range(fact.num_cores))
+        math.prod(fact.core_shape(i)) for i in range(fact.num_cores)
+    )
     assert fact.dense_params == fact.M * fact.N
     assert fact.M == math.prod(fact.out_dims)
     assert fact.N == math.prod(fact.in_dims)
@@ -63,8 +72,7 @@ def test_compression_accounting(method, out_dims, in_dims, rank):
 
 @settings(max_examples=20, deadline=None)
 @given(_methods, _dims, _dims, st.integers(2, 3), st.integers(1, 4))
-def test_search_optimum_no_worse_than_fixed(method, out_dims, in_dims, rank,
-                                            batch):
+def test_search_optimum_no_worse_than_fixed(method, out_dims, in_dims, rank, batch):
     """Stage-1 FLOPs optimum <= the fixed sequence's FLOPs, always."""
     fact = _make(method, out_dims, in_dims, rank)
     net = fact.forward_network(batch_axes=(("b", batch),))
@@ -79,16 +87,20 @@ def test_mxu_utilisation_bounds(m, n, k):
     u = perf_model.TPU_V5E.mxu_utilisation(m, n, k)
     assert 0.0 < u <= 1.0
     # aligned dims achieve exactly 1
-    assert perf_model.TPU_V5E.mxu_utilisation(
-        ((m + 127) // 128) * 128, ((n + 127) // 128) * 128,
-        ((k + 7) // 8) * 8) == 1.0
+    assert (
+        perf_model.TPU_V5E.mxu_utilisation(
+            ((m + 127) // 128) * 128, ((n + 127) // 128) * 128, ((k + 7) // 8) * 8
+        )
+        == 1.0
+    )
 
 
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 64), st.integers(2, 16))
 def test_int8_quantisation_error_bound(rows, cols):
-    x = jnp.asarray(np.random.default_rng(rows * cols).standard_normal(
-        (rows, cols)), jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(rows * cols).standard_normal((rows, cols)), jnp.float32
+    )
     q, scale = compression.quantize_int8(x)
     deq = compression.dequantize_int8(q, scale)
     # symmetric per-tensor int8: error bounded by half a quantisation step
@@ -99,9 +111,7 @@ _quant_dtypes = st.sampled_from(["fp8_e4m3", "fp8_e5m2", "int8"])
 
 
 @settings(max_examples=30, deadline=None)
-@given(_quant_dtypes,
-       st.floats(0.0, 1e6, allow_nan=False),
-       st.floats(1.0, 4.0))
+@given(_quant_dtypes, st.floats(0.0, 1e6, allow_nan=False), st.floats(1.0, 4.0))
 def test_compute_scale_positive_and_monotone(dtype, amax, margin):
     """Scales are strictly positive (eps floor) and monotone in amax."""
     qmax = DTYPES[dtype][2]
@@ -114,25 +124,24 @@ def test_compute_scale_positive_and_monotone(dtype, amax, margin):
 
 
 @settings(max_examples=25, deadline=None)
-@given(_quant_dtypes, st.integers(1, 40), st.integers(1, 16),
-       st.floats(0.01, 100.0))
+@given(_quant_dtypes, st.integers(1, 40), st.integers(1, 16), st.floats(0.01, 100.0))
 def test_quantize_respects_range(dtype, rows, cols, spread):
     """Quantized values never exceed the dtype's representable range, and
     the round-trip error is bounded by one quantization step."""
     pol = QuantPolicy.parse(dtype)
-    x = jnp.asarray(np.random.default_rng(rows * cols).standard_normal(
-        (rows, cols)) * spread, jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(rows * cols).standard_normal((rows, cols)) * spread,
+        jnp.float32,
+    )
     t = quantize(x, pol)
     q32 = np.asarray(t.q, np.float32)
     assert np.all(np.abs(q32) <= pol.qmax)
-    step = float(t.scale) * (1.0 if dtype == "int8"
-                             else pol.qmax * 2.0 ** -3)
+    step = float(t.scale) * (1.0 if dtype == "int8" else pol.qmax * 2.0**-3)
     assert float(jnp.max(jnp.abs(dequantize(t) - x))) <= step + 1e-6
 
 
 @settings(max_examples=25, deadline=None)
-@given(st.lists(st.floats(0.0, 1e4), min_size=1, max_size=8),
-       st.floats(1e-6, 1e4))
+@given(st.lists(st.floats(0.0, 1e4), min_size=1, max_size=8), st.floats(1e-6, 1e4))
 def test_scale_from_history_uses_window_max(amaxes, current):
     """The delayed scale always reflects the window max — and bootstraps
     from the current amax only while the history is all-zero."""

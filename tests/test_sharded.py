@@ -28,12 +28,13 @@ from repro.core import perf_model as pm
 from repro.core import tensorized as tz
 from repro.core.tnetwork import localize_network, plan_from_tree
 
-MESH8 = pm.MeshSpec(axes=(("data", 8),), axis_sharding=(("b", ("data",)),),
-                    device_kind="cpu")
+MESH8 = pm.MeshSpec(
+    axes=(("data", 8),), axis_sharding=(("b", ("data",)),), device_kind="cpu"
+)
 
 _needs8 = pytest.mark.skipif(
-    jax.device_count() < 8,
-    reason="needs 8 devices (CI forced-host-device leg)")
+    jax.device_count() < 8, reason="needs 8 devices (CI forced-host-device leg)"
+)
 
 
 def _atis_fact():
@@ -51,18 +52,16 @@ def test_localize_network_scales_sharded_axes():
     assert local.sizes["b"] == 16
     assert local.nodes == net.nodes and local.output == net.output
     # every other axis untouched
-    assert all(local.sizes[a] == net.sizes[a]
-               for a in net.sizes if a != "b")
+    assert all(local.sizes[a] == net.sizes[a] for a in net.sizes if a != "b")
     with pytest.raises(AssertionError):
         localize_network(net, {"b": 7})
 
 
 def test_mesh_spec_divisibility_guard():
-    spec = pm.MeshSpec(axes=(("data", 8),),
-                       axis_sharding=(("b", ("data",)),))
+    spec = pm.MeshSpec(axes=(("data", 8),), axis_sharding=(("b", ("data",)),))
     assert spec.factor("b", {"b": 128}) == 8
-    assert spec.factor("b", {"b": 12}) == 1      # 12 % 8 != 0 -> replicated
-    assert spec.factor("n0", {"n0": 64}) == 1    # unsharded axis
+    assert spec.factor("b", {"b": 12}) == 1  # 12 % 8 != 0 -> replicated
+    assert spec.factor("n0", {"n0": 64}) == 1  # unsharded axis
     assert spec.num_devices == 8
 
 
@@ -79,12 +78,10 @@ def test_collective_cost_hand_checked():
     coll = pm.collective_cost(wg, MESH8, hw)
     assert coll.psum_devices == 8
     assert coll.bytes_ici == 336
-    assert coll.latency_s == pytest.approx(
-        336 / hw.ici_bw + hw.step_overhead_s)
+    assert coll.latency_s == pytest.approx(336 / hw.ici_bw + hw.step_overhead_s)
     # dW stash: output 768x768, bf16 -> 2*(7/8)*589824*2 B moved.
     dw = csse.search(tz._dw_network(fact, 128)).plan
-    assert pm.collective_cost(dw, MESH8, hw).bytes_ici == \
-        2 * 7 * 768 * 768 * 2 // 8
+    assert pm.collective_cost(dw, MESH8, hw).bytes_ici == 2 * 7 * 768 * 768 * 2 // 8
     # No mesh -> free.
     assert pm.collective_cost(wg, None, hw).bytes_ici == 0
 
@@ -96,7 +93,7 @@ def test_evaluate_mesh_prices_per_shard_steps():
     plan = csse.search(net).plan
     c1 = pm.evaluate(plan, fused_chain=True)
     c8 = pm.evaluate(plan, fused_chain=True, mesh=MESH8)
-    assert c8.flops < c1.flops            # sharded steps run at 1/8 size
+    assert c8.flops < c1.flops  # sharded steps run at 1/8 size
     assert c8.bytes_ici > 0 and c8.collective_s > 0
     assert c8.latency_s >= c8.collective_s
     assert c1.bytes_ici == 0 and c1.collective_s == 0.0
@@ -124,21 +121,24 @@ def test_localized_plan_matches_manual_scaling():
 def test_csse_signature_keyed_on_mesh():
     net = _atis_fact().forward_network(batch_axes=(("b", 128),))
     hw = pm.TPU_V5E
+    mesh4 = pm.MeshSpec(
+        axes=(("data", 4),), axis_sharding=(("b", ("data",)),), device_kind="cpu"
+    )
+    mesh8_tpu = pm.MeshSpec(
+        axes=(("data", 8),), axis_sharding=(("b", ("data",)),), device_kind="TPU v5e"
+    )
     sigs = {
         csse._signature(net, csse.SearchOptions(), hw),
         csse._signature(net, csse.SearchOptions(mesh=MESH8), hw),
-        csse._signature(net, csse.SearchOptions(mesh=pm.MeshSpec(
-            axes=(("data", 4),), axis_sharding=(("b", ("data",)),),
-            device_kind="cpu")), hw),
-        csse._signature(net, csse.SearchOptions(mesh=pm.MeshSpec(
-            axes=(("data", 8),), axis_sharding=(("b", ("data",)),),
-            device_kind="TPU v5e")), hw),
+        csse._signature(net, csse.SearchOptions(mesh=mesh4), hw),
+        csse._signature(net, csse.SearchOptions(mesh=mesh8_tpu), hw),
     }
-    assert len(sigs) == 4    # mesh shape, device count and kind all key
+    assert len(sigs) == 4  # mesh shape, device count and kind all key
 
 
 def test_autotune_signature_keyed_on_device_count(tmp_path, monkeypatch):
     from repro.core import autotune
+
     tuner = autotune.Tuner(cache_dir=str(tmp_path))
     shape = autotune.StepShape("gemm", (128, 128, 128))
     sig1 = tuner.signature(shape)
@@ -156,11 +156,10 @@ def test_stage2_winner_flips_on_atis_tt():
     """On an 8-way mesh the comm-aware objective picks a different FP
     sequence than the comm-free one (recorded in docs/SHARDING.md)."""
     net = _atis_fact().forward_network(batch_axes=(("b", 128),))
-    free = csse.search(net, csse.SearchOptions(objective="latency",
-                                               fused_chain=True))
-    aware = csse.search(net, csse.SearchOptions(objective="latency",
-                                                fused_chain=True,
-                                                mesh=MESH8))
+    free = csse.search(net, csse.SearchOptions(objective="latency", fused_chain=True))
+    aware = csse.search(
+        net, csse.SearchOptions(objective="latency", fused_chain=True, mesh=MESH8)
+    )
     assert free.tree != aware.tree
     # and the aware winner is genuinely better under the mesh model
     free_on_mesh = pm.evaluate(free.plan, fused_chain=True, mesh=MESH8)
@@ -173,10 +172,11 @@ def test_wg_stash_policy_flips_on_mesh():
     picks independent per-core searches (tiny per-core psums) instead."""
     fact = _atis_fact()
     _, _, (kind_free, _, _) = tz._plans(
-        fact, 128, csse.SearchOptions(objective="latency", fused_chain=True))
+        fact, 128, csse.SearchOptions(objective="latency", fused_chain=True)
+    )
     _, _, (kind_aware, _, _) = tz._plans(
-        fact, 128, csse.SearchOptions(objective="latency", fused_chain=True,
-                                      mesh=MESH8))
+        fact, 128, csse.SearchOptions(objective="latency", fused_chain=True, mesh=MESH8)
+    )
     assert kind_free == "shared"
     assert kind_aware == "indep"
 
@@ -192,9 +192,10 @@ def test_execute_degenerate_mesh_falls_through():
     fact = _atis_fact()
     net = fact.forward_network(batch_axes=(("b", 16),))
     plan = csse.search(net).plan
-    arrays = [jax.random.normal(jax.random.key(i), net.node_shape(i),
-                                jnp.float32)
-              for i in range(net.num_nodes)]
+    arrays = [
+        jax.random.normal(jax.random.key(i), net.node_shape(i), jnp.float32)
+        for i in range(net.num_nodes)
+    ]
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     got = contraction.execute(plan, arrays, mesh=mesh)
     want = contraction.execute(plan, arrays)
@@ -203,27 +204,37 @@ def test_execute_degenerate_mesh_falls_through():
 
 def test_shard_plan_rejects_inconsistent_specs():
     from repro.distributed import sharding
+
     fact = _atis_fact()
-    net = tz._dw_network(fact, 128)          # nodes: X[b,...], dY[b,...]
+    net = tz._dw_network(fact, 128)  # nodes: X[b,...], dY[b,...]
     plan = csse.search(net).plan
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     with pytest.raises(AssertionError, match="must agree"):
-        sharding.shard_plan(plan, mesh, in_specs=[
-            P("data", None, None, None),     # X shards b...
-            P(None, None, None, None),       # ...dY replicates it
-        ])
+        sharding.shard_plan(
+            plan,
+            mesh,
+            in_specs=[
+                P("data", None, None, None),  # X shards b...
+                P(None, None, None, None),  # ...dY replicates it
+            ],
+        )
     with pytest.raises(AssertionError, match="one PartitionSpec per"):
         sharding.shard_plan(plan, mesh, in_specs=[P("data")])
     with pytest.raises(AssertionError, match="disjoint mesh axes"):
         # b and n0 both over "data": shards would pair mismatched blocks.
-        sharding.shard_plan(plan, mesh, in_specs=[
-            P("data", "data", None, None),
-            P("data", None, None, None),
-        ])
+        sharding.shard_plan(
+            plan,
+            mesh,
+            in_specs=[
+                P("data", "data", None, None),
+                P("data", None, None, None),
+            ],
+        )
 
 
 def test_compile_plan_records_mesh_factors():
     from repro.core import plan_compiler
+
     fact = _atis_fact()
     net = fact.forward_network(batch_axes=(("b", 128),))
     plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
@@ -245,25 +256,29 @@ def _mesh8():
 
 def _parity(net, backend, dtype, seed=0):
     plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
-    arrays = [jax.random.normal(jax.random.key(seed + i), net.node_shape(i),
-                                jnp.float32).astype(dtype) / 8
-              for i in range(net.num_nodes)]
+    def mk(i):
+        key = jax.random.key(seed + i)
+        return jax.random.normal(key, net.node_shape(i), jnp.float32).astype(dtype) / 8
+
+    arrays = [mk(i) for i in range(net.num_nodes)]
     want = contraction.execute(plan, arrays)
     got = contraction.execute(plan, arrays, backend=backend, mesh=_mesh8())
     assert got.shape == want.shape and got.dtype == want.dtype
     tol = 1e-5 if dtype == jnp.float32 else 4e-2
     scale = max(float(np.abs(np.asarray(want, np.float32)).max()), 1e-6)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol, atol=tol * scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=tol,
+        atol=tol * scale,
+    )
 
 
 @_needs8
 @pytest.mark.parametrize("backend", ["einsum", "pallas"])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_sharded_fp_parity(backend, dtype):
-    _parity(_atis_fact().forward_network(batch_axes=(("b", 128),)),
-            backend, dtype)
+    _parity(_atis_fact().forward_network(batch_axes=(("b", 128),)), backend, dtype)
 
 
 @_needs8
@@ -283,14 +298,18 @@ def test_sharded_wg_parity(backend, core):
 def test_sharded_tensorized_linear_grads_match():
     """End-to-end custom-vjp: FP/BP/WG all shard_map'd, grads match the
     single-device layer."""
-    from repro.core.tensorized import TNNConfig, make_tensorized_linear
     import dataclasses
+
+    from repro.core.tensorized import TNNConfig, make_tensorized_linear
+
     base = TNNConfig(enabled=True, method="tt", rank=8, num_factors=3)
     l0 = make_tensorized_linear(768, 768, base, compute_dtype=jnp.float32)
     lm = make_tensorized_linear(
-        768, 768,
+        768,
+        768,
         dataclasses.replace(base, mesh=_mesh8(), mesh_axes=("data",)),
-        compute_dtype=jnp.float32)
+        compute_dtype=jnp.float32,
+    )
     params = l0.init(jax.random.key(0))
     x = jax.random.normal(jax.random.key(1), (16, 8, 768), jnp.float32)
 
@@ -301,8 +320,9 @@ def test_sharded_tensorized_linear_grads_match():
     gm = jax.jit(jax.grad(loss(lm)))(params)
     for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(gm)):
         scale = max(float(jnp.max(jnp.abs(a))), 1e-6)
-        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
-                                   rtol=1e-4, atol=1e-4 * scale)
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=1e-4, atol=1e-4 * scale
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -341,10 +361,15 @@ def test_sharded_parity_8dev_subprocess():
         print("SHARDED8 OK")
     """)
     import os
+
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=600,
-                         env={**os.environ, "PYTHONPATH": "src"},
-                         cwd=repo)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=repo,
+    )
     assert out.returncode == 0, out.stderr[-2000:]
     assert "SHARDED8 OK" in out.stdout

@@ -17,7 +17,6 @@ from repro.optim import compression
 from repro.optim.adamw import AdamW
 from repro.serving.engine import Request, ServeEngine
 
-
 # -- data ---------------------------------------------------------------------
 
 
@@ -30,10 +29,8 @@ def test_data_deterministic_and_learnable():
     c = data.batch(4)
     assert not np.array_equal(a["inputs"], c["inputs"])
     # bigram structure: successor-following rate visibly above chance
-    toks = np.concatenate([data.batch(s)["inputs"].ravel()
-                           for s in range(4)])
-    follow = np.mean([t in data.successors[p] for p, t
-                      in zip(toks[:-1], toks[1:])])
+    toks = np.concatenate([data.batch(s)["inputs"].ravel() for s in range(4)])
+    follow = np.mean([t in data.successors[p] for p, t in zip(toks[:-1], toks[1:])])
     assert follow > 0.5, follow
 
 
@@ -57,8 +54,9 @@ def test_data_embeds_mode():
 
 
 def test_adamw_descends_quadratic():
-    opt = AdamW(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200,
-                min_lr_ratio=1.0)
+    opt = AdamW(
+        lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200, min_lr_ratio=1.0
+    )
     params = {"w": jnp.array([3.0, -2.0])}
     state = opt.init(params)
     for _ in range(100):
@@ -89,8 +87,10 @@ def test_adamw_bf16_moments():
 
 
 def test_checkpoint_roundtrip_and_retention():
-    state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
-             "b": jnp.ones((4,), jnp.bfloat16)}
+    state = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": jnp.ones((4,), jnp.bfloat16),
+    }
     with tempfile.TemporaryDirectory() as d:
         for s in (1, 2, 3, 4):
             store.save(d, s, state)
@@ -98,8 +98,7 @@ def test_checkpoint_roundtrip_and_retention():
         assert store.latest_step(d) == 4
         step, got = store.restore(d, state)
         assert step == 4
-        np.testing.assert_array_equal(np.asarray(got["a"]),
-                                      np.asarray(state["a"]))
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(state["a"]))
         assert got["b"].dtype == jnp.bfloat16
         # pruned checkpoints are gone
         assert not os.path.exists(os.path.join(d, "step_00000001"))
@@ -110,7 +109,7 @@ def test_checkpoint_ignores_torn_writes():
     with tempfile.TemporaryDirectory() as d:
         store.save(d, 5, state)
         torn = os.path.join(d, "step_00000009")
-        os.makedirs(torn)                      # no COMMITTED marker
+        os.makedirs(torn)  # no COMMITTED marker
         assert store.latest_step(d) == 5
 
 
@@ -130,14 +129,13 @@ def test_checkpoint_manager_async():
 
 
 def test_watchdog_flags_stragglers_and_hangs():
-    wd = ft.StepWatchdog(straggler_factor=1.5, hang_factor=10.0,
-                         warmup_steps=3)
+    wd = ft.StepWatchdog(straggler_factor=1.5, hang_factor=10.0, warmup_steps=3)
     for s in range(10):
         wd.observe(s, 0.1)
-    r = wd.observe(10, 0.2)     # 2x p95 -> straggler
+    r = wd.observe(10, 0.2)  # 2x p95 -> straggler
     assert r.straggler
     with pytest.raises(TimeoutError):
-        wd.observe(11, 5.0)     # 50x p50 -> presumed hang
+        wd.observe(11, 5.0)  # 50x p50 -> presumed hang
 
 
 def test_run_with_restarts_recovers():
@@ -157,15 +155,37 @@ def test_elastic_restore_after_failure():
     """Kill mid-training, restore into a fresh state, and verify the loss
     trajectory continues (checkpoints are logical arrays => re-shardable)."""
     from repro.launch.train import train
+
     with tempfile.TemporaryDirectory() as d:
-        out1 = train("tinyllama_1_1b", smoke=True, tnn=False, steps=6,
-                     global_batch=4, seq_len=32, lr=1e-3, ckpt_dir=d,
-                     ckpt_every=2, microbatches=1, production_mesh=False,
-                     log_every=100)
-        out2 = train("tinyllama_1_1b", smoke=True, tnn=False, steps=10,
-                     global_batch=4, seq_len=32, lr=1e-3, ckpt_dir=d,
-                     ckpt_every=2, microbatches=1, production_mesh=False,
-                     resume=True, log_every=100)
+        out1 = train(
+            "tinyllama_1_1b",
+            smoke=True,
+            tnn=False,
+            steps=6,
+            global_batch=4,
+            seq_len=32,
+            lr=1e-3,
+            ckpt_dir=d,
+            ckpt_every=2,
+            microbatches=1,
+            production_mesh=False,
+            log_every=100,
+        )
+        out2 = train(
+            "tinyllama_1_1b",
+            smoke=True,
+            tnn=False,
+            steps=10,
+            global_batch=4,
+            seq_len=32,
+            lr=1e-3,
+            ckpt_dir=d,
+            ckpt_every=2,
+            microbatches=1,
+            production_mesh=False,
+            resume=True,
+            log_every=100,
+        )
         # phase 2 resumed (ran fewer than 10 steps from scratch)
         assert len(out2["losses"]) == 10 - 6
 
@@ -181,10 +201,10 @@ def test_int8_error_feedback_unbiased():
         deq, err = compression.compress_decompress(grads, err)
         total = total + deq["w"]
     # error feedback: accumulated transmitted grads converge to 8x true
-    np.testing.assert_allclose(np.asarray(total / 8),
-                               np.asarray(grads["w"]), atol=2e-2)
-    assert compression.wire_bytes(grads, True) * 4 == \
-        compression.wire_bytes(grads, False)
+    np.testing.assert_allclose(np.asarray(total / 8), np.asarray(grads["w"]), atol=2e-2)
+    assert (
+        compression.wire_bytes(grads, True) * 4 == compression.wire_bytes(grads, False)
+    )
 
 
 # -- serving -----------------------------------------------------------------------
@@ -193,16 +213,20 @@ def test_int8_error_feedback_unbiased():
 def test_serve_engine_continuous_batching():
     from repro.configs import base as cfgbase
     from repro.launch import steps as steps_lib
+
     arch = cfgbase.get("tinyllama_1_1b")
     model, cfg = steps_lib.build_model(arch, smoke=True)
     params = model.init(jax.random.key(0))
     engine = ServeEngine(model, params, batch_size=2, max_len=32)
     rng = np.random.default_rng(0)
-    for rid in range(5):       # 5 requests > batch 2 -> multiple waves
-        engine.submit(Request(rid=rid,
-                              prompt=rng.integers(0, cfg.vocab, size=6,
-                                                  dtype=np.int32),
-                              max_new_tokens=4))
+    for rid in range(5):  # 5 requests > batch 2 -> multiple waves
+        engine.submit(
+            Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, size=6, dtype=np.int32),
+                max_new_tokens=4,
+            )
+        )
     done = engine.run()
     assert len(done) == 5
     assert all(len(r.out_tokens) == 4 for r in done)
@@ -211,6 +235,7 @@ def test_serve_engine_continuous_batching():
 def test_serve_greedy_matches_manual_decode():
     from repro.configs import base as cfgbase
     from repro.launch import steps as steps_lib
+
     arch = cfgbase.get("tinyllama_1_1b")
     model, cfg = steps_lib.build_model(arch, smoke=True)
     params = model.init(jax.random.key(0))
@@ -222,7 +247,6 @@ def test_serve_greedy_matches_manual_decode():
     lg, cache = model.prefill(params, jnp.asarray(prompt)[None], 24)
     toks = [int(jnp.argmax(lg, -1)[0])]
     for _ in range(2):
-        lg, cache = model.decode_step(
-            params, jnp.asarray([toks[-1]], jnp.int32), cache)
+        lg, cache = model.decode_step(params, jnp.asarray([toks[-1]], jnp.int32), cache)
         toks.append(int(jnp.argmax(lg, -1)[0]))
     assert out == toks
