@@ -1,0 +1,163 @@
+"""Serving benchmark: continuous-batching latency/throughput under a
+seeded Poisson arrival trace.
+
+Drives ``repro.serving.ServeEngine`` tick-by-tick against a
+deterministic open-loop trace (seeded exponential interarrival gaps
+mapped onto engine ticks), measuring what a serving SLO actually
+prices:
+
+* ``p50_ms`` / ``p99_ms`` — request latency (submit -> last token);
+  p99 is the tail the CI gate watches (``schema.regression_failures``
+  gates it at the same 1.5x as wall_s, with a 5ms noise floor);
+* ``ttft_ms``  — mean time-to-first-token (the chunked-prefill knob's
+  target metric);
+* ``tok_per_s`` — decode throughput over the whole run.
+
+Two cases share one trace: the bf16 KV cache and the fp8-quantized KV
+cache (same requests, same arrival ticks), so the delta between them
+isolates the quantized cache's cost.  Compilation happens in
+``engine.warmup()`` before the clock starts.
+
+Claim checks (:func:`validate`): every submitted request completes,
+outputs respect ``max_new_tokens``, and the fp8 case's modeled
+per-slot payload is >= 2x below bf16's.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models.lm import LM, LMConfig
+from repro.serving.engine import Request, ServeEngine
+
+SEED = 0
+SMOKE = dict(requests=8, batch=4, prompt_len=12, max_new=8,
+             prefill_chunk=8, arrival_rate=2.0)   # requests per tick
+FULL = dict(requests=32, batch=8, prompt_len=48, max_new=32,
+            prefill_chunk=16, arrival_rate=1.0)
+
+
+def _smoke_model():
+    cfg = LMConfig(name="serve-smoke", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab=256, remat=False)
+    model = LM(cfg)
+    params = model.init(jax.random.key(SEED))
+    return model, params, cfg
+
+
+def _poisson_trace(n: int, rate: float, prompt_len: int, max_new: int,
+                   vocab: int) -> list[tuple[int, Request]]:
+    """(arrival_tick, request) pairs from seeded exponential gaps."""
+    rng = np.random.default_rng(SEED)
+    t = 0.0
+    out = []
+    for rid in range(n):
+        t += rng.exponential(1.0 / rate)
+        out.append((int(t), Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, size=prompt_len, dtype=np.int32),
+            max_new_tokens=max_new)))
+    return out
+
+
+def _drive(engine: ServeEngine, trace) -> dict:
+    """Run the trace to completion; wall-clock percentiles per request."""
+    engine.warmup()
+    pending = list(trace)
+    t0 = time.perf_counter()
+    while pending or engine.busy:
+        while pending and pending[0][0] <= engine.tick:
+            engine.submit(pending.pop(0)[1])
+        engine.step()
+    wall = time.perf_counter() - t0
+    done = engine.completed
+    lat_ms = np.array([(r.t_done - r.t_submit) * 1e3 for r in done])
+    ttft_ms = np.array([r.ttft_s * 1e3 for r in done])
+    tokens = sum(len(r.out_tokens) for r in done)
+    return {
+        "wall_s": wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "ttft_ms": float(np.mean(ttft_ms)),
+        "tok_per_s": tokens / wall,
+        "requests": len(done),
+        "tokens": tokens,
+        "ticks": engine.tick,
+        "max_occupancy": engine.max_occupancy,
+    }
+
+
+def run(print_fn=print, smoke: bool = True) -> list[dict]:
+    p = SMOKE if smoke else FULL
+    model, params, cfg = _smoke_model()
+    max_len = p["prompt_len"] + p["max_new"]
+    rows = []
+    for case, kv in (("bf16_kv", None), ("fp8_kv", "fp8")):
+        trace = _poisson_trace(p["requests"], p["arrival_rate"],
+                               p["prompt_len"], p["max_new"], cfg.vocab)
+        engine = ServeEngine(
+            model, params, batch_size=p["batch"], max_len=max_len,
+            prefill_chunk=p["prefill_chunk"], kv_policy=kv)
+        stats = _drive(engine, trace)
+        slot = engine.slot_cost
+        rows.append({
+            "name": f"serving/poisson/{case}",
+            "wall_s": stats["wall_s"],
+            "fusion_hit_rate": None,
+            "dtype": "fp8_e4m3" if kv else "bf16",
+            "policy": f"{engine.kv_policy.tag}" if kv else None,
+            "peak_bytes": slot["total"] * engine.capacity,
+            "p50_ms": stats["p50_ms"],
+            "p99_ms": stats["p99_ms"],
+            "ttft_ms": stats["ttft_ms"],
+            "tok_per_s": stats["tok_per_s"],
+            "requests": stats["requests"],
+            "slot_payload_bytes": slot["payload"],
+            "slot_meta_bytes": slot["meta"],
+            "tokens": stats["tokens"],
+            "ticks": stats["ticks"],
+            "max_occupancy": stats["max_occupancy"],
+            "submitted": p["requests"],
+            "max_new": p["max_new"],
+        })
+        print_fn(
+            f"{rows[-1]['name']:30s} p50={stats['p50_ms']:.1f}ms "
+            f"p99={stats['p99_ms']:.1f}ms ttft={stats['ttft_ms']:.1f}ms "
+            f"{stats['tok_per_s']:.1f} tok/s "
+            f"slot={slot['total']}B occ<={stats['max_occupancy']}")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    failures = []
+    by_case = {r["name"].rsplit("/", 1)[-1]: r for r in rows}
+    for r in rows:
+        if r["requests"] != r["submitted"]:
+            failures.append(
+                f"{r['name']}: {r['requests']}/{r['submitted']} requests "
+                f"completed")
+        if r["tokens"] > r["requests"] * r["max_new"]:
+            failures.append(
+                f"{r['name']}: emitted {r['tokens']} tokens > "
+                f"requests * max_new")
+    bf16 = by_case.get("bf16_kv")
+    fp8 = by_case.get("fp8_kv")
+    if bf16 and fp8:
+        cut = bf16["slot_payload_bytes"] / fp8["slot_payload_bytes"]
+        if cut < 2.0:
+            failures.append(
+                f"fp8 KV payload cut {cut:.2f}x < 2x "
+                f"({bf16['slot_payload_bytes']} -> "
+                f"{fp8['slot_payload_bytes']} bytes/slot)")
+    return failures
+
+
+if __name__ == "__main__":
+    for row in run(smoke=True):
+        print(row)
+    errs = validate(run(print_fn=lambda *_: None, smoke=True))
+    raise SystemExit(1 if errs else 0)

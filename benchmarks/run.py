@@ -91,6 +91,9 @@ _autotune_records = _flat_records()
 _sharded_records = _flat_records()
 _precision_records = _flat_records("dtype", "policy")
 _memory_records = _flat_records("dtype", "policy", "peak_bytes")
+_serving_records = _flat_records("dtype", "policy", "peak_bytes",
+                                 "p50_ms", "p99_ms", "ttft_ms",
+                                 "tok_per_s", "requests")
 
 
 def _suite(smoke: bool):
@@ -113,6 +116,9 @@ def _suite(smoke: bool):
         ("Peak activation memory: plan peaks, budgeted CSSE, stash "
          "policies (store/recompute/quantized)",
          "bench_memory", _memory_records),
+        ("Serving: continuous batching under a seeded Poisson trace "
+         "(p50/p99/ttft, bf16 vs fp8 KV)",
+         "bench_serving", _serving_records),
     ]
     if not smoke:
         suite = [

@@ -14,6 +14,11 @@ Every benchmark row normalises to one flat record:
                                # on stats-capable devices, deterministic
                                # live-bytes model on CPU; None = module
                                # does not probe memory)
+     "p50_ms": float | None,   # serving: request-latency percentiles,
+     "p99_ms": float | None,   #   time-to-first-token, throughput and the
+     "ttft_ms": float | None,  #   request count they were computed over
+     "tok_per_s": float | None,  # (bench_serving only; p99_ms is gated
+     "requests": int | None,   #   like wall_s, with its own noise floor)
      "device": str,            # jax backend:device_kind
      "git_sha": str,           # HEAD at run time ("unknown" outside git)
      "metrics": dict}          # benchmark-specific extras (floats/strs)
@@ -54,6 +59,10 @@ def make_record(name: str, wall_s: float,
                 fusion_hit_rate: float | None = None,
                 dtype: str | None = None, policy: str | None = None,
                 peak_bytes: int | None = None,
+                p50_ms: float | None = None, p99_ms: float | None = None,
+                ttft_ms: float | None = None,
+                tok_per_s: float | None = None,
+                requests: int | None = None,
                 **metrics) -> dict:
     return {
         "name": name,
@@ -63,6 +72,14 @@ def make_record(name: str, wall_s: float,
         "dtype": dtype,
         "policy": policy,
         "peak_bytes": None if peak_bytes is None else int(peak_bytes),
+        # serving fields (bench_serving; None for every non-serving module):
+        # request-latency percentiles, time-to-first-token, throughput, and
+        # the completed-request count the percentiles were computed over.
+        "p50_ms": None if p50_ms is None else float(p50_ms),
+        "p99_ms": None if p99_ms is None else float(p99_ms),
+        "ttft_ms": None if ttft_ms is None else float(ttft_ms),
+        "tok_per_s": None if tok_per_s is None else float(tok_per_s),
+        "requests": None if requests is None else int(requests),
         "device": device(),
         "git_sha": git_sha(),
         "metrics": metrics,
@@ -86,8 +103,9 @@ def load_json(path: str) -> list[dict]:
 
 def regression_failures(records: list[dict], baseline: list[dict],
                         gate: float = 1.5,
-                        min_wall_s: float = 0.05) -> list[str]:
-    """Names whose wall_s or peak_bytes regressed more than ``gate``x.
+                        min_wall_s: float = 0.05,
+                        min_p99_ms: float = 5.0) -> list[str]:
+    """Names whose wall_s, peak_bytes, or p99_ms regressed > ``gate``x.
 
     wall_s: records whose baseline wall_s is under ``min_wall_s`` are not
     gated — sub-50ms timings are dominated by dispatch/timer noise and
@@ -98,6 +116,10 @@ def regression_failures(records: list[dict], baseline: list[dict],
     are deterministic on CI's CPU leg (modeled live-bytes accounting), so
     there is no noise floor to carve out; a peak regression is a real
     planner/stash change, exactly what must not ship silently.
+
+    p99_ms: the serving tail-latency gate — same noise-floor treatment as
+    wall_s (``min_p99_ms``), since a sub-5ms p99 on the smoke model is
+    timer jitter, not a scheduler property.
 
     New records (absent from the baseline) never fail; deleting a
     baselined record does.
@@ -123,6 +145,17 @@ def regression_failures(records: list[dict], baseline: list[dict],
                 failures.append(
                     f"{name}: peak_bytes {got_peak} > {gate}x baseline "
                     f"{base_peak}")
+        base_p99 = base.get("p99_ms")
+        got_p99 = got.get("p99_ms")
+        if base_p99 is not None and base_p99 >= min_p99_ms:
+            if got_p99 is None:
+                failures.append(
+                    f"{name}: baseline has p99_ms {base_p99} but the "
+                    f"record no longer emits it")
+            elif got_p99 > gate * base_p99:
+                failures.append(
+                    f"{name}: p99_ms {got_p99:.1f} > {gate}x baseline "
+                    f"{base_p99:.1f}")
         if base["wall_s"] < min_wall_s:
             continue
         if got["wall_s"] > gate * base["wall_s"]:
@@ -146,29 +179,39 @@ def delta_table(records: list[dict], baseline: list[dict]) -> str:
             return "-" if got == 0 else "from 0"
         return f"{(got / base - 1) * 100:+.1f}%"
 
+    def fmt(v, spec=""):
+        return "-" if v is None else format(v, spec)
+
     by_name = {r["name"]: r for r in baseline}
     lines = [
-        "| benchmark | wall_s | baseline | Δ | peak_bytes | baseline | Δ |",
-        "|---|---|---|---|---|---|---|",
+        "| benchmark | wall_s | baseline | Δ | peak_bytes | baseline | Δ "
+        "| p99_ms | Δ | tok/s | Δ |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in records:
         base = by_name.get(r["name"], {})
         bw = base.get("wall_s")
         bp = base.get("peak_bytes")
         gp = r.get("peak_bytes")
+        b99, g99 = base.get("p99_ms"), r.get("p99_ms")
+        bts, gts = base.get("tok_per_s"), r.get("tok_per_s")
         lines.append(
             f"| {r['name']} "
             f"| {r['wall_s']:.4f} "
-            f"| {'-' if bw is None else f'{bw:.4f}'} "
+            f"| {fmt(bw, '.4f')} "
             f"| {fmt_delta(r['wall_s'], bw)} "
-            f"| {'-' if gp is None else gp} "
-            f"| {'-' if bp is None else bp} "
-            f"| {fmt_delta(gp, bp)} |")
+            f"| {fmt(gp)} "
+            f"| {fmt(bp)} "
+            f"| {fmt_delta(gp, bp)} "
+            f"| {fmt(g99, '.1f')} "
+            f"| {fmt_delta(g99, b99)} "
+            f"| {fmt(gts, '.1f')} "
+            f"| {fmt_delta(gts, bts)} |")
     emitted = {r["name"] for r in records}
     for base in baseline:
         if base["name"] not in emitted:
             bp = base.get("peak_bytes")
             lines.append(f"| {base['name']} | missing | "
                          f"{base['wall_s']:.4f} | missing | - | "
-                         f"{'-' if bp is None else bp} | missing |")
+                         f"{fmt(bp)} | missing | - | - | - | - |")
     return "\n".join(lines)

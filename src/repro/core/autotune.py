@@ -72,7 +72,9 @@ _DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
 # step shapes time the fp8/int8 scaled kernels (different operand dtypes,
 # scale-epilogue inputs), so a bf16 entry must never be served to a
 # quantized run nor vice versa.
-SWEEP_VERSION = 3
+# v4: execution phase entered the signature — serving's phase-specialized
+# profiles (prefill vs decode) tune and cache their own tile winners.
+SWEEP_VERSION = 4
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +99,11 @@ class StepShape:
     transpose_rhs: bool = False         # gemm only
     dtype: str = "float32"
     policy: str = ""                    # QuantPolicy.tag ("" = unquantized)
+    phase: str = ""                     # execution phase ("" = training;
+                                        # "prefill"/"decode" for serving's
+                                        # phase-specialized profiles) — keys
+                                        # the cache so each phase tunes its
+                                        # own tile winners
 
     def quant_policy(self):
         if not self.policy:
@@ -169,6 +176,7 @@ class TuneRecord:
             "transpose_rhs": self.shape.transpose_rhs,
             "dtype": self.shape.dtype,
             "policy": self.shape.policy,
+            "phase": self.shape.phase,
             "best": [self.best.block_m, self.best.block_n,
                      self.best.block_k],
             "best_s": self.best_s, "analytic_s": self.analytic_s,
@@ -179,7 +187,8 @@ class TuneRecord:
     def from_json(cls, d: dict) -> "TuneRecord":
         shape = StepShape(kind=d["kind"], dims=tuple(d["dims"]),
                           transpose_rhs=d["transpose_rhs"],
-                          dtype=d["dtype"], policy=d.get("policy", ""))
+                          dtype=d["dtype"], policy=d.get("policy", ""),
+                          phase=d.get("phase", ""))
         bm, bn, bk = d["best"]
         return cls(shape=shape,
                    best=TileConfig(block_m=bm, block_n=bn, block_k=bk),
@@ -244,6 +253,7 @@ class Tuner:
             "kind": shape.kind, "dims": shape.dims,
             "transpose_rhs": shape.transpose_rhs, "dtype": shape.dtype,
             "policy": shape.policy,
+            "phase": shape.phase,
             "backend": jax.default_backend(),
             "device": jax.devices()[0].device_kind,
             "num_devices": jax.device_count(),
@@ -443,20 +453,24 @@ class Tuner:
     # -- the protocol compile_plan consumes ---------------------------------
 
     def gemm_tiles(self, m: int, n: int, k: int, *, transpose_rhs: bool,
-                   dtype: str, policy: str = "") -> TileConfig:
+                   dtype: str, policy: str = "",
+                   phase: str = "") -> TileConfig:
         return self.record(StepShape("gemm", (m, n, k),
                                      transpose_rhs=transpose_rhs,
-                                     dtype=dtype, policy=policy)).best
+                                     dtype=dtype, policy=policy,
+                                     phase=phase)).best
 
     def chain_tiles(self, m: int, k: int, h: int, n: int, *,
-                    dtype: str, policy: str = "") -> TileConfig:
+                    dtype: str, policy: str = "",
+                    phase: str = "") -> TileConfig:
         return self.record(StepShape("chain", (m, k, h, n),
-                                     dtype=dtype, policy=policy)).best
+                                     dtype=dtype, policy=policy,
+                                     phase=phase)).best
 
     def should_fuse(self, m: int, k: int, h: int, n: int, *, dtype: str,
                     transpose_rhs1: bool = False,
                     transpose_rhs2: bool = False,
-                    policy: str = "") -> bool:
+                    policy: str = "", phase: str = "") -> bool:
         """Measured fuse decision: chain vs the two-GEMM split it replaces.
 
         ``transpose_rhs1/2`` are the split GemmOps' actual VMEM-flip flags,
@@ -466,13 +480,13 @@ class Tuner:
         matching what CSSE stage-2 models as ``fused_chain=True``.
         """
         chain = self.record(StepShape("chain", (m, k, h, n), dtype=dtype,
-                                      policy=policy))
+                                      policy=policy, phase=phase))
         g1 = self.record(StepShape("gemm", (m, h, k),
                                    transpose_rhs=transpose_rhs1,
-                                   dtype=dtype, policy=policy))
+                                   dtype=dtype, policy=policy, phase=phase))
         g2 = self.record(StepShape("gemm", (m, n, h),
                                    transpose_rhs=transpose_rhs2,
-                                   dtype=dtype, policy=policy))
+                                   dtype=dtype, policy=policy, phase=phase))
         if not (chain.measured and g1.measured and g2.measured):
             return True
         return chain.best_s <= g1.best_s + g2.best_s
@@ -480,7 +494,7 @@ class Tuner:
     # -- plan-level costing --------------------------------------------------
 
     def op_latency(self, op, sizes, dtype: str = "float32",
-                   policy_tag: str = "",
+                   policy_tag: str = "", phase: str = "",
                    hw: perf_model.HardwareModel | None = None
                    ) -> tuple[float, bool]:
         """(seconds, measured?) for one lowered op."""
@@ -488,12 +502,12 @@ class Tuner:
             rec = self.record(StepShape(
                 "gemm", (op.mat.m, op.mat.n, op.mat.k),
                 transpose_rhs=op.mat.transpose_rhs, dtype=dtype,
-                policy=policy_tag))
+                policy=policy_tag, phase=phase))
             return rec.latency_s, rec.measured
         if isinstance(op, ChainOp):
             rec = self.record(StepShape(
                 "chain", (op.m, op.k, op.h, op.n), dtype=dtype,
-                policy=policy_tag))
+                policy=policy_tag, phase=phase))
             return rec.latency_s, rec.measured
         cost = perf_model.evaluate_step(op.step, sizes, hw or self.hw)
         return cost.latency_s, False
@@ -502,7 +516,7 @@ class Tuner:
                      fused_chain: bool = True,
                      dtype: str = "float32",
                      mesh: perf_model.MeshSpec | None = None,
-                     policy=None) -> float:
+                     policy=None, phase: str = "") -> float:
         """Total measured latency of a plan's compiled lowering.
 
         Steps the size guard skipped and einsum-fallback steps are charged
@@ -529,10 +543,11 @@ class Tuner:
         coll = perf_model.collective_cost(plan, mesh, hw)
         plan = perf_model.localize_plan(plan, mesh)
         compiled = compile_plan(plan, fuse=fused_chain, tuner=self,
-                                dtype=dtype, policy=policy)
+                                dtype=dtype, policy=policy, phase=phase)
         sizes = plan.network.sizes
         return coll.latency_s + sum(
-            self.op_latency(op, sizes, dtype, policy_tag=ptag, hw=hw)[0]
+            self.op_latency(op, sizes, dtype, policy_tag=ptag, phase=phase,
+                            hw=hw)[0]
             for op in compiled.ops)
 
 
@@ -558,12 +573,13 @@ class CalibratedModel:
     dtype: str = "float32"
     mesh: perf_model.MeshSpec | None = None
     policy: object = None        # QuantPolicy: time the quantized kernels
+    phase: str = ""              # phase-qualified measurement cache keys
 
     def latency(self, plan: ContractionPlan,
                 fused_chain: bool = True) -> float:
         return self.tuner.plan_latency(plan, fused_chain=fused_chain,
                                        dtype=self.dtype, mesh=self.mesh,
-                                       policy=self.policy)
+                                       policy=self.policy, phase=self.phase)
 
     def evaluate(self, plan: ContractionPlan,
                  fused_chain: bool = True) -> perf_model.PlanCost:

@@ -101,6 +101,16 @@ class SearchOptions:
                                       # candidate the minimum-peak sequence
                                       # wins (documented degradation, never
                                       # an error) — docs/MEMORY.md
+    phase: str = ""                   # execution-phase tag ("" = training;
+                                      # serving uses "prefill"/"decode").
+                                      # Enters every cache signature so the
+                                      # phase-specialized serving profiles
+                                      # (repro.serving.profiles) resolve
+                                      # their own memo/disk/measurement
+                                      # entries: prefill's long-sequence
+                                      # GEMMs and decode's batch-wide GEMVs
+                                      # must never share winners even when
+                                      # their network shapes collide.
 
 
 @dataclass
@@ -349,6 +359,10 @@ def _signature(net: TensorNetwork, opts: SearchOptions,
         "opts": (opts.objective, opts.num_candidates, opts.engine,
                  opts.dfs_max_nodes, opts.fused_chain, opts.allow_outer,
                  opts.anchor_input, opts.measure_dtype),
+        # Execution phase ("" training, "prefill"/"decode" serving): phase-
+        # specialized profiles must resolve distinct winners even for
+        # structurally identical networks (docs/SERVING.md).
+        "phase": opts.phase,
         # Mesh shape, per-axis sharding, device kind and device count all
         # enter the key: a winner ranked for one mesh (or for single-device)
         # must never be served from disk for another.
@@ -367,6 +381,16 @@ def _signature(net: TensorNetwork, opts: SearchOptions,
                hw.step_overhead_s, hw.ici_bw),
     }
     return hashlib.sha256(json.dumps(payload, default=str).encode()).hexdigest()
+
+
+def plan_signature(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
+                   hw: perf_model.HardwareModel = perf_model.TPU_V5E) -> str:
+    """Public cache key of a (network, options, hardware) search — what the
+    memo and the disk cache are keyed by.  Serving's phase profiles expose
+    it so tests can assert that prefill and decode resolve *distinct*
+    entries (``SearchOptions.phase`` is part of the key).  The policy is
+    applied to ``hw`` first, mirroring what :func:`search` hashes."""
+    return _signature(net, opts, perf_model.apply_policy(hw, opts.policy))
 
 
 def _disk_load(sig: str, net: TensorNetwork) -> TreeT | None:
@@ -427,7 +451,8 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
         from repro.core import autotune
         measured_model = autotune.CalibratedModel(
             tuner or autotune.default_tuner(), hw,
-            dtype=opts.measure_dtype, mesh=opts.mesh, policy=opts.policy)
+            dtype=opts.measure_dtype, mesh=opts.mesh, policy=opts.policy,
+            phase=opts.phase)
 
     def stage2_metric(plan: ContractionPlan,
                       cost: perf_model.PlanCost) -> float:

@@ -323,7 +323,8 @@ class CompiledPlan:
 def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                  vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
                  tuner=None, dtype: str = "float32",
-                 mesh_factors=None, policy=None) -> CompiledPlan:
+                 mesh_factors=None, policy=None,
+                 phase: str = "") -> CompiledPlan:
     """Lower every step; then (unless ``fuse=False``, the ablation CSSE
     stage-2 prices as ``fused_chain=False``) fuse eligible adjacent GEMM
     pairs.  ``vmem_budget`` may only tighten fusion: ``chain_pallas`` itself
@@ -346,7 +347,11 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     execute quantized: same op structure, fp8/int8 operand streams with
     scale epilogues.  It also qualifies every tuner lookup (the
     measurement DB must never serve a bf16 tile winner to a quantized
-    run — the kernels being timed are different)."""
+    run — the kernels being timed are different).
+
+    ``phase`` qualifies every tuner lookup the same way (serving's
+    phase-specialized profiles tune prefill and decode independently;
+    ``""`` is the training default)."""
     if policy is not None and not policy.quantized:
         policy = None
     ptag = "" if policy is None else policy.tag
@@ -362,7 +367,8 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
             if tuner is not None:
                 tiles = tuner.gemm_tiles(mat.m, mat.n, mat.k,
                                          transpose_rhs=mat.transpose_rhs,
-                                         dtype=dtype, policy=ptag)
+                                         dtype=dtype, policy=ptag,
+                                         phase=phase)
             lowered.append(GemmOp(step=step, mat=mat, tiles=tiles))
     if mesh_factors is not None:
         mesh_factors = tuple(mesh_factors)
@@ -383,11 +389,11 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                                      dtype=dtype,
                                      transpose_rhs1=a.mat.transpose_rhs,
                                      transpose_rhs2=b.mat.transpose_rhs,
-                                     policy=ptag):
+                                     policy=ptag, phase=phase):
                     chain = dataclasses.replace(
                         chain, tiles=tuner.chain_tiles(
                             chain.m, chain.k, chain.h, chain.n, dtype=dtype,
-                            policy=ptag))
+                            policy=ptag, phase=phase))
                 else:
                     chain = None     # measured: two GEMMs beat the chain
             if chain is not None:

@@ -87,6 +87,17 @@ class TNNConfig:
                                           # the trainer's stash/microbatch
                                           # planner envelope
                                           # (`train --tnn-memory-budget`)
+    phase: str = ""                       # execution-phase cache tag ("" =
+                                          # training).  Serving builds one
+                                          # model per phase ("prefill" /
+                                          # "decode", repro.serving.
+                                          # profiles): the tag rides into
+                                          # SearchOptions and every CSSE/
+                                          # autotune signature, so each
+                                          # phase resolves its own plans
+                                          # and tile winners.  Params are
+                                          # phase-independent (the tag
+                                          # never touches init).
 
     def stash_policy(self) -> StashPolicy:
         return StashPolicy.parse(self.remat)
@@ -115,7 +126,8 @@ class TNNConfig:
                                   measure_dtype=dtype,
                                   mesh=self.mesh_spec(),
                                   policy=policy,
-                                  memory_budget=self.memory_budget)
+                                  memory_budget=self.memory_budget,
+                                  phase=self.phase)
 
     def mesh_spec(self):
         """The costing MeshSpec for this config's mesh (None off-mesh)."""

@@ -1,7 +1,16 @@
 """Batched serving driver (continuous batching over the ServeEngine).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b --smoke \
-      --requests 8 --max-new 16
+      --requests 8 --max-new 16 \
+      --serve-kv-dtype fp8 --serve-memory-budget 64MB \
+      --serve-prefill-chunk 16 --serve-max-prefill-tokens 64
+
+Server start builds phase-specialized execution profiles (CSSE +
+autotune warmed separately for the prefill and decode token batches —
+see ``repro.serving.profiles``) when the model is tensorized, then runs
+the slot-table engine.  ``--serve-memory-budget`` bounds admission by
+the modeled per-slot KV bytes; ``--serve-kv-dtype fp8|int8`` stores the
+KV cache quantized, halving that per-slot price.
 """
 
 from __future__ import annotations
@@ -16,6 +25,8 @@ from repro.configs import base as cfgbase
 from repro.distributed import sharding
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
+from repro.memory.planner import format_bytes
+from repro.serving import profiles as profiles_lib
 from repro.serving.engine import Request, ServeEngine
 
 
@@ -28,6 +39,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--serve-kv-dtype", default="bf16",
+                    help="KV cache storage: bf16 | fp8 | fp8_e5m2 | int8")
+    ap.add_argument("--serve-memory-budget", default=None,
+                    help="KV admission budget, e.g. 64MB (modeled bytes)")
+    ap.add_argument("--serve-prefill-chunk", type=int, default=32,
+                    help="prompt tokens a slot ingests per tick")
+    ap.add_argument("--serve-max-prefill-tokens", type=int, default=None,
+                    help="global prefill token budget per tick")
     args = ap.parse_args()
 
     arch = cfgbase.get(args.arch)
@@ -37,9 +56,24 @@ def main() -> None:
     shard = sharding.make_sharder(mesh)
     params = model.init(jax.random.key(0))
 
-    engine = ServeEngine(model, params, batch_size=args.batch,
-                         max_len=args.prompt_len + args.max_new + 8,
-                         shard=shard)
+    # Phase-specialized planning at server start: prefill and decode get
+    # their own CSSE/autotune cache entries (phase-tagged signatures).
+    prof = profiles_lib.build_profiles(
+        cfg, batch_size=args.batch, prefill_chunk=args.serve_prefill_chunk)
+    if prof:
+        print(profiles_lib.profile_summary(prof))
+
+    engine = ServeEngine(
+        model, params, batch_size=args.batch,
+        max_len=args.prompt_len + args.max_new + 8,
+        shard=shard,
+        prefill_chunk=args.serve_prefill_chunk,
+        max_prefill_tokens=args.serve_max_prefill_tokens,
+        kv_policy=args.serve_kv_dtype,
+        memory_budget=args.serve_memory_budget)
+    print(f"[serve] slot KV: {format_bytes(engine.slot_cost['total'])} "
+          f"({args.serve_kv_dtype}), capacity {engine.capacity}/"
+          f"{args.batch} slots")
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -48,12 +82,14 @@ def main() -> None:
                                 dtype=np.int32),
             max_new_tokens=args.max_new,
             temperature=0.0 if rid % 2 == 0 else 0.8))
+    engine.warmup()
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {len(done)} requests, {total_new} tokens "
-          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s)")
+          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s), "
+          f"{engine.tick} ticks, peak occupancy {engine.max_occupancy}")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:12]}...")
 

@@ -149,7 +149,9 @@ def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
 class KVCache(NamedTuple):
     k: jax.Array          # [B, max_len, KV, D]
     v: jax.Array          # [B, max_len, KV, D]
-    length: jax.Array     # [] int32 — tokens currently valid
+    length: jax.Array     # [] int32 — tokens currently valid; the serving
+                          # engine's slot table passes a per-slot [B] vector
+                          # instead (co-batched requests at different depths)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,26 +238,97 @@ class Attention:
         return self._out(params, ctx), cache
 
     def decode_step(self, params, x, cache: KVCache, shard: Shard = no_shard):
-        """One-token decode.  x: [B, 1, d_model]."""
+        """One-token decode.  x: [B, 1, d_model].
+
+        ``cache.length`` is a scalar (every slot at the same depth — the
+        historical path, bit-identical) or a per-slot ``[B]`` vector: each
+        slot then writes its k/v at its own offset and masks to its own
+        depth, which is what lets the serving engine mix requests of
+        different lengths in one decode tick."""
         B = x.shape[0]
         H, KV, D = self._shapes
-        positions = jnp.broadcast_to(cache.length, (B, 1))
+        length = cache.length
+        per_slot = jnp.ndim(length) == 1
+        if per_slot:
+            positions = length[:, None]
+        else:
+            positions = jnp.broadcast_to(length, (B, 1))
         q, k, v = self._qkv(params, x, positions)
-        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, cache.length, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, cache.length, axis=1)
-        new_cache = KVCache(kc, vc, cache.length + 1)
+        if per_slot:
+            upd = jax.vmap(
+                lambda buf, new, start: jax.lax.dynamic_update_slice_in_dim(
+                    buf, new, start, axis=0))
+            kc = upd(cache.k, k, length)
+            vc = upd(cache.v, v, length)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, length,
+                                                     axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, length,
+                                                     axis=1)
+        new_cache = KVCache(kc, vc, length + 1)
 
         groups = H // KV
         qg = q.reshape(B, 1, KV, groups, D)
         scores = jnp.einsum("bqkgd,btkd->bkgqt", qg.astype(jnp.float32),
                             kc.astype(jnp.float32)) / math.sqrt(D)
         t_idx = jnp.arange(kc.shape[1])
-        mask = t_idx[None, None, None, None, :] <= cache.length
+        if per_slot:
+            mask = (t_idx[None, None, None, None, :]
+                    <= length[:, None, None, None, None])
+        else:
+            mask = t_idx[None, None, None, None, :] <= length
         scores = jnp.where(mask, scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bkgqt,btkd->bqkgd", probs,
                          vc.astype(jnp.float32)).astype(x.dtype)
         ctx = ctx.reshape(B, 1, H, D)
+        return self._out(params, ctx), new_cache
+
+    def extend(self, params, x, cache: KVCache, shard: Shard = no_shard,
+               valid: jax.Array | None = None):
+        """Chunked prefill: append a C-token chunk per slot at each slot's
+        current cache depth.  x: [B, C, d_model]; ``cache.length`` scalar
+        or per-slot [B].
+
+        ``valid`` ([B] int32, None = whole chunk) marks how many of the C
+        tokens are real per slot.  k/v beyond a slot's valid count are
+        written as zeros: they sit past the advanced length so the causal
+        mask never exposes them (decode overwrites them in order later),
+        and zeros keep the quantized-KV running amax clean of padding
+        garbage.  Logits come back for every chunk position ([B, C, ...]);
+        the caller reads row ``valid-1`` of slots whose prompt completed —
+        in-chunk queries past valid produce don't-care rows."""
+        B, C, _ = x.shape
+        H, KV, D = self._shapes
+        length = cache.length
+        if jnp.ndim(length) == 0:
+            length = jnp.full((B,), length, jnp.int32)
+        positions = length[:, None] + jnp.arange(C)[None, :]      # [B, C]
+        q, k, v = self._qkv(params, x, positions)
+        if valid is not None:
+            keep = (jnp.arange(C)[None, :] < valid[:, None])[..., None, None]
+            k = jnp.where(keep, k, jnp.zeros((), k.dtype))
+            v = jnp.where(keep, v, jnp.zeros((), v.dtype))
+        upd = jax.vmap(
+            lambda buf, new, start: jax.lax.dynamic_update_slice_in_dim(
+                buf, new.astype(buf.dtype), start, axis=0))
+        kc = upd(cache.k, k, length)
+        vc = upd(cache.v, v, length)
+        adv = C if valid is None else valid
+        new_cache = KVCache(kc, vc, cache.length + adv)
+
+        groups = H // KV
+        qg = q.reshape(B, C, KV, groups, D)
+        scores = jnp.einsum("bckgd,btkd->bkgct", qg.astype(jnp.float32),
+                            kc.astype(jnp.float32)) / math.sqrt(D)
+        t_idx = jnp.arange(kc.shape[1])
+        mask = (t_idx[None, None, None, None, :]
+                <= positions[:, None, None, :, None])
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bkgct,btkd->bckgd", probs,
+                         vc.astype(jnp.float32)).astype(x.dtype)
+        ctx = ctx.reshape(B, C, H, D)
         return self._out(params, ctx), new_cache
 
 

@@ -497,6 +497,54 @@ class LM:
         return logits, DecodeCache(layers=new_layers, shared=new_shared,
                                    length=cache.length + 1)
 
+    # -- chunked prefill (serving) --------------------------------------------
+
+    def extend(self, params: dict, tokens: jax.Array, cache: DecodeCache,
+               shard: Shard = no_shard, valid: jax.Array | None = None
+               ) -> tuple[jax.Array, DecodeCache]:
+        """Ingest a ``[B, C]`` token chunk at each slot's current cache
+        depth — the serving engine's chunked-prefill tick (attention
+        blocks only; SSM blocks go through the engine's sequential
+        decode_step fallback).
+
+        ``cache.length`` may be per-slot ([B]); ``valid`` ([B] int32,
+        None = all C) bounds how many chunk tokens are real per slot (see
+        :meth:`Attention.extend` for the masked-write contract).  Returns
+        logits for every chunk position ([B, C, V] — the engine reads row
+        ``valid-1`` of slots whose prompt just completed) plus the
+        advanced cache."""
+        c = self.cfg
+        assert c.block == "attn" and not c.hybrid, (
+            "extend() requires an attention-block model")
+        B, C = tokens.shape[:2]
+        x = self._embed(params, tokens, shard)
+        pos = cache.length
+
+        def step(x, scan_in):
+            lp, kv = scan_in
+            lkv = KVCache(kv.k, kv.v, pos)
+            h, new_kv = self.attn.extend(
+                lp["attn"], rmsnorm(lp["ln1"], x, c.norm_eps), lkv, shard,
+                valid=valid)
+            x = x + h
+            y = rmsnorm(lp["ln2"], x, c.norm_eps)
+            if c.moe:
+                ym, _ = self._moe_apply(lp["mlp"], y, shard)
+            else:
+                ym = self.mlp(lp["mlp"], y, shard)
+            return x + ym, (new_kv.k, new_kv.v)
+
+        x, (ks, vs) = _maybe_scan(step, x, (params["layers"], cache.layers),
+                                  c.scan_layers, c.num_layers)
+        # Per-layer lengths are bookkeeping only (decode/extend read the
+        # global cache.length); advance by the chunk width.
+        new_layers = KVCache(ks, vs, cache.layers.length + C)
+        adv = C if valid is None else valid
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = self._logits(params, x)                      # [B, C, V]
+        return logits, DecodeCache(layers=new_layers, shared=None,
+                                   length=cache.length + adv)
+
     # -- prefill --------------------------------------------------------------
 
     def prefill(self, params: dict, inputs: jax.Array, max_len: int,

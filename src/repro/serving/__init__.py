@@ -1,1 +1,14 @@
-"""serving subpackage."""
+"""Serving subsystem: slot-table continuous batching over the planning
+stack (phase-specialized plans, quantized KV cache, admission control).
+
+Public surface:
+
+* :class:`repro.serving.engine.ServeEngine` / ``Request`` — the tick
+  loop (admit -> chunked prefill -> decode);
+* :mod:`repro.serving.profiles` — per-phase CSSE/autotune warm-up with
+  phase-tagged cache signatures;
+* :mod:`repro.serving.kv_cache` — fp8/int8 KV storage + the modeled
+  per-slot byte pricing admission budgets use.
+"""
+
+from repro.serving.engine import Request, ServeEngine  # noqa: F401

@@ -1,28 +1,57 @@
-"""Batched serving engine: continuous batching over prefill/decode steps.
+"""Batched serving engine: slot-table continuous batching with chunked
+prefill, admission control, and an optionally quantized KV cache.
 
-A minimal production-shaped server loop:
+The engine owns a fixed table of ``batch_size`` slots and advances in
+**ticks**.  Each tick:
 
-* requests arrive with a prompt and a max_new_tokens budget;
-* the engine groups admissions into fixed-width batch slots (padding
-  prompts to the slot's prompt length), runs ``prefill`` once per admission
-  wave, then steps ``decode`` for the whole active batch each tick;
-* finished slots free immediately and are refilled from the queue
-  (continuous batching), so decode utilisation stays high under mixed
-  lengths;
-* greedy or temperature sampling per request.
+1. **admit** — free slots refill from the request queue immediately
+   (true continuous batching: a queued request lands mid-decode in the
+   slot another request just vacated, it does not wait for the wave to
+   drain).  Admission is bounded by the memory budget: each slot's KV
+   cache is priced by :func:`repro.serving.kv_cache.slot_bytes` (the
+   modeled number the ``--serve-memory-budget`` flag gates against),
+   and slots beyond ``budget // slot_bytes`` are never occupied.
+2. **prefill** — slots still ingesting their prompt consume up to
+   ``prefill_chunk`` prompt tokens each through one ``model.extend``
+   call, bounded globally by ``max_prefill_tokens`` per tick (the
+   lmdeploy-style token-budget knob that keeps a long prompt from
+   starving decode latency).  A slot whose prompt completes samples its
+   first token from its last valid chunk position and flips to decode.
+3. **decode** — every decoding slot feeds its last sampled token
+   through one ``model.decode_step`` call; EOS or the per-request
+   ``max_new_tokens`` budget frees the slot at end of tick.
 
-The jitted step functions come from ``repro.launch.steps``; the engine is
-model-agnostic (any LM with prefill/decode_step).
+Slots are **right-aligned**: every slot's KV history starts at buffer
+offset 0 and rope positions are per-slot logical positions, so a
+request's outputs are independent of which slot it lands in and what
+its neighbours are doing (no left-padding, no cross-slot contamination
+— the invariants ``tests/test_serving.py`` pins).  Host-side numpy
+arrays are the authoritative slot state; the device cache's ``length``
+is overwritten from them before every call.
+
+Models without a native ``extend`` (SSM/hybrid blocks) prefill through
+a sequential fallback: a ``lax.scan`` of ``decode_step`` over chunk
+columns with per-slot freezing, so the engine stays model-agnostic.
+Inactive slots are frozen out of every call by a per-leaf batch-axis
+select — a garbage write from a padded lane can never corrupt a live
+slot's state (or, in the quantized path, pollute the monotone amax).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.memory.planner import parse_budget
+from repro.precision.policy import QuantPolicy
+from repro.serving import kv_cache as kvq
+
+FREE, PREFILL, DECODE = 0, 1, 2
 
 
 @dataclasses.dataclass
@@ -33,85 +62,384 @@ class Request:
     temperature: float = 0.0        # 0 = greedy
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float | None = None   # wall-clock hooks for the bench
+    t_first: float | None = None
+    t_done: float | None = None
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
 
 
 class ServeEngine:
     def __init__(self, model, params, *, batch_size: int, max_len: int,
-                 shard=None, eos_id: int | None = None, seed: int = 0):
+                 shard=None, eos_id: int | None = None, seed: int = 0,
+                 prefill_chunk: int = 32,
+                 max_prefill_tokens: int | None = None,
+                 kv_policy: QuantPolicy | str | None = None,
+                 memory_budget: int | str | None = None):
         self.model = model
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.eos_id = eos_id
         self.shard = shard or (lambda x, a: x)
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if max_prefill_tokens is not None and max_prefill_tokens < 1:
+            raise ValueError("max_prefill_tokens must be >= 1")
+        self.prefill_chunk = prefill_chunk
+        self.max_prefill_tokens = max_prefill_tokens
         self.queue: deque[Request] = deque()
         self.key = jax.random.key(seed)
 
-        self._decode = jax.jit(
-            lambda p, tok, cache: model.decode_step(p, tok, cache))
+        if isinstance(kv_policy, str):
+            kv_policy = QuantPolicy.parse(kv_policy)
+        if kv_policy is not None and not kv_policy.quantized:
+            kv_policy = None
+        self.kv_policy = kv_policy
+
+        cfg = getattr(model, "cfg", None)
+        attn_only = cfg is None or (getattr(cfg, "block", "attn") == "attn"
+                                    and not getattr(cfg, "hybrid", None))
+        self._native_extend = attn_only and hasattr(model, "extend")
+        if kv_policy is not None and not attn_only:
+            raise ValueError("quantized KV requires an attention-only model")
+
+        # -- admission capacity: memory budget / modeled per-slot bytes ----
+        if cfg is not None and attn_only and hasattr(cfg, "num_kv_heads"):
+            self.slot_cost = kvq.slot_bytes(cfg, max_len, kv_policy)
+        else:
+            per = kvq.model_slot_bytes(model, max_len)
+            self.slot_cost = {"payload": per, "meta": 0, "total": per}
+        budget = parse_budget(memory_budget)
+        self.memory_budget = budget
+        if budget is None:
+            self.capacity = batch_size
+        else:
+            self.capacity = min(batch_size,
+                                budget // max(self.slot_cost["total"], 1))
+            if self.capacity == 0:
+                raise ValueError(
+                    f"memory budget {budget} bytes cannot hold one slot "
+                    f"({self.slot_cost['total']} bytes at max_len={max_len})")
+
+        # -- slot table (host-authoritative) --------------------------------
+        B = batch_size
+        self.slot_req: list[Request | None] = [None] * B
+        self.phase = np.full(B, FREE, np.int32)
+        self.lengths = np.zeros(B, np.int32)        # KV tokens written
+        self.prefill_pos = np.zeros(B, np.int32)    # prompt tokens consumed
+        self.next_tok = np.zeros(B, np.int32)       # last sampled token
+        self._admit_seq = np.zeros(B, np.int64)     # admission order
+        self._seq = 0
+        self.tick = 0
+        self.events: list[tuple[int, str, int]] = []
+        self.max_occupancy = 0
+        self.completed: list[Request] = []
+
+        # prefill writes a full chunk of (masked) positions starting at a
+        # slot's current length, so the buffer carries chunk-width slack —
+        # dynamic_update_slice must never clamp a write back onto live
+        # entries.
+        self.cache_len = max_len + prefill_chunk
+        self._init_device_cache()
+        self._build_step_fns()
+
+    # -- device cache -------------------------------------------------------
+
+    def _init_device_cache(self):
+        cache = self.model.init_cache(self.batch, self.cache_len)
+        if self.kv_policy is None:
+            # per-slot [B] length from the start — the pytree structure the
+            # jitted tick fns return; a scalar here would force a recompile
+            # on the first real tick
+            self.cache = cache._replace(
+                length=jnp.zeros(self.batch, jnp.int32))
+            self.qkv = None
+        else:
+            self.cache = None
+            self.qkv = kvq.quantize_kv(cache.layers.k, cache.layers.v,
+                                       self.kv_policy)
+            self._layer_len = cache.layers.length   # [L] bookkeeping shape
+
+    def _select(self, active, new, old):
+        """Per-leaf batch-axis select: inactive slots keep their old
+        state.  Axis rule: every stacked per-layer buffer in this repo is
+        >= 3-D with batch on axis 1 ([L, B, ...]), per-slot vectors are
+        1-/2-D with batch on axis 0 — checked in that order, so the rule
+        stays correct when num_layers happens to equal batch_size.
+        Leaves without a batch axis pass through from ``new``."""
+        B = self.batch
+
+        def sel(n, o):
+            if n.ndim >= 3 and n.shape[1] == B:
+                m = active.reshape((1, B) + (1,) * (n.ndim - 2))
+            elif n.ndim >= 1 and n.shape[0] == B:
+                m = active.reshape((B,) + (1,) * (n.ndim - 1))
+            else:
+                return n
+            return jnp.where(m, n, o)
+
+        return jax.tree.map(sel, new, old)
+
+    def _build_step_fns(self):
+        model, shard, policy = self.model, self.shard, self.kv_policy
+
+        if self._native_extend:
+            def extend_raw(params, toks, cache, valid):
+                return model.extend(params, toks, cache, shard, valid=valid)
+        else:
+            def extend_raw(params, toks, cache, valid):
+                # Sequential fallback: scan decode_step over chunk
+                # columns; a slot past its valid count is frozen.
+                C = toks.shape[1]
+
+                def step(cache, col_i):
+                    col, i = col_i
+                    logits, new = model.decode_step(params, col, cache,
+                                                    shard)
+                    active = i < valid
+                    return self._select(active, new, cache), logits
+
+                cache, logits = jax.lax.scan(
+                    step, cache, (toks.T, jnp.arange(C)))
+                return jnp.transpose(logits, (1, 0, 2)), cache
+
+        if policy is None:
+            def extend_fn(params, toks, cache, lengths, valid, active):
+                cache = cache._replace(length=lengths)
+                logits, new = extend_raw(params, toks, cache, valid)
+                return logits, self._select(active, new, cache)
+
+            def decode_fn(params, tok, cache, lengths, active):
+                cache = cache._replace(length=lengths)
+                logits, new = model.decode_step(params, tok, cache, shard)
+                return logits, self._select(active, new, cache)
+
+            def zero_fn(cache, admit):
+                zeros = jax.tree.map(jnp.zeros_like, cache)
+                return self._select(admit, zeros, cache)
+        else:
+            from repro.models.lm import DecodeCache, KVCache
+            layer_len = self._layer_len
+            dtype = getattr(getattr(model, "cfg", None), "compute_dtype",
+                            jnp.bfloat16)
+
+            def rebuild(qkv, lengths):
+                k, v = kvq.dequantize_kv(qkv, policy, dtype)
+                return (DecodeCache(KVCache(k, v, layer_len), None, lengths),
+                        k, v)
+
+            def requant(new, k, v, qkv, active):
+                m = active[None, :, None, None, None]
+                nk = jnp.where(m, new.layers.k, k)
+                nv = jnp.where(m, new.layers.v, v)
+                return kvq.quantize_kv(nk, nv, policy, prev=qkv)
+
+            def extend_fn(params, toks, qkv, lengths, valid, active):
+                cache, k, v = rebuild(qkv, lengths)
+                logits, new = extend_raw(params, toks, cache, valid)
+                return logits, requant(new, k, v, qkv, active)
+
+            def decode_fn(params, tok, qkv, lengths, active):
+                cache, k, v = rebuild(qkv, lengths)
+                logits, new = model.decode_step(params, tok, cache, shard)
+                return logits, requant(new, k, v, qkv, active)
+
+            zero_fn = None
+
+        self._extend_fn = jax.jit(extend_fn)
+        self._decode_fn = jax.jit(decode_fn)
+        self._zero_fn = jax.jit(zero_fn) if zero_fn is not None else None
+
+    def _state(self):
+        return self.cache if self.kv_policy is None else self.qkv
+
+    def _set_state(self, s):
+        if self.kv_policy is None:
+            self.cache = s
+        else:
+            self.qkv = s
+
+    # -- public API ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_len={self.max_len}")
+        if req.t_submit is None:
+            req.t_submit = time.monotonic()
         self.queue.append(req)
 
-    # -- internals ----------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return int(np.sum(self.phase != FREE))
 
-    def _admit_wave(self) -> list[Request]:
-        wave = []
-        while self.queue and len(wave) < self.batch:
-            wave.append(self.queue.popleft())
-        return wave
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or self.occupancy > 0
 
-    def _pad_prompts(self, wave: list[Request]) -> tuple[np.ndarray, np.ndarray]:
-        tmax = max(len(r.prompt) for r in wave)
-        toks = np.zeros((self.batch, tmax), np.int32)
-        lens = np.zeros((self.batch,), np.int32)
-        for i, r in enumerate(wave):
-            toks[i, tmax - len(r.prompt):] = r.prompt     # left-pad
-            lens[i] = len(r.prompt)
-        return toks, lens
+    def warmup(self) -> None:
+        """Compile the tick functions outside the serving clock, then
+        reset device state."""
+        B, C = self.batch, self.prefill_chunk
+        key0 = self.key           # warmup must not advance the sample stream
+        zl = jnp.zeros(B, jnp.int32)
+        toks = jnp.zeros((B, C), jnp.int32)
+        act = jnp.zeros(B, bool)
+        logits, _ = self._extend_fn(self.params, toks, self._state(), zl, zl,
+                                    act)
+        last = logits[jnp.arange(B), zl]
+        self._sample(last, np.zeros(B, np.float32))
+        dlogits, _ = self._decode_fn(self.params, jnp.zeros(B, jnp.int32),
+                                     self._state(), zl, act)
+        self._sample(dlogits, np.zeros(B, np.float32))
+        if self._zero_fn is not None:
+            self._zero_fn(self._state(), jnp.zeros(B, bool))
+        self.key = key0
+        self._init_device_cache()
+
+    # -- tick phases --------------------------------------------------------
+
+    def _admit(self) -> list[int]:
+        admitted = []
+        for slot in range(self.batch):
+            if not self.queue:
+                break
+            if self.phase[slot] != FREE or self.occupancy >= self.capacity:
+                continue
+            req = self.queue.popleft()
+            self.slot_req[slot] = req
+            self.phase[slot] = PREFILL
+            self.lengths[slot] = 0
+            self.prefill_pos[slot] = 0
+            self._admit_seq[slot] = self._seq
+            self._seq += 1
+            self.events.append((self.tick, "admit", req.rid))
+            admitted.append(slot)
+        if admitted and self._zero_fn is not None:
+            mask = np.zeros(self.batch, bool)
+            mask[admitted] = True
+            self._set_state(self._zero_fn(self._state(), jnp.asarray(mask)))
+        self.max_occupancy = max(self.max_occupancy, self.occupancy)
+        return admitted
 
     def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
-        greedy = jnp.argmax(logits, axis=-1)
+        greedy = jnp.argmax(logits.astype(jnp.float32), axis=-1)
         self.key, sub = jax.random.split(self.key)
         temped = jax.random.categorical(
-            sub, logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4))
+            sub, logits.astype(jnp.float32)
+            / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4))
         pick = jnp.where(jnp.asarray(temps) > 0, temped, greedy)
         return np.asarray(pick, np.int32)
 
-    # -- main loop ------------------------------------------------------------
+    def _append_token(self, slot: int, tok: int) -> None:
+        """Record a sampled token; finish the request when EOS or the
+        budget lands (EOS honored on every token including the first)."""
+        req = self.slot_req[slot]
+        req.out_tokens.append(tok)
+        if req.t_first is None:
+            req.t_first = time.monotonic()
+        self.next_tok[slot] = tok
+        if (tok == self.eos_id if self.eos_id is not None else False) or \
+                len(req.out_tokens) >= req.max_new_tokens:
+            self._finish(slot)
+        else:
+            self.phase[slot] = DECODE
 
-    def run(self) -> list[Request]:
-        """Drain the queue; returns completed requests."""
-        completed: list[Request] = []
-        while self.queue:
-            wave = self._admit_wave()
-            toks, _ = self._pad_prompts(wave)
-            logits, cache = self.model.prefill(
-                self.params, jnp.asarray(toks), self.max_len, self.shard)
-            temps = np.array([r.temperature for r in wave]
-                             + [0.0] * (self.batch - len(wave)), np.float32)
-            next_tok = self._sample(logits, temps)
-            active = list(wave)
-            for r, t in zip(active, next_tok):
-                r.out_tokens.append(int(t))
-            budget = max(r.max_new_tokens for r in active)
-            for _ in range(budget - 1):
-                logits, cache = self._decode(self.params,
-                                             jnp.asarray(next_tok), cache)
-                next_tok = self._sample(logits, temps)
-                alive = False
-                for i, r in enumerate(active):
-                    if r.done or len(r.out_tokens) >= r.max_new_tokens:
-                        r.done = True
-                        continue
-                    tok = int(next_tok[i])
-                    r.out_tokens.append(tok)
-                    if self.eos_id is not None and tok == self.eos_id:
-                        r.done = True
-                    alive = alive or not r.done
-                if not alive:
-                    break
-            for r in active:
-                r.done = True
-                completed.append(r)
-        return completed
+    def _finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.done = True
+        req.t_done = time.monotonic()
+        self.completed.append(req)
+        self.events.append((self.tick, "finish", req.rid))
+        self.slot_req[slot] = None
+        self.phase[slot] = FREE
+
+    def _prefill_tick(self) -> None:
+        B, C = self.batch, self.prefill_chunk
+        budget = self.max_prefill_tokens or B * C
+        valid = np.zeros(B, np.int32)
+        toks = np.zeros((B, C), np.int32)
+        slots = [s for s in range(B) if self.phase[s] == PREFILL]
+        # token budget distributes in admission order (oldest first)
+        for slot in sorted(slots, key=lambda s: self._admit_seq[s]):
+            if budget <= 0:
+                break
+            req = self.slot_req[slot]
+            pos = int(self.prefill_pos[slot])
+            take = min(C, len(req.prompt) - pos, budget)
+            if take <= 0:
+                continue
+            toks[slot, :take] = req.prompt[pos:pos + take]
+            valid[slot] = take
+            budget -= take
+        if not valid.any():
+            return
+        active = valid > 0
+        logits, state = self._extend_fn(
+            self.params, jnp.asarray(toks), self._state(),
+            jnp.asarray(self.lengths), jnp.asarray(valid),
+            jnp.asarray(active))
+        self._set_state(state)
+        self.lengths[active] += valid[active]
+        self.prefill_pos[active] += valid[active]
+
+        finishing = [s for s in np.nonzero(active)[0]
+                     if self.prefill_pos[s] >= len(self.slot_req[s].prompt)]
+        if finishing:
+            # gather + sample at full batch width so the eager sampling
+            # kernels compile once (warmup covers them), regardless of how
+            # many slots finish this tick
+            cols = jnp.asarray(np.maximum(valid - 1, 0))
+            last = logits[jnp.arange(B), cols]            # [B, V]
+            temps = np.zeros(B, np.float32)
+            for s in finishing:
+                temps[s] = self.slot_req[s].temperature
+            picks = self._sample(last, temps)
+            for s in finishing:
+                self._append_token(int(s), int(picks[s]))
+
+    def _decode_tick(self) -> None:
+        active = self.phase == DECODE
+        if not active.any():
+            return
+        logits, state = self._decode_fn(
+            self.params, jnp.asarray(self.next_tok), self._state(),
+            jnp.asarray(self.lengths), jnp.asarray(active))
+        self._set_state(state)
+        self.lengths[active] += 1
+        temps = np.array([self.slot_req[s].temperature if active[s] else 0.0
+                          for s in range(self.batch)], np.float32)
+        picks = self._sample(logits, temps)
+        for slot in np.nonzero(active)[0]:
+            self._append_token(int(slot), int(picks[slot]))
+
+    # -- main loop ----------------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """One tick: admit, prefill chunk, decode.  Returns the requests
+        that completed during the tick."""
+        before = len(self.completed)
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+        self.tick += 1
+        return self.completed[before:]
+
+    def run(self, max_ticks: int | None = None) -> list[Request]:
+        """Drain the queue; returns all completed requests."""
+        limit = max_ticks if max_ticks is not None else 10_000_000
+        while self.busy:
+            if limit <= 0:
+                raise RuntimeError("ServeEngine.run(): tick limit exceeded")
+            self.step()
+            limit -= 1
+        return self.completed

@@ -1,0 +1,139 @@
+"""Quantized KV-cache storage for the serving engine.
+
+Decode is memory-bound: each tick streams the whole KV cache past the
+MXU once, so the cache's *storage* dtype sets both the per-slot HBM
+footprint (what admission control prices) and the decode bandwidth
+bill.  This module stores the attention KV buffers in a
+:class:`repro.precision.policy.QuantPolicy` dtype (fp8/int8 — 2x
+smaller than the bf16 compute dtype) with one f32 scale per layer per
+tensor, and converts at the tick boundary: dequantize -> model step ->
+requantize.  The engine jits that whole sandwich, so XLA fuses the
+casts into the surrounding gather/scatter and nothing quantized ever
+round-trips through host memory.
+
+Scales come from a **running per-layer amax** that only ever grows
+(``new = max(old, amax(tick))``).  Monotonicity is what makes the
+requantize leg safe to iterate: while the amax is unchanged —
+i.e. every tick after the largest activation so far has been seen —
+dequantize->requantize is bit-stable for fp8/int8 (values land back on
+the same lattice points), so repeated ticks do not random-walk the
+cache.  The rare tick that *grows* the amax re-grids once, bounded by
+one quantization step.  This mirrors the delayed-scaling contract the
+training path uses (scales never derived from a same-step reduction
+the kernel would have to wait for).
+
+Byte accounting (:func:`slot_bytes`, :func:`model_slot_bytes`) is
+*modeled*, same convention as ``repro.memory``: derived from shapes
+and policy dtypes, not measured from the allocator — that keeps
+admission control deterministic across backends and is what the
+``--serve-memory-budget`` gate prices against.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.precision.policy import QuantPolicy, compute_scale
+
+
+class QuantKV(NamedTuple):
+    """Quantized stacked KV buffers + their running per-layer amax.
+
+    ``qk``/``qv`` are ``[L, B, T, KV, hd]`` in the policy's storage
+    dtype; ``k_amax``/``v_amax`` are ``[L]`` f32 and monotone over the
+    lifetime of the batch (see module docstring).
+    """
+
+    qk: jax.Array
+    qv: jax.Array
+    k_amax: jax.Array
+    v_amax: jax.Array
+
+
+def _layer_amax(x: jax.Array) -> jax.Array:
+    """Per-layer amax of a stacked ``[L, ...]`` buffer -> ``[L]`` f32."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)),
+                   axis=tuple(range(1, x.ndim)))
+
+
+def _scales(amax: jax.Array, policy: QuantPolicy) -> jax.Array:
+    return compute_scale(amax, policy.qmax, policy.margin)
+
+
+def _expand_layer(scale: jax.Array, ndim: int) -> jax.Array:
+    """``[L]`` scales broadcast against a ``[L, ...]`` buffer."""
+    return scale.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def quantize_kv(k: jax.Array, v: jax.Array, policy: QuantPolicy,
+                prev: QuantKV | None = None) -> QuantKV:
+    """Quantize stacked KV buffers with running per-layer scales.
+
+    ``prev`` carries the amax state forward; passing the previous tick's
+    :class:`QuantKV` is what makes the scales monotone.
+    """
+    assert policy.quantized, "quantize_kv() with a bf16 (no-op) policy"
+    k_amax = _layer_amax(k)
+    v_amax = _layer_amax(v)
+    if prev is not None:
+        k_amax = jnp.maximum(prev.k_amax, k_amax)
+        v_amax = jnp.maximum(prev.v_amax, v_amax)
+
+    def cast(x, amax):
+        y = x.astype(jnp.float32) / _expand_layer(_scales(amax, policy),
+                                                  x.ndim)
+        y = jnp.clip(y, -policy.qmax, policy.qmax)
+        if policy.dtype == "int8":
+            y = jnp.round(y)
+        return y.astype(policy.operand_dtype)
+
+    return QuantKV(qk=cast(k, k_amax), qv=cast(v, v_amax),
+                   k_amax=k_amax, v_amax=v_amax)
+
+
+def dequantize_kv(qkv: QuantKV, policy: QuantPolicy,
+                  dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    """Back to the compute dtype: ``(k, v)`` each ``[L, B, T, KV, hd]``."""
+    k = qkv.qk.astype(jnp.float32) * _expand_layer(
+        _scales(qkv.k_amax, policy), qkv.qk.ndim)
+    v = qkv.qv.astype(jnp.float32) * _expand_layer(
+        _scales(qkv.v_amax, policy), qkv.qv.ndim)
+    return k.astype(dtype), v.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (modeled; what admission control prices)
+# ---------------------------------------------------------------------------
+
+
+def slot_bytes(cfg, max_len: int,
+               policy: QuantPolicy | None = None) -> dict[str, int]:
+    """Modeled HBM bytes one batch slot's KV cache occupies.
+
+    ``payload`` is the K+V token storage (``2 * L * max_len * KV * hd``
+    elements at the storage dtype — exactly 2x smaller under fp8/int8
+    than bf16); ``meta`` is the per-layer f32 scale vectors a quantized
+    cache adds (zero for bf16).  Admission budgets price ``total``.
+    """
+    c = cfg
+    elems = 2 * c.num_layers * max_len * c.num_kv_heads * c.hd
+    if policy is not None and policy.quantized:
+        width = policy.dtype_bytes
+        meta = 2 * c.num_layers * 4          # k_amax + v_amax, f32 each
+    else:
+        width = jnp.dtype(c.compute_dtype).itemsize
+        meta = 0
+    return {"payload": elems * width, "meta": meta,
+            "total": elems * width + meta}
+
+
+def model_slot_bytes(model, max_len: int) -> int:
+    """Per-slot cache bytes for *any* model (SSM/hybrid included),
+    derived from ``init_cache`` abstract shapes — the fallback pricer
+    when the analytic attention formula above does not apply."""
+    shapes = jax.eval_shape(lambda: model.init_cache(1, max_len))
+    return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(shapes)
+               if hasattr(s, "size"))

@@ -1,0 +1,133 @@
+"""Phase-specialized execution profiles: CSSE + autotune per serving phase.
+
+Training searches contraction plans once per (factorization, batch)
+because every step reruns the same shapes.  Serving has *two* steady
+states with very different flattened token batches:
+
+* **prefill** — chunked prompt ingestion; each tick flattens
+  ``batch_size * prefill_chunk`` tokens through every projection;
+* **decode** — one token per slot per tick; ``batch_size`` tokens.
+
+The best contraction sequence for a 512-token GEMM chain is generally
+not the best one for an 8-token chain (stage 2 of CSSE prices batch-
+scaled byte traffic against FLOPs, and the autotuner's measured tile
+winners shift with the M dimension) — so serving runs the PR 1–4
+planning stack **twice at server start**, once per phase, and caches
+the results under *phase-tagged* signatures: :class:`ExecutionProfile`
+carries ``SearchOptions(phase="prefill"|"decode")``, which enters the
+CSSE disk/memo signature (:func:`repro.core.csse.plan_signature`) and
+the autotuner's ``StepShape``/sweep signature.  The two phases can
+therefore never collide in any cache, even when their token counts
+coincide.
+
+``build_profiles`` warms the in-process plan memo
+(``repro.core.tensorized._plans``) for every tensorized projection the
+model instantiates, so the engine's first jitted trace of each phase
+finds its plans hot instead of searching inside ``jax.jit`` tracing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import csse, perf_model, tensorized
+from repro.core.tensorized import TNNConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionProfile:
+    """One serving phase's resolved planning state.
+
+    ``signatures`` maps projection name -> the CSSE cache key its
+    forward plan resolved under (phase-tagged; the serving tests assert
+    prefill/decode keys differ per projection).  ``modeled_latency_s``
+    is the summed modeled forward latency of one tick's tensorized
+    projections — a ranking signal, not a wall-clock promise.
+    """
+
+    phase: str                              # "prefill" | "decode"
+    tokens: int                             # flattened token batch per tick
+    opts: csse.SearchOptions                # phase-tagged search options
+    signatures: tuple[tuple[str, str], ...]
+    modeled_latency_s: float
+
+    def signature_of(self, name: str) -> str:
+        return dict(self.signatures)[name]
+
+
+def phase_tnn(tnn: TNNConfig, phase: str) -> TNNConfig:
+    """Tag a TNN config with an execution phase.  Parameters (cores) are
+    phase-independent; only plan/tile cache keys change."""
+    return dataclasses.replace(tnn, phase=phase)
+
+
+def tensorized_projections(cfg) -> list[tuple[str, int, int]]:
+    """``(name, d_in, d_out)`` of every distinct tensorized projection an
+    ``LMConfig`` instantiates, per its ``tnn.targets``.  Shape-duplicate
+    projections (gate/up; k/v) are listed once — they share plans."""
+    c = cfg
+    out: list[tuple[str, int, int]] = []
+    seen: set[tuple[int, int]] = set()
+
+    def add(name, d_in, d_out):
+        if (d_in, d_out) not in seen:
+            seen.add((d_in, d_out))
+            out.append((name, d_in, d_out))
+
+    targets = c.tnn.targets
+    if "qkv" in targets:
+        add("attn.q", c.d_model, c.num_heads * c.hd)
+        add("attn.kv", c.d_model, c.num_kv_heads * c.hd)
+    if "out" in targets:
+        add("attn.o", c.num_heads * c.hd, c.d_model)
+    if "mlp" in targets:
+        add("mlp.in", c.d_model, c.d_ff)
+        add("mlp.down", c.d_ff, c.d_model)
+    return out
+
+
+def build_profile(cfg, phase: str, tokens: int,
+                  hw: perf_model.HardwareModel = perf_model.TPU_V5E
+                  ) -> ExecutionProfile:
+    """Search (or recall) plans for every tensorized projection at this
+    phase's token batch; returns the profile with its cache keys."""
+    tnn = phase_tnn(cfg.tnn, phase)
+    opts = tnn.search_options(cfg.compute_dtype)
+    sigs: list[tuple[str, str]] = []
+    latency = 0.0
+    for name, d_in, d_out in tensorized_projections(cfg):
+        layer = tensorized.make_tensorized_linear(
+            d_out, d_in, tnn, param_dtype=cfg.param_dtype,
+            compute_dtype=cfg.compute_dtype)
+        fp, _, _ = tensorized._plans(layer.fact, tokens, layer.opts, hw)
+        net = layer.fact.forward_network(batch_axes=(("b", tokens),))
+        sigs.append((name, csse.plan_signature(net, layer.opts, hw)))
+        latency += fp.cost.latency_s
+    return ExecutionProfile(phase=phase, tokens=tokens, opts=opts,
+                            signatures=tuple(sigs),
+                            modeled_latency_s=latency)
+
+
+def build_profiles(cfg, *, batch_size: int, prefill_chunk: int,
+                   hw: perf_model.HardwareModel = perf_model.TPU_V5E
+                   ) -> dict[str, ExecutionProfile]:
+    """Server-start planning: one profile per phase, keyed ``"prefill"``
+    / ``"decode"``.  Empty when the model has nothing tensorized."""
+    if not (cfg.tnn and cfg.tnn.enabled):
+        return {}
+    return {
+        "prefill": build_profile(cfg, "prefill",
+                                 batch_size * prefill_chunk, hw),
+        "decode": build_profile(cfg, "decode", batch_size, hw),
+    }
+
+
+def profile_summary(profiles: dict[str, ExecutionProfile]) -> str:
+    """One line per phase for server-start logging."""
+    lines = []
+    for phase, p in profiles.items():
+        lines.append(
+            f"[profiles] {phase}: tokens/tick={p.tokens} "
+            f"projections={len(p.signatures)} "
+            f"modeled={p.modeled_latency_s * 1e6:.1f}us")
+    return "\n".join(lines)

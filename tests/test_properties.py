@@ -170,3 +170,89 @@ def test_plan_peak_memory_nonnegative_monotone(rank, batch):
     plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
     assert plan.peak_intermediate_elems >= 0
     assert plan.total_read_elems > 0 and plan.total_write_elems > 0
+
+
+# ---------------------------------------------------------------------------
+# serving scheduler invariants (FakeLM from tests/test_serving.py — a
+# deterministic token automaton, so the properties run in milliseconds)
+# ---------------------------------------------------------------------------
+
+from repro.serving import kv_cache as _kvq  # noqa: E402
+from repro.serving.engine import Request, ServeEngine  # noqa: E402
+from test_serving import VOCAB, FakeLM, fake_sequence  # noqa: E402
+
+_prompt = st.lists(st.integers(0, VOCAB - 1), min_size=1, max_size=6)
+_requests = st.lists(
+    st.tuples(_prompt, st.integers(1, 5)), min_size=1, max_size=6)
+
+
+def _serve(requests, batch, chunk, max_prefill=None, budget=None,
+           eos=None):
+    eng = ServeEngine(FakeLM(), {}, batch_size=batch, max_len=16,
+                      prefill_chunk=chunk, max_prefill_tokens=max_prefill,
+                      memory_budget=budget, eos_id=eos)
+    for rid, (prompt, max_new) in enumerate(requests):
+        eng.submit(Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                           max_new_tokens=max_new))
+    return eng, eng.run(max_ticks=10_000)
+
+
+@settings(max_examples=15, deadline=None)
+@given(_requests, st.integers(1, 3), st.integers(1, 4))
+def test_scheduler_no_request_lost_or_duplicated(requests, batch, chunk):
+    """Every submitted request completes exactly once, with at least one
+    and at most max_new_tokens output tokens."""
+    eng, done = _serve(requests, batch, chunk)
+    assert sorted(r.rid for r in done) == list(range(len(requests)))
+    for r in done:
+        assert 1 <= len(r.out_tokens) <= r.max_new_tokens
+    admits = [rid for _, kind, rid in eng.events if kind == "admit"]
+    assert sorted(admits) == list(range(len(requests)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_requests, st.integers(1, 3), st.integers(1, 4))
+def test_scheduler_outputs_deterministic_per_request(requests, batch,
+                                                     chunk):
+    """Outputs depend only on the request's own prompt — any batch mix,
+    chunking, or admission order yields the automaton's sequence."""
+    _, done = _serve(requests, batch, chunk)
+    for r in done:
+        want = fake_sequence(requests[r.rid][0][-1], r.max_new_tokens)
+        assert r.out_tokens == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(_requests, st.integers(1, 4), st.integers(1, 3), st.integers(1, 4))
+def test_scheduler_occupancy_bounded_by_budget(requests, batch, slots,
+                                               chunk):
+    """Occupancy never exceeds the memory-budget capacity."""
+    per = _kvq.model_slot_bytes(FakeLM(), 16)
+    eng, done = _serve(requests, batch, chunk, budget=per * slots)
+    assert eng.capacity == min(batch, slots)
+    assert eng.max_occupancy <= eng.capacity
+    assert sorted(r.rid for r in done) == list(range(len(requests)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(_requests, st.integers(1, 3), st.integers(1, 4), st.integers(1, 6))
+def test_scheduler_prefill_budget_preserves_outputs(requests, batch, chunk,
+                                                    max_prefill):
+    """The per-tick prefill token budget changes scheduling, never
+    tokens."""
+    _, done = _serve(requests, batch, chunk, max_prefill=max_prefill)
+    for r in done:
+        want = fake_sequence(requests[r.rid][0][-1], r.max_new_tokens)
+        assert r.out_tokens == want
+
+
+@settings(max_examples=10, deadline=None)
+@given(_requests, st.integers(1, 3), st.integers(0, VOCAB - 1))
+def test_scheduler_eos_truncates_never_extends(requests, batch, eos):
+    """With an EOS id, outputs are the untruncated sequence cut at (and
+    including) the first EOS, still within max_new_tokens."""
+    _, done = _serve(requests, batch, 2, eos=eos)
+    for r in done:
+        full = fake_sequence(requests[r.rid][0][-1], r.max_new_tokens)
+        want = full[:full.index(eos) + 1] if eos in full else full
+        assert r.out_tokens == want
