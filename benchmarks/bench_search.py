@@ -1,0 +1,159 @@
+"""Joint plan search benchmark: the ISSUE-7 measurement-budget claim.
+
+Two arms search the same rank-16 TT workload over the same combo space
+(fusion x precision x stash) and tile grid, then both winning plans are
+re-priced by one fresh shared evaluation tuner so neither arm's own
+measurement noise decides the comparison:
+
+* **exhaustive** — the PR-1..6 pipeline: one ``objective="measured"``
+  CSSE search per (fusion x precision) combo, full tile sweep, the
+  measured stage-2 rerank over the default 8 candidate plans.  Every
+  tuner trial is counted.
+* **joint** — :func:`repro.core.search.joint_search` with the
+  successive-halving sweep and the learned cost model (fit from the
+  exhaustive arm's measurement DB — the "train on the autotune cache you
+  already have" story of docs/SEARCH.md), measuring only the top-2
+  finalist combos with a 4-plan rerank each.
+
+Claims, checked on every run (CPU interpret mode in CI):
+
+* joint spends **>= 5x fewer tuner trials** than exhaustive;
+* at the shared evaluation, joint's plan is **equal-or-better** (a 1.25x
+  band absorbs interpret-mode timer noise; the typical run re-discovers
+  the identical plan, ratio 1.0);
+* the analytic flip row reproduces the deterministic ATIS-TT
+  weight-gradient flip (``JointSearchResult.flipped``) without spending
+  a single measurement.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from repro.core import autotune, csse, factorizations as F, search
+from repro.core import tensorized
+from repro.core.policy import ExecutionPolicy
+from repro.precision.policy import QuantPolicy
+
+# Rank-16 TT over 512x512: contracted dims reach 128, so the 5-value tile
+# grid is real (~100 configs/shape) instead of clamping to a handful —
+# the regime the halving sweep exists for.
+GRID = (8, 16, 32, 64, 128)
+TOKENS = 64
+MAX_CONFIGS = 100
+
+
+def _fact():
+    return F.tt((8, 8, 8), (8, 8, 8), 16)
+
+
+def run(print_fn=print, cache_dir: str | None = None) -> list[dict]:
+    cache_dir = cache_dir or tempfile.mkdtemp(prefix="repro-search-bench-")
+    net = _fact().forward_network(batch_axes=(("b", TOKENS),))
+    space = search.SearchSpace()
+
+    # -- exhaustive arm: measured CSSE per combo, full sweep ---------------
+    d_ex = tempfile.mkdtemp(dir=cache_dir)
+    ex_tuner = autotune.Tuner(cache_dir=d_ex, tile_sweep=GRID, iters=1,
+                              max_configs=MAX_CONFIGS)
+    csse.clear_memo()
+    t0 = time.perf_counter()
+    ex_lat, ex_combo, ex_plan, ex_xp = float("inf"), None, None, None
+    for fused in space.fused:
+        for prec in space.precisions:
+            xp = ExecutionPolicy(objective="measured", fused_chain=fused,
+                                 precision=QuantPolicy.parse(prec),
+                                 tile_sweep=GRID)
+            res = csse.search(net, xp, tuner=ex_tuner)
+            lat = ex_tuner.plan_latency_policy(res.plan, xp)
+            if lat < ex_lat:
+                ex_lat, ex_combo = lat, (fused, prec)
+                ex_plan, ex_xp = res.plan, xp
+    ex_wall = time.perf_counter() - t0
+    ex_trials = ex_tuner.stats["trials"]
+    print_fn(f"[search] exhaustive: {ex_trials} trials {ex_wall:.1f}s "
+             f"combo={ex_combo}")
+
+    # The learned model trains on the measurement DB the exhaustive arm
+    # just wrote, and persists next to it.
+    model = search.CostModel.fit_from_cache(d_ex)
+
+    # -- joint arm: halving sweep + model-ranked finalists -----------------
+    d_j = tempfile.mkdtemp(dir=cache_dir)
+    j_xp = ExecutionPolicy(objective="measured", tile_sweep=GRID,
+                           sweep_strategy="halving")
+    j_tuner = autotune.Tuner.from_policy(j_xp, cache_dir=d_j, iters=1,
+                                         max_configs=MAX_CONFIGS)
+    csse.clear_memo()
+    t0 = time.perf_counter()
+    jr = search.joint_search(net, j_xp, tuner=j_tuner, model=model,
+                             space=space, measure_top=2)
+    j_wall = time.perf_counter() - t0
+    w = jr.best
+    j_combo = (w.policy.fused_chain, w.policy.policy_tag or "bf16")
+    print_fn(f"[search] joint: {jr.measurements} trials {j_wall:.1f}s "
+             f"combo={j_combo}")
+
+    # -- shared evaluation: one fresh tuner prices both winners ------------
+    d_ev = tempfile.mkdtemp(dir=cache_dir)
+    ev = autotune.Tuner(cache_dir=d_ev, tile_sweep=GRID, iters=3,
+                        max_configs=MAX_CONFIGS)
+    eval_ex = ev.plan_latency_policy(ex_plan, ex_xp)
+    eval_j = ev.plan_latency_policy(w.result.plan, w.policy)
+    trials_ratio = ex_trials / max(1, jr.measurements)
+    lat_ratio = eval_j / eval_ex
+    print_fn(f"[search] eval: exhaustive {eval_ex:.3e}s joint {eval_j:.3e}s "
+             f"-> {trials_ratio:.1f}x fewer trials, lat ratio "
+             f"{lat_ratio:.2f}")
+
+    # -- analytic flip row: zero measurements ------------------------------
+    t0 = time.perf_counter()
+    wg = tensorized._wg_network(F.tt((12, 8, 8), (8, 8, 12), 8), 128, 0)
+    flip = search.joint_search(wg, ExecutionPolicy(objective="latency"))
+    flip_wall = time.perf_counter() - t0
+
+    return [
+        {"name": "search/exhaustive", "wall_s": ex_wall,
+         "fusion_hit_rate": None, "measurements": ex_trials,
+         "eval_latency_s": eval_ex, "combo": f"{ex_combo}"},
+        {"name": "search/joint", "wall_s": j_wall,
+         "fusion_hit_rate": None, "measurements": jr.measurements,
+         "eval_latency_s": eval_j, "combo": f"{j_combo}",
+         "trials_ratio": trials_ratio, "lat_ratio": lat_ratio,
+         "model_used": float(jr.model_used)},
+        {"name": "search/flip_atis_wg", "wall_s": flip_wall,
+         "fusion_hit_rate": None, "measurements": flip.measurements,
+         "flipped": float(flip.flipped),
+         "joint_modeled_s": flip.best.modeled_s,
+         "per_axis_modeled_s": flip.per_axis.modeled_s},
+    ]
+
+
+def validate(rows: list[dict]) -> list[str]:
+    by = {r["name"]: r for r in rows}
+    joint, flip = by["search/joint"], by["search/flip_atis_wg"]
+    failures = []
+    if joint["trials_ratio"] < 5.0:
+        failures.append(
+            f"joint search spent only {joint['trials_ratio']:.2f}x fewer "
+            f"measurements than exhaustive (claim: >= 5x)")
+    if joint["lat_ratio"] > 1.25:
+        failures.append(
+            f"joint plan {joint['lat_ratio']:.2f}x slower than exhaustive "
+            f"at the shared evaluation (claim: equal-or-better, 1.25x "
+            f"noise band)")
+    if not joint["model_used"]:
+        failures.append("cost model did not fit from the exhaustive DB")
+    if not flip["flipped"]:
+        failures.append("ATIS-TT WG joint-vs-per-axis flip did not occur")
+    if flip["measurements"] != 0:
+        failures.append("analytic flip row spent measurements")
+    return failures
+
+
+if __name__ == "__main__":
+    fails = validate(run())
+    for f in fails:
+        print("FAIL:", f)
+    raise SystemExit(1 if fails else 0)

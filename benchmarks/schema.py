@@ -19,6 +19,10 @@ Every benchmark row normalises to one flat record:
      "ttft_ms": float | None,  #   request count they were computed over
      "tok_per_s": float | None,  # (bench_serving only; p99_ms is gated
      "requests": int | None,   #   like wall_s, with its own noise floor)
+     "measurements": int | None,  # tuner trials the case spent (plan-
+                               # search modules: the budget currency of
+                               # docs/SEARCH.md; None = module does not
+                               # count measurements)
      "device": str,            # jax backend:device_kind
      "git_sha": str,           # HEAD at run time ("unknown" outside git)
      "metrics": dict}          # benchmark-specific extras (floats/strs)
@@ -63,6 +67,7 @@ def make_record(name: str, wall_s: float,
                 ttft_ms: float | None = None,
                 tok_per_s: float | None = None,
                 requests: int | None = None,
+                measurements: int | None = None,
                 **metrics) -> dict:
     return {
         "name": name,
@@ -80,6 +85,8 @@ def make_record(name: str, wall_s: float,
         "ttft_ms": None if ttft_ms is None else float(ttft_ms),
         "tok_per_s": None if tok_per_s is None else float(tok_per_s),
         "requests": None if requests is None else int(requests),
+        # plan-search modules: tuner trials spent producing this record
+        "measurements": None if measurements is None else int(measurements),
         "device": device(),
         "git_sha": git_sha(),
         "metrics": metrics,
@@ -185,8 +192,8 @@ def delta_table(records: list[dict], baseline: list[dict]) -> str:
     by_name = {r["name"]: r for r in baseline}
     lines = [
         "| benchmark | wall_s | baseline | Δ | peak_bytes | baseline | Δ "
-        "| p99_ms | Δ | tok/s | Δ |",
-        "|---|---|---|---|---|---|---|---|---|---|---|",
+        "| p99_ms | Δ | tok/s | Δ | meas | Δ |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in records:
         base = by_name.get(r["name"], {})
@@ -195,6 +202,7 @@ def delta_table(records: list[dict], baseline: list[dict]) -> str:
         gp = r.get("peak_bytes")
         b99, g99 = base.get("p99_ms"), r.get("p99_ms")
         bts, gts = base.get("tok_per_s"), r.get("tok_per_s")
+        bm, gm = base.get("measurements"), r.get("measurements")
         lines.append(
             f"| {r['name']} "
             f"| {r['wall_s']:.4f} "
@@ -206,12 +214,14 @@ def delta_table(records: list[dict], baseline: list[dict]) -> str:
             f"| {fmt(g99, '.1f')} "
             f"| {fmt_delta(g99, b99)} "
             f"| {fmt(gts, '.1f')} "
-            f"| {fmt_delta(gts, bts)} |")
+            f"| {fmt_delta(gts, bts)} "
+            f"| {fmt(gm)} "
+            f"| {fmt_delta(gm, bm)} |")
     emitted = {r["name"] for r in records}
     for base in baseline:
         if base["name"] not in emitted:
             bp = base.get("peak_bytes")
             lines.append(f"| {base['name']} | missing | "
                          f"{base['wall_s']:.4f} | missing | - | "
-                         f"{fmt(bp)} | missing | - | - | - | - |")
+                         f"{fmt(bp)} | missing | - | - | - | - | - | - |")
     return "\n".join(lines)

@@ -1,33 +1,48 @@
-"""Measurement-driven autotuner — calibrates CSSE stage-2 against the real
-Pallas lowering.
+"""Measurement-driven autotuner — calibrates the planning stack against
+the real Pallas lowering.
 
 The paper's stage-2 reranks contraction sequences with a cycle-accurate
 model of the target hardware (§IV, §VI-C).  Our ``perf_model`` is an
 analytic roofline that had never been checked against what
 ``plan_compiler`` actually emits.  This module closes that measure→model
-loop:
+loop.  Since PR 7 the tuner is configured from the unified
+:class:`repro.core.policy.ExecutionPolicy` (its *tile axis*:
+``tile_sweep`` grid + ``sweep_strategy``) — build one with
+:meth:`Tuner.from_policy`, price a plan under a policy with
+:meth:`Tuner.plan_latency_policy`:
 
 * **Sweep** — for each lowered GEMM / chain step shape, time real
-  ``matmul_pallas`` / ``chain_pallas`` executions over a small grid of tile
-  sizes (``block_m/n/k``), plus the fuse-vs-no-fuse decision for chain
-  candidates (measured chain against the measured two-GEMM split).  On CPU
-  hosts the kernels run in interpret mode — wall times then measure the
-  interpreter, which is still the honest cost of *this* backend and is what
-  CI exercises; on a TPU the same sweep times compiled kernels.
+  ``matmul_pallas`` / ``chain_pallas`` executions over the policy's grid
+  of tile sizes (``block_m/n/k``), plus the fuse-vs-no-fuse decision for
+  chain candidates (measured chain against the measured two-GEMM split).
+  ``sweep_strategy="full"`` times every candidate;
+  ``"halving"`` is the successive-halving sweep the joint planner
+  (:mod:`repro.core.search`) uses — a utilisation-ranked seed set is
+  timed cheaply, survivors re-timed at higher fidelity, cutting timed
+  trials per shape by ~2x with the same winner in practice
+  (docs/SEARCH.md).  ``stats["trials"]`` counts every timed config — the
+  measurement-count currency ``bench_search.py`` gates on.  On CPU hosts
+  the kernels run in interpret mode — wall times then measure the
+  interpreter, which is still the honest cost of *this* backend and is
+  what CI exercises; on a TPU the same sweep times compiled kernels.
 
 * **Cache** — results persist in a content-addressed on-disk cache (same
-  sha256-of-JSON signature scheme as the CSSE memo), keyed by
-  (op kind, dims, transpose, dtype, jax backend, device kind, interpret,
-  sweep version).  Tuning is paid once per key: a second invocation is a
-  100% cache hit and re-measures nothing.  ``REPRO_AUTOTUNE_CACHE``
-  relocates the cache directory (tests point it at a tmpdir).
+  sha256-of-JSON signature scheme as the CSSE memo), keyed by (op kind,
+  dims, transpose, dtype, quantization-policy tag, phase, tile grid,
+  sweep strategy, jax backend, device kind, device count, interpret,
+  ``SWEEP_VERSION``).  Tuning is paid once per key: a second invocation
+  is a 100% cache hit and re-measures nothing.  ``REPRO_AUTOTUNE_CACHE``
+  relocates the cache directory (tests point it at a tmpdir).  The
+  learned cost model of :mod:`repro.core.search` is fit *from* this DB
+  and persists alongside it, invalidated by the same ``SWEEP_VERSION``.
 
 * **Feedback** — :class:`CalibratedModel` prices a ``ContractionPlan`` by
   compiling it (tile choices and fuse decisions from the cache) and summing
   measured step costs, falling back to the analytic roofline for steps that
   were skipped (too big to measure) or lowered to the einsum fallback.
-  ``csse.search(..., SearchOptions(objective="measured"))`` reranks stage-2
-  candidates with it instead of the analytic model.
+  ``csse.search`` with an ExecutionPolicy whose ``objective="measured"``
+  (or the legacy ``SearchOptions`` view) reranks stage-2 candidates with
+  it instead of the analytic model.
 
 Entry points: :func:`default_tuner` (process-wide singleton used when a
 ``Tuner`` isn't passed explicitly), ``Tuner.plan_latency`` /
@@ -74,7 +89,11 @@ _DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
 # quantized run nor vice versa.
 # v4: execution phase entered the signature — serving's phase-specialized
 # profiles (prefill vs decode) tune and cache their own tile winners.
-SWEEP_VERSION = 4
+# v5: tile grid + sweep strategy entered the signature — halving-tuned
+# winners and custom grids (ExecutionPolicy.tile_sweep) must not collide
+# with full-sweep entries, and the learned cost model fit from this DB
+# (core/search.py) invalidates with it.
+SWEEP_VERSION = 5
 
 
 # ---------------------------------------------------------------------------
@@ -219,8 +238,16 @@ class Tuner:
     One instance per process is enough (see :func:`default_tuner`); the
     disk cache makes tuning persistent across processes and the in-process
     memo makes repeated lookups free.  ``stats`` counts where answers came
-    from: ``measured`` (timed now), ``disk_hits``, ``memo_hits``,
-    ``skipped`` (size guard → analytic fallback).
+    from: ``measured`` (shapes timed now), ``disk_hits``, ``memo_hits``,
+    ``skipped`` (size guard → analytic fallback), and ``trials`` — every
+    individual (shape, tile config) timing performed, the measurement
+    count ``bench_search.py`` compares strategies on.
+
+    ``tile_sweep`` / ``sweep_strategy`` are the ExecutionPolicy tile axis:
+    the grid of candidate block sizes and how it is searched (``"full"``
+    times every deduped candidate, ``"halving"`` successive-halves a
+    utilisation-ranked seed set).  Both enter :meth:`signature`, so tuners
+    with different grids or strategies never share cache entries.
     """
 
     #: tile sizes swept per GEMM dim (clamped to the dim by the kernel)
@@ -229,7 +256,11 @@ class Tuner:
     def __init__(self, hw: perf_model.HardwareModel = perf_model.TPU_V5E,
                  cache_dir: str | None = None, iters: int = 2,
                  warmup: int = 1, max_measure_elems: int = 1 << 22,
-                 max_configs: int = 27, interpret: bool | None = None):
+                 max_configs: int = 27, interpret: bool | None = None,
+                 tile_sweep: tuple[int, ...] | None = None,
+                 sweep_strategy: str = "full"):
+        if sweep_strategy not in ("full", "halving"):
+            raise ValueError(f"unknown sweep_strategy {sweep_strategy!r}")
         self.hw = hw
         self._cache_dir = cache_dir
         self.iters = iters
@@ -237,9 +268,19 @@ class Tuner:
         self.max_measure_elems = max_measure_elems
         self.max_configs = max_configs
         self.interpret = INTERPRET if interpret is None else interpret
+        self.tile_sweep = tuple(tile_sweep) if tile_sweep else self.TILE_SWEEP
+        self.sweep_strategy = sweep_strategy
         self._memo: dict[str, TuneRecord] = {}
         self.stats = {"measured": 0, "disk_hits": 0, "memo_hits": 0,
-                      "skipped": 0}
+                      "skipped": 0, "trials": 0}
+
+    @classmethod
+    def from_policy(cls, policy, hw: perf_model.HardwareModel | None = None,
+                    **kwargs) -> "Tuner":
+        """Build a tuner from an ExecutionPolicy's tile axis."""
+        return cls(hw=hw or perf_model.TPU_V5E,
+                   tile_sweep=policy.tile_sweep,
+                   sweep_strategy=policy.sweep_strategy, **kwargs)
 
     # -- cache plumbing -----------------------------------------------------
 
@@ -259,6 +300,8 @@ class Tuner:
             "num_devices": jax.device_count(),
             "interpret": self.interpret,
             "sweep": SWEEP_VERSION,
+            "grid": self.tile_sweep,
+            "strategy": self.sweep_strategy,
         }
         return hashlib.sha256(
             json.dumps(payload, default=str).encode()).hexdigest()
@@ -287,13 +330,17 @@ class Tuner:
 
     # -- measurement --------------------------------------------------------
 
-    def _time(self, fn) -> float:
-        for _ in range(self.warmup):
+    def _time(self, fn, iters: int | None = None,
+              warmup: int | None = None) -> float:
+        self.stats["trials"] += 1
+        iters = self.iters if iters is None else iters
+        warmup = self.warmup if warmup is None else warmup
+        for _ in range(warmup):
             fn().block_until_ready()
         t0 = time.perf_counter()
-        for _ in range(self.iters):
+        for _ in range(iters):
             fn().block_until_ready()
-        return (time.perf_counter() - t0) / self.iters
+        return (time.perf_counter() - t0) / iters
 
     def _operands(self, shape: StepShape):
         pol = shape.quant_policy()
@@ -344,15 +391,15 @@ class Tuner:
     def _candidates(self, shape: StepShape) -> list[TileConfig]:
         if shape.kind == "gemm":
             m, n, k = shape.dims
-            raw = itertools.product(self.TILE_SWEEP, self.TILE_SWEEP,
-                                    self.TILE_SWEEP)
+            raw = itertools.product(self.tile_sweep, self.tile_sweep,
+                                    self.tile_sweep)
             cands = [TileConfig(block_m=a, block_n=b, block_k=c)
                      for a, b, c in raw]
             eff = lambda t: (min(t.block_m, m), min(t.block_n, n),  # noqa: E731
                              min(t.block_k, k))
         else:
             m, k, h, n = shape.dims
-            raw = itertools.product(self.TILE_SWEEP, self.TILE_SWEEP)
+            raw = itertools.product(self.tile_sweep, self.tile_sweep)
             cands = [TileConfig(block_m=a, block_n=b) for a, b in raw]
             # chain tiles must respect the kernel's VMEM budget assert
             cands = [t for t in cands
@@ -417,15 +464,72 @@ class Tuner:
 
     def _sweep(self, shape: StepShape):
         operands = self._operands(shape)
+        cands = self._candidates(shape)
+        # Halving only pays when the grid is big enough for its seed round
+        # to prune anything; on clamped grids (small dims collapse the
+        # candidate set) it would cost MORE than timing every config once.
+        if (self.sweep_strategy == "halving"
+                and len(cands) > self.HALVING_SEED):
+            return self._sweep_halving(shape, cands, operands)
         trials = []
         best, best_s = None, math.inf
-        for tiles in self._candidates(shape):
+        for tiles in cands:
             wall = self._time(self._run_config(shape, tiles, operands))
             trials.append({"tiles": [tiles.block_m, tiles.block_n,
                                      tiles.block_k], "wall_s": wall})
             if wall < best_s:
                 best, best_s = tiles, wall
         return best, best_s, trials
+
+    #: halving sweep: seed-set size and per-round survivor fraction
+    HALVING_SEED = 9
+    HALVING_ETA = 3
+
+    def _sweep_halving(self, shape: StepShape, cands, operands):
+        """Successive-halving tile sweep — fewer timed trials per shape.
+
+        Candidates are pre-ranked by effective tile coverage (larger
+        clamped tiles → fewer grid steps → less launch overhead, until
+        VMEM caps them — the same monotone prior the full sweep's winners
+        show), the top :data:`HALVING_SEED` are timed at low fidelity
+        (1 iteration), and each round keeps the fastest ``1/HALVING_ETA``
+        and re-times them with one extra iteration.  9 → 3 → 1 costs 13
+        trials against the full sweep's up-to-27, and every trial still
+        goes through :meth:`_time` so ``stats["trials"]`` stays the
+        comparable currency.
+        """
+        dims = shape.dims if shape.kind == "gemm" else (
+            shape.dims[0], shape.dims[3])
+
+        def coverage(t: TileConfig) -> int:
+            if shape.kind == "gemm":
+                m, n, k = dims
+                return (min(t.block_m, m) * min(t.block_n, n)
+                        * min(t.block_k, k))
+            m, n = dims
+            return min(t.block_m, m) * min(t.block_n, n)
+
+        survivors = sorted(cands, key=coverage,
+                           reverse=True)[:self.HALVING_SEED]
+        trials = []
+        rung = 0
+        walls: dict[TileConfig, float] = {}
+        while True:
+            iters = min(self.iters, 1 + rung)
+            for tiles in survivors:
+                wall = self._time(
+                    self._run_config(shape, tiles, operands), iters=iters)
+                walls[tiles] = wall
+                trials.append({"tiles": [tiles.block_m, tiles.block_n,
+                                         tiles.block_k], "wall_s": wall,
+                               "rung": rung})
+            if len(survivors) == 1:
+                break
+            survivors = sorted(survivors, key=walls.__getitem__)[
+                :max(1, len(survivors) // self.HALVING_ETA)]
+            rung += 1
+        best = survivors[0]
+        return best, walls[best], trials
 
     # -- lookup (memo -> disk -> measure) -----------------------------------
 
@@ -549,6 +653,14 @@ class Tuner:
             self.op_latency(op, sizes, dtype, policy_tag=ptag, phase=phase,
                             hw=hw)[0]
             for op in compiled.ops)
+
+    def plan_latency_policy(self, plan: ContractionPlan, policy) -> float:
+        """:meth:`plan_latency` with every axis read off one
+        :class:`repro.core.policy.ExecutionPolicy`."""
+        return self.plan_latency(
+            plan, fused_chain=policy.fused_chain,
+            dtype=policy.measure_dtype, mesh=policy.mesh,
+            policy=policy.quant_policy, phase=policy.phase)
 
 
 # ---------------------------------------------------------------------------

@@ -80,7 +80,11 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
     pallas backend compile with measured tile choices and fuse decisions
     instead of the fixed 128-tile defaults.  einsum ignores all three knobs.
 
-    ``policy`` (a :class:`repro.precision.QuantPolicy`) quantizes the
+    ``policy`` may be a full :class:`repro.core.policy.ExecutionPolicy`
+    (PR 7's unified planning object): its ``fused_chain`` axis then
+    overrides the kwarg of the same name and its precision axis is
+    threaded as below.  Or, legacy form, a
+    :class:`repro.precision.QuantPolicy`, which quantizes the
     execution: input nodes are stored/streamed in the policy dtype
     (fp8/int8), every contraction accumulates in f32 with the
     dequantization scales applied as kernel epilogues (pallas backend) or
@@ -111,6 +115,13 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             f"got {tuple(t.shape)}")
     if out_dtype is None:
         out_dtype = tensors[0].dtype
+    from repro.core.policy import ExecutionPolicy
+    if isinstance(policy, ExecutionPolicy):
+        # The unified policy object fully specifies the execution: its
+        # fusion axis overrides the fused_chain kwarg, its precision axis
+        # becomes the QuantPolicy the rest of this function threads.
+        fused_chain = policy.fused_chain
+        policy = policy.quant_policy
     if policy is not None and not policy.quantized:
         policy = None                       # bf16 policy == historical path
 

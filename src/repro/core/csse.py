@@ -33,11 +33,26 @@ Two-stage search over contraction sequences of a tensor network:
   constraint: infeasible candidates never win while any feasible sequence
   exists — the search trades latency for footprint (docs/MEMORY.md).
 
-Results are memoised in-process and on disk (keyed by the network signature
-and search options) so model building never pays the search twice — the
-training step compiles with sequences baked in.  ``measured`` searches
-memoise in-process only: their ranking depends on the autotune measurement
-DB (itself disk-persistent), not on anything the signature can capture.
+Since PR 7 the search is configured by the unified
+:class:`repro.core.policy.ExecutionPolicy` — the one frozen object that
+carries every planning axis (sequence, tile/fusion, mesh, precision,
+stash/memory, phase).  ``search`` and ``plan_signature`` accept either an
+ExecutionPolicy or the legacy :class:`SearchOptions` view; the two
+convert losslessly (``SearchOptions.from_policy`` / ``to_policy``), and
+**every cache signature is derived from the policy's single
+``signature_payload``** — per-axis fragments (mesh shape, quantization
+width, memory budget, phase tag) are hashed in exactly one place
+(docs/SEARCH.md).  The joint cross-axis planner that searches *sets* of
+policies (sequence × tile × fusion × precision × stash at once) lives in
+:mod:`repro.core.search` and calls back into this module for the
+per-policy sequence ranking.
+
+Results are memoised in-process and on disk (keyed by the network
+signature and the execution policy) so model building never pays the
+search twice — the training step compiles with sequences baked in.
+``measured`` searches memoise in-process only: their ranking depends on
+the autotune measurement DB (itself disk-persistent), not on anything the
+signature can capture.
 """
 
 from __future__ import annotations
@@ -49,10 +64,13 @@ import time
 from dataclasses import dataclass, field
 
 from repro.core import perf_model
+from repro.core.policy import ExecutionPolicy, PolicyError, _validate
 from repro.core.tnetwork import (
     ContractionPlan, TensorNetwork, TreeT, canonical_tree, plan_from_tree,
     tree_leaves,
 )
+from repro.memory.stash import STORE
+from repro.precision.policy import QuantPolicy
 
 _DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
                                   "..", ".cache", "csse")
@@ -111,6 +129,56 @@ class SearchOptions:
                                       # GEMMs and decode's batch-wide GEMVs
                                       # must never share winners even when
                                       # their network shapes collide.
+
+    def __post_init__(self):
+        # Validate at construction with the typed, field-naming error —
+        # an invalid policy used to surface only deep inside perf_model
+        # repricing (apply_policy touching .dtype_bytes on a non-policy).
+        if self.policy is not None and not isinstance(self.policy,
+                                                      QuantPolicy):
+            raise PolicyError(
+                "SearchOptions.policy",
+                f"expected a repro.precision.QuantPolicy or None, got "
+                f"{type(self.policy).__name__}")
+        _validate("SearchOptions", objective=self.objective,
+                  num_candidates=self.num_candidates, engine=self.engine,
+                  dfs_max_nodes=self.dfs_max_nodes, mesh=self.mesh,
+                  precision=self.policy, stash=STORE,
+                  memory_budget=self.memory_budget,
+                  tile_sweep=(128,), sweep_strategy="full",
+                  phase=self.phase)
+
+    # -- ExecutionPolicy interop (the unified surface, docs/SEARCH.md) ------
+
+    @classmethod
+    def from_policy(cls, xp: ExecutionPolicy) -> "SearchOptions":
+        """The sequence-search view of a unified ExecutionPolicy."""
+        return xp.search_options()
+
+    def to_policy(self, **overrides) -> ExecutionPolicy:
+        """Lift these options into the unified ExecutionPolicy (tile/stash
+        axes at their defaults unless overridden)."""
+        kw = dict(objective=self.objective,
+                  num_candidates=self.num_candidates, engine=self.engine,
+                  dfs_max_nodes=self.dfs_max_nodes,
+                  fused_chain=self.fused_chain,
+                  allow_outer=self.allow_outer,
+                  anchor_input=self.anchor_input,
+                  measure_dtype=self.measure_dtype, mesh=self.mesh,
+                  precision=self.policy or QuantPolicy(),
+                  memory_budget=self.memory_budget, phase=self.phase)
+        kw.update(overrides)
+        return ExecutionPolicy(**kw)
+
+
+OptsT = "SearchOptions | ExecutionPolicy"
+
+
+def _as_options(opts) -> SearchOptions:
+    """Public entry points accept either surface."""
+    if isinstance(opts, ExecutionPolicy):
+        return SearchOptions.from_policy(opts)
+    return opts
 
 
 @dataclass
@@ -351,46 +419,44 @@ def _dp_candidates(g: _Graph, opts: SearchOptions) -> list[tuple[int, TreeT]]:
 # ---------------------------------------------------------------------------
 
 
-def _signature(net: TensorNetwork, opts: SearchOptions,
-               hw: perf_model.HardwareModel) -> str:
+def _signature(net: TensorNetwork, opts, hw: perf_model.HardwareModel) -> str:
+    """THE cache key: network + the unified policy payload + hardware.
+
+    Every per-axis fragment — mesh shape/device kind (a winner ranked for
+    one mesh must never be served for another), quantization width (the
+    policy reshapes every byte term the ranking weighed), memory budget
+    (feasibility filtering can flip winners), execution phase
+    (phase-specialized serving profiles resolve distinct entries even for
+    identical networks) — is hashed through
+    :meth:`ExecutionPolicy.signature_payload`, the one signature function
+    of the planning stack.  Legacy ``SearchOptions`` lift through
+    ``to_policy()`` first.
+    """
+    xp = opts if isinstance(opts, ExecutionPolicy) else opts.to_policy()
     payload = {
         "sizes": sorted(net.sizes.items()),
         "nodes": net.nodes, "output": net.output,
-        "opts": (opts.objective, opts.num_candidates, opts.engine,
-                 opts.dfs_max_nodes, opts.fused_chain, opts.allow_outer,
-                 opts.anchor_input, opts.measure_dtype),
-        # Execution phase ("" training, "prefill"/"decode" serving): phase-
-        # specialized profiles must resolve distinct winners even for
-        # structurally identical networks (docs/SERVING.md).
-        "phase": opts.phase,
-        # Mesh shape, per-axis sharding, device kind and device count all
-        # enter the key: a winner ranked for one mesh (or for single-device)
-        # must never be served from disk for another.
-        "mesh": (None if opts.mesh is None
-                 else opts.mesh.signature_payload()),
-        # Quantization policy: a winner ranked for bf16 byte widths must
-        # never be served for an fp8/int8 search (and vice versa) — the
-        # policy reshapes every memory term the ranking weighed.
-        "policy": (None if opts.policy is None or not opts.policy.quantized
-                   else opts.policy.signature_payload()),
-        # Memory budget: a winner chosen under one budget (or none) must
-        # never be served for another — feasibility filtering reshapes the
-        # stage-2 ranking, so budgets can flip winners.
-        "memory_budget": opts.memory_budget,
+        "policy": xp.signature_payload(),
         "hw": (hw.name, hw.peak_flops, hw.hbm_bw, hw.dtype_bytes,
                hw.step_overhead_s, hw.ici_bw),
     }
     return hashlib.sha256(json.dumps(payload, default=str).encode()).hexdigest()
 
 
-def plan_signature(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
+def plan_signature(net: TensorNetwork, opts=None,
                    hw: perf_model.HardwareModel = perf_model.TPU_V5E) -> str:
-    """Public cache key of a (network, options, hardware) search — what the
-    memo and the disk cache are keyed by.  Serving's phase profiles expose
-    it so tests can assert that prefill and decode resolve *distinct*
-    entries (``SearchOptions.phase`` is part of the key).  The policy is
-    applied to ``hw`` first, mirroring what :func:`search` hashes."""
-    return _signature(net, opts, perf_model.apply_policy(hw, opts.policy))
+    """Public cache key of a (network, policy, hardware) search — what the
+    memo and the disk cache are keyed by.  ``opts`` is an
+    :class:`ExecutionPolicy` or legacy :class:`SearchOptions` (default:
+    ``SearchOptions()``).  Serving's phase profiles expose it so tests can
+    assert that prefill and decode resolve *distinct* entries (``phase``
+    is part of the key).  The quantization policy is applied to ``hw``
+    first, mirroring what :func:`search` hashes."""
+    if opts is None:
+        opts = SearchOptions()
+    quant = (opts.quant_policy if isinstance(opts, ExecutionPolicy)
+             else opts.policy)
+    return _signature(net, opts, perf_model.apply_policy(hw, quant))
 
 
 def _disk_load(sig: str, net: TensorNetwork) -> TreeT | None:
@@ -432,12 +498,17 @@ def _untuple(x):
     return tuple(_untuple(v) for v in x) if isinstance(x, list) else x
 
 
-def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
+def search(net: TensorNetwork, opts=None,
            hw: perf_model.HardwareModel = perf_model.TPU_V5E,
            tuner=None) -> SearchResult:
     """Run the two-stage CSSE on ``net`` and return the best plan.
 
-    With ``opts.objective == "measured"``, stage 2 reranks by the
+    ``opts`` is an :class:`ExecutionPolicy` (the unified surface) or the
+    legacy :class:`SearchOptions` view; default ``SearchOptions()``.  The
+    cache signature always hashes the *full* policy, so callers handing
+    an ExecutionPolicy get tile-axis-qualified memo entries for free.
+
+    With ``objective == "measured"``, stage 2 reranks by the
     measurement-driven tuner (``tuner`` or the process-wide
     :func:`repro.core.autotune.default_tuner`) instead of the analytic
     model; measured searches skip the on-disk winner cache (the measurement
@@ -445,6 +516,8 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
     measurements are themselves disk-cached, so a warm second run
     re-measures nothing.
     """
+    sig_opts = opts if opts is not None else SearchOptions()
+    opts = _as_options(sig_opts)
     hw = perf_model.apply_policy(hw, opts.policy)
     measured_model = None
     if opts.objective == "measured":
@@ -461,7 +534,7 @@ def search(net: TensorNetwork, opts: SearchOptions = SearchOptions(),
                                           fused_chain=opts.fused_chain)
         return cost.metric(opts.objective)
 
-    sig = _signature(net, opts, hw)
+    sig = _signature(net, sig_opts, hw)
     memo = _MEMO.get(sig)
     if memo is not None:
         return memo

@@ -343,15 +343,23 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     VMEM checks and measured fuse decisions then all happen at the shard
     shapes each device dispatches.
 
-    ``policy`` (a :class:`repro.precision.QuantPolicy`) makes ``run``
-    execute quantized: same op structure, fp8/int8 operand streams with
-    scale epilogues.  It also qualifies every tuner lookup (the
-    measurement DB must never serve a bf16 tile winner to a quantized
-    run — the kernels being timed are different).
+    ``policy`` may be a full :class:`repro.core.policy.ExecutionPolicy`
+    (PR 7's unified planning object): ``fuse`` and ``phase`` are then
+    taken from its fusion/phase axes and its precision axis threaded as
+    below.  Or, legacy form, a :class:`repro.precision.QuantPolicy`,
+    which makes ``run`` execute quantized: same op structure, fp8/int8
+    operand streams with scale epilogues.  It also qualifies every tuner
+    lookup (the measurement DB must never serve a bf16 tile winner to a
+    quantized run — the kernels being timed are different).
 
     ``phase`` qualifies every tuner lookup the same way (serving's
     phase-specialized profiles tune prefill and decode independently;
     ``""`` is the training default)."""
+    from repro.core.policy import ExecutionPolicy
+    if isinstance(policy, ExecutionPolicy):
+        fuse = policy.fused_chain
+        phase = policy.phase
+        policy = policy.quant_policy
     if policy is not None and not policy.quantized:
         policy = None
     ptag = "" if policy is None else policy.tag

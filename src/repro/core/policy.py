@@ -1,0 +1,331 @@
+"""ExecutionPolicy — the one object describing how a contraction executes.
+
+Six PRs grew six separately-threaded planning axes: the CSSE sequence
+search (``SearchOptions``), the tile/fusion sweep (``autotune.Tuner``),
+the mesh layout (``perf_model.MeshSpec``), the precision policy
+(``repro.precision.QuantPolicy``), the activation stash
+(``repro.memory.StashPolicy``) and the serving phase tag.  Every layer
+took its own subset of kwargs, every cache hashed its own subset of
+fields, and nothing could search *across* axes.  This module collapses
+them:
+
+* :class:`ExecutionPolicy` is a single frozen dataclass carrying every
+  axis.  It validates on construction (:class:`PolicyError` names the
+  offending field), hashes, serialises (:meth:`to_json` /
+  :meth:`from_json`), and produces **the one cache signature**
+  (:meth:`signature_payload` / :meth:`signature`) that the CSSE winner
+  cache keys on — per-axis signature fragments live here, nowhere else.
+
+* The legacy kwarg surfaces remain as *views*: :meth:`search_options`
+  yields the ``csse.SearchOptions`` the search layer consumes,
+  ``SearchOptions.to_policy()`` is its inverse, and :meth:`from_kwargs`
+  accepts the old scattered kwargs so existing call sites keep working
+  unchanged (shim-equivalence is property-tested in
+  ``tests/test_properties.py``).
+
+* The joint planner (:mod:`repro.core.search`) searches over *sets* of
+  ExecutionPolicies — one candidate per (fusion × precision × stash)
+  combination — which is only possible because the whole execution stack
+  is described by one object (``docs/SEARCH.md``).
+
+Dependency note: this module sits below ``csse`` (which imports it) and
+above ``perf_model`` / ``repro.precision.policy`` / ``repro.memory.stash``
+(which it imports) — no cycles; the ``search_options`` view imports
+``csse`` lazily.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field, fields, replace
+
+from repro.core import perf_model
+from repro.memory.stash import STORE, StashPolicy
+from repro.precision.policy import QuantPolicy
+
+#: stage-2 objectives the search layer understands
+OBJECTIVES = ("latency", "energy", "edp", "flops", "measured")
+
+#: stage-1 engines (auto picks dfs below dfs_max_nodes, dp above)
+ENGINES = ("auto", "dfs", "dp")
+
+#: tile-sweep strategies of the autotuner (docs/SEARCH.md)
+SWEEP_STRATEGIES = ("full", "halving")
+
+
+class PolicyError(ValueError):
+    """An ExecutionPolicy (or legacy SearchOptions) field failed
+    validation.  ``field`` names the offending field — the typed error
+    the planning layers raise *at construction*, instead of the deep
+    perf_model repricing failures an invalid policy used to cause."""
+
+    def __init__(self, field_name: str, message: str):
+        self.field = field_name
+        super().__init__(f"{field_name}: {message}")
+
+
+def _validate(owner: str, *, objective, num_candidates, engine,
+              dfs_max_nodes, mesh, precision, stash, memory_budget,
+              tile_sweep, sweep_strategy, phase) -> None:
+    """Shared validator — ExecutionPolicy and the SearchOptions shim both
+    funnel through here so the two surfaces can never drift."""
+    def err(name, msg):
+        raise PolicyError(f"{owner}.{name}", msg)
+
+    if objective not in OBJECTIVES:
+        err("objective", f"unknown objective {objective!r}; expected one "
+            f"of {OBJECTIVES}")
+    if engine not in ENGINES:
+        err("engine", f"unknown engine {engine!r}; expected one of "
+            f"{ENGINES}")
+    if not isinstance(num_candidates, int) or num_candidates < 1:
+        err("num_candidates", f"must be a positive int, got "
+            f"{num_candidates!r}")
+    if not isinstance(dfs_max_nodes, int) or dfs_max_nodes < 1:
+        err("dfs_max_nodes", f"must be a positive int, got "
+            f"{dfs_max_nodes!r}")
+    if mesh is not None and not isinstance(mesh, perf_model.MeshSpec):
+        err("mesh", f"expected a perf_model.MeshSpec or None, got "
+            f"{type(mesh).__name__} (a live jax Mesh must be mirrored "
+            f"via repro.distributed.sharding.mesh_spec first)")
+    if precision is not None and not isinstance(precision, QuantPolicy):
+        err("precision", f"expected a repro.precision.QuantPolicy or "
+            f"None, got {type(precision).__name__}")
+    if not isinstance(stash, StashPolicy):
+        err("stash", f"expected a repro.memory.StashPolicy, got "
+            f"{type(stash).__name__}")
+    if memory_budget is not None and (
+            not isinstance(memory_budget, int) or memory_budget <= 0):
+        err("memory_budget", f"must be a positive byte count or None, "
+            f"got {memory_budget!r}")
+    if (not isinstance(tile_sweep, tuple) or not tile_sweep
+            or not all(isinstance(t, int) and t > 0 for t in tile_sweep)):
+        err("tile_sweep", f"must be a non-empty tuple of positive tile "
+            f"sizes, got {tile_sweep!r}")
+    if sweep_strategy not in SWEEP_STRATEGIES:
+        err("sweep_strategy", f"unknown strategy {sweep_strategy!r}; "
+            f"expected one of {SWEEP_STRATEGIES}")
+    if not isinstance(phase, str):
+        err("phase", f"must be a string tag, got {type(phase).__name__}")
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """Every knob of one contraction execution, one frozen object.
+
+    Field groups mirror the planning axes (docs/SEARCH.md):
+
+    * **sequence** — ``objective`` / ``num_candidates`` / ``engine`` /
+      ``dfs_max_nodes`` / ``allow_outer`` / ``anchor_input``: the CSSE
+      two-stage search space and stage-2 metric.
+    * **fusion** — ``fused_chain``: stage 2 models (and the compiler
+      emits) VMEM-resident chain execution.
+    * **tile** — ``tile_sweep`` / ``sweep_strategy`` /
+      ``measure_dtype``: the autotuner's per-step grid and how it is
+      swept (``full`` exhaustive vs ``halving`` successive-halving).
+    * **mesh** — ``mesh``: the pure :class:`perf_model.MeshSpec` mirror
+      stage 2 prices collectives against.
+    * **precision** — ``precision``: the :class:`QuantPolicy` both
+      executors run under and every byte term reprices at.
+    * **memory** — ``stash`` (fwd->bwd activation residual policy) and
+      ``memory_budget`` (hard per-device peak constraint).
+    * **phase** — serving's ``"prefill"``/``"decode"`` cache tag
+      (``""`` = training).
+    """
+
+    # sequence axis
+    objective: str = "edp"
+    num_candidates: int = 8
+    engine: str = "auto"
+    dfs_max_nodes: int = 7
+    allow_outer: bool = True
+    anchor_input: bool = False
+    # fusion axis
+    fused_chain: bool = False
+    # tile axis
+    tile_sweep: tuple[int, ...] = (128, 256, 512)
+    sweep_strategy: str = "full"
+    measure_dtype: str = "float32"
+    # mesh axis
+    mesh: perf_model.MeshSpec | None = None
+    # precision axis
+    precision: QuantPolicy = field(default_factory=QuantPolicy)
+    # memory axis
+    stash: StashPolicy = STORE
+    memory_budget: int | None = None
+    # execution phase tag
+    phase: str = ""
+
+    def __post_init__(self):
+        _validate("ExecutionPolicy", objective=self.objective,
+                  num_candidates=self.num_candidates, engine=self.engine,
+                  dfs_max_nodes=self.dfs_max_nodes, mesh=self.mesh,
+                  precision=self.precision, stash=self.stash,
+                  memory_budget=self.memory_budget,
+                  tile_sweep=self.tile_sweep,
+                  sweep_strategy=self.sweep_strategy, phase=self.phase)
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def quantized(self) -> bool:
+        return self.precision.quantized
+
+    @property
+    def quant_policy(self) -> QuantPolicy | None:
+        """The legacy ``policy=`` kwarg value: None when unquantized (the
+        bf16 policy is byte-identical to the historical path)."""
+        return self.precision if self.precision.quantized else None
+
+    @property
+    def policy_tag(self) -> str:
+        """Quantization cache-key fragment (``""`` = unquantized)."""
+        return self.precision.tag
+
+    # -- the one cache signature --------------------------------------------
+
+    def signature_payload(self) -> dict:
+        """Hash-stable JSON payload of every axis — THE per-policy cache
+        fragment.  ``csse`` composes it with the network and hardware
+        model; nothing else re-derives per-axis signature pieces."""
+        return {
+            "sequence": (self.objective, self.num_candidates, self.engine,
+                         self.dfs_max_nodes, self.allow_outer,
+                         self.anchor_input),
+            "fused_chain": self.fused_chain,
+            "tile": (list(self.tile_sweep), self.sweep_strategy,
+                     self.measure_dtype),
+            "mesh": (None if self.mesh is None
+                     else list(self.mesh.signature_payload())),
+            # bf16 hashes as None: byte-identical to the historical
+            # unquantized path, so pre-policy cache entries stay valid.
+            "precision": (None if not self.precision.quantized
+                          else list(self.precision.signature_payload())),
+            "stash": self.stash.tag(),
+            "memory_budget": self.memory_budget,
+            "phase": self.phase,
+        }
+
+    def signature(self) -> str:
+        return hashlib.sha256(json.dumps(
+            self.signature_payload(), sort_keys=True,
+            default=str).encode()).hexdigest()
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        d = {
+            "objective": self.objective,
+            "num_candidates": self.num_candidates,
+            "engine": self.engine,
+            "dfs_max_nodes": self.dfs_max_nodes,
+            "allow_outer": self.allow_outer,
+            "anchor_input": self.anchor_input,
+            "fused_chain": self.fused_chain,
+            "tile_sweep": list(self.tile_sweep),
+            "sweep_strategy": self.sweep_strategy,
+            "measure_dtype": self.measure_dtype,
+            "mesh": None,
+            "precision": {
+                "dtype": self.precision.dtype,
+                "granularity": self.precision.granularity,
+                "tile_rows": self.precision.tile_rows,
+                "amax_history_len": self.precision.amax_history_len,
+                "margin": self.precision.margin,
+            },
+            "stash": self.stash.tag(),
+            "memory_budget": self.memory_budget,
+            "phase": self.phase,
+        }
+        if self.mesh is not None:
+            d["mesh"] = {
+                "axes": [list(a) for a in self.mesh.axes],
+                "axis_sharding": [[a, list(m)] for a, m
+                                  in self.mesh.axis_sharding],
+                "device_kind": self.mesh.device_kind,
+            }
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ExecutionPolicy":
+        mesh = None
+        if d.get("mesh") is not None:
+            m = d["mesh"]
+            mesh = perf_model.MeshSpec(
+                axes=tuple((str(n), int(s)) for n, s in m["axes"]),
+                axis_sharding=tuple((a, tuple(ax)) for a, ax
+                                    in m.get("axis_sharding", [])),
+                device_kind=m.get("device_kind", "unknown"))
+        p = d.get("precision") or {}
+        return cls(
+            objective=d.get("objective", "edp"),
+            num_candidates=int(d.get("num_candidates", 8)),
+            engine=d.get("engine", "auto"),
+            dfs_max_nodes=int(d.get("dfs_max_nodes", 7)),
+            allow_outer=bool(d.get("allow_outer", True)),
+            anchor_input=bool(d.get("anchor_input", False)),
+            fused_chain=bool(d.get("fused_chain", False)),
+            tile_sweep=tuple(int(t) for t in d.get("tile_sweep",
+                                                   (128, 256, 512))),
+            sweep_strategy=d.get("sweep_strategy", "full"),
+            measure_dtype=d.get("measure_dtype", "float32"),
+            mesh=mesh,
+            precision=QuantPolicy(
+                dtype=p.get("dtype", "bf16"),
+                granularity=p.get("granularity", "tensor"),
+                tile_rows=int(p.get("tile_rows", 128)),
+                amax_history_len=int(p.get("amax_history_len", 16)),
+                margin=float(p.get("margin", 1.0))),
+            stash=StashPolicy.parse(d.get("stash", "store")),
+            memory_budget=d.get("memory_budget"),
+            phase=d.get("phase", ""),
+        )
+
+    # -- legacy-surface shims -----------------------------------------------
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "ExecutionPolicy":
+        """Build from the old scattered per-axis kwargs.
+
+        Accepts every pre-unification spelling: ``policy=`` (the old
+        ``SearchOptions.policy`` QuantPolicy slot, None = bf16),
+        ``precision=``, ``remat=`` / ``stash=`` (a StashPolicy or its
+        string tag), plus every SearchOptions field by name.  Unknown
+        kwargs raise :class:`PolicyError` naming the kwarg.
+        """
+        mapped: dict = {}
+        for old, new in (("policy", "precision"), ("remat", "stash")):
+            if old in kw:
+                if new in kw:
+                    raise PolicyError(
+                        f"ExecutionPolicy.{old}",
+                        f"both legacy {old}= and {new}= given")
+                kw[new] = kw.pop(old)
+        if kw.get("precision") is None:
+            kw["precision"] = QuantPolicy()
+        if isinstance(kw.get("stash"), str):
+            kw["stash"] = StashPolicy.parse(kw["stash"])
+        known = {f.name for f in fields(cls)}
+        for k, v in kw.items():
+            if k not in known:
+                raise PolicyError(f"ExecutionPolicy.{k}",
+                                  "unknown execution-policy field")
+            mapped[k] = v
+        return cls(**mapped)
+
+    def search_options(self):
+        """The legacy ``csse.SearchOptions`` view of this policy (lazy
+        import — csse imports this module at top level)."""
+        from repro.core import csse
+        return csse.SearchOptions(
+            objective=self.objective, num_candidates=self.num_candidates,
+            engine=self.engine, dfs_max_nodes=self.dfs_max_nodes,
+            fused_chain=self.fused_chain, allow_outer=self.allow_outer,
+            anchor_input=self.anchor_input,
+            measure_dtype=self.measure_dtype, mesh=self.mesh,
+            policy=self.quant_policy, memory_budget=self.memory_budget,
+            phase=self.phase)
+
+    def with_phase(self, phase: str) -> "ExecutionPolicy":
+        return replace(self, phase=phase)

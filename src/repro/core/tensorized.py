@@ -102,32 +102,41 @@ class TNNConfig:
     def stash_policy(self) -> StashPolicy:
         return StashPolicy.parse(self.remat)
 
-    def search_options(self, compute_dtype=None) -> csse.SearchOptions:
-        # Autotuning swaps the analytic stage-2 objective for measured step
-        # costs (repro.core.autotune); the executor side additionally gets
-        # tuned tile configs when backend == "pallas".  measure_dtype
-        # follows the layer's compute dtype so the tuner times (and caches)
-        # exactly the kernels the executor will run.  With a mesh attached,
-        # stage 2 turns communication-aware: SearchOptions.mesh carries the
-        # pure MeshSpec mirror so the per-phase searches rank sequences by
-        # per-device compute+memory plus the deferred-psum collective term
-        # on exactly the mesh the executor will shard over.
-        # A quantized precision policy turns stage 2 precision-aware: every
-        # byte term prices at the policy width, measured searches time the
-        # quantized kernels, and the policy keys every cache signature.
-        objective = "measured" if self.autotune else self.objective
-        policy = self.precision if self.precision.quantized else None
-        if policy is not None:
-            dtype = jnp.dtype(policy.operand_dtype).name
+    def execution_policy(self, compute_dtype=None) -> "ExecutionPolicy":
+        """The unified :class:`repro.core.policy.ExecutionPolicy` this
+        config describes — the construction hub every planning consumer
+        (CSSE options, tuner grids, serving profiles, the joint search)
+        derives from.
+
+        Autotuning swaps the analytic stage-2 objective for measured step
+        costs (repro.core.autotune); the executor side additionally gets
+        tuned tile configs when backend == "pallas".  measure_dtype
+        follows the layer's compute dtype so the tuner times (and caches)
+        exactly the kernels the executor will run.  With a mesh attached,
+        stage 2 turns communication-aware (the MeshSpec mirror rides in
+        the policy); a quantized precision policy turns it
+        precision-aware; the stash axis and memory budget feed the joint
+        search's feasibility check (repro.core.search).
+        """
+        from repro.core.policy import ExecutionPolicy
+        if self.precision.quantized:
+            dtype = jnp.dtype(self.precision.operand_dtype).name
         else:
             dtype = jnp.dtype(compute_dtype or jnp.bfloat16).name
-        return csse.SearchOptions(objective=objective,
-                                  fused_chain=self.fused_chain,
-                                  measure_dtype=dtype,
-                                  mesh=self.mesh_spec(),
-                                  policy=policy,
-                                  memory_budget=self.memory_budget,
-                                  phase=self.phase)
+        return ExecutionPolicy(
+            objective="measured" if self.autotune else self.objective,
+            fused_chain=self.fused_chain,
+            measure_dtype=dtype,
+            mesh=self.mesh_spec(),
+            precision=self.precision,
+            stash=self.stash_policy(),
+            memory_budget=self.memory_budget,
+            phase=self.phase)
+
+    def search_options(self, compute_dtype=None) -> csse.SearchOptions:
+        """Legacy CSSE view of :meth:`execution_policy` (same axes)."""
+        return csse.SearchOptions.from_policy(
+            self.execution_policy(compute_dtype))
 
     def mesh_spec(self):
         """The costing MeshSpec for this config's mesh (None off-mesh)."""

@@ -43,6 +43,7 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           tnn_precision: str | None = None,
           tnn_remat: str | None = None,
           tnn_memory_budget=None,
+          tnn_search: str = "per-axis",
           loss_scale: float = 1.0) -> dict:
     arch = cfgbase.get(arch_id)
     mesh = (make_production_mesh() if production_mesh else make_host_mesh())
@@ -87,6 +88,34 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
         # whose modeled live-tensor peak exceeds it, and the stash planner
         # below fits the per-step activation stash by microbatching.
         tnn_cfg = dataclasses.replace(tnn_cfg, memory_budget=budget)
+    if tnn_cfg is not None and tnn_search == "joint":
+        # Cross-layer joint plan search (repro.core.search, docs/SEARCH.md):
+        # the per-axis flags above form the *base* ExecutionPolicy; the
+        # joint loop then re-searches the contraction sequence under every
+        # (fusion x precision x stash) combo and the winning combo
+        # overrides those axes — which is the point: jointly-optimal plans
+        # can disagree with any per-axis flag choice.
+        from repro.core import factorizations as _facts
+        from repro.core import search as _jsearch
+        probe_cfg = arch.smoke(tnn_cfg) if smoke else arch.model(tnn_cfg)
+        dims = _facts.factorize_dim(probe_cfg.d_model, tnn_cfg.num_factors)
+        kw = {"num_blocks": tnn_cfg.num_blocks} if tnn_cfg.method == "bt" \
+            else {}
+        fact = _facts.make(tnn_cfg.method, dims, dims, tnn_cfg.rank, **kw)
+        base = tnn_cfg.execution_policy()
+        if base.objective == "measured":
+            # Startup search stays model-scored; the measured rerank still
+            # happens per-layer at trace time under the chosen combo.
+            base = dataclasses.replace(base, objective="latency")
+        res = _jsearch.joint_search(
+            fact.forward_network((("b", global_batch * seq_len),)), base)
+        win = res.best.policy
+        tnn_cfg = dataclasses.replace(
+            tnn_cfg, fused_chain=win.fused_chain, precision=win.precision,
+            remat=win.stash.tag())
+        print(f"[train] joint plan search: fused_chain={win.fused_chain} "
+              f"precision={win.precision.tag} stash={win.stash.tag()}"
+              f"{' (flipped vs per-axis)' if res.flipped else ''}")
     model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=smoke)
     shard = sharding.make_sharder(mesh)
 
@@ -234,6 +263,14 @@ def main() -> None:
                          "the stash planner raises the microbatch count "
                          "(gradient accumulation) until the per-step "
                          "activation stash fits")
+    ap.add_argument("--tnn-search", choices=["per-axis", "joint"],
+                    default="per-axis",
+                    help="plan-search mode: per-axis (default; each "
+                         "--tnn-* flag fixes its axis independently) | "
+                         "joint (repro.core.search re-searches the "
+                         "contraction sequence under every fusion x "
+                         "precision x stash combo and the winning combo "
+                         "overrides those flags — docs/SEARCH.md)")
     ap.add_argument("--loss-scale", type=float, default=1.0,
                     help="static loss scaling for low-precision training: "
                          "the loss is multiplied by this before backward "
@@ -265,6 +302,9 @@ def main() -> None:
     if args.tnn_memory_budget is not None and not args.tnn:
         ap.error("--tnn-memory-budget requires --tnn (the budget "
                  "constrains tensorized plans and stashes)")
+    if args.tnn_search != "per-axis" and not args.tnn:
+        ap.error("--tnn-search requires --tnn (no tensorized plans to "
+                 "search without it)")
 
     def run(start_step: int) -> int:
         out = train(args.arch, smoke=args.smoke, tnn=args.tnn,
@@ -279,6 +319,7 @@ def main() -> None:
                     tnn_precision=args.tnn_precision,
                     tnn_remat=args.tnn_remat,
                     tnn_memory_budget=args.tnn_memory_budget,
+                    tnn_search=args.tnn_search,
                     loss_scale=args.loss_scale)
         print(f"[train] done: final loss {out['final_loss']:.4f} "
               f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")

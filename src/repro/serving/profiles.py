@@ -11,14 +11,17 @@ states with very different flattened token batches:
 The best contraction sequence for a 512-token GEMM chain is generally
 not the best one for an 8-token chain (stage 2 of CSSE prices batch-
 scaled byte traffic against FLOPs, and the autotuner's measured tile
-winners shift with the M dimension) — so serving runs the PR 1–4
-planning stack **twice at server start**, once per phase, and caches
-the results under *phase-tagged* signatures: :class:`ExecutionProfile`
-carries ``SearchOptions(phase="prefill"|"decode")``, which enters the
-CSSE disk/memo signature (:func:`repro.core.csse.plan_signature`) and
-the autotuner's ``StepShape``/sweep signature.  The two phases can
-therefore never collide in any cache, even when their token counts
-coincide.
+winners shift with the M dimension) — so serving runs the planning
+stack **twice at server start**, once per phase, each under its own
+phase-tagged :class:`repro.core.policy.ExecutionPolicy` (PR 7's unified
+planning object — ``TNNConfig.execution_policy().with_phase(...)``).
+The phase tag is one axis of that policy and so enters the one unified
+cache signature: the CSSE disk/memo key
+(:func:`repro.core.csse.plan_signature`) and the autotuner's
+``StepShape``/sweep key both derive from it, so the two phases can
+never collide in any cache, even when their token counts coincide.
+:class:`ExecutionProfile` records the resolved policy (and its legacy
+``SearchOptions`` view, which the layer constructors still consume).
 
 ``build_profiles`` warms the in-process plan memo
 (``repro.core.tensorized._plans``) for every tensorized projection the
@@ -31,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import csse, perf_model, tensorized
+from repro.core.policy import ExecutionPolicy
 from repro.core.tensorized import TNNConfig
 
 
@@ -47,9 +51,12 @@ class ExecutionProfile:
 
     phase: str                              # "prefill" | "decode"
     tokens: int                             # flattened token batch per tick
-    opts: csse.SearchOptions                # phase-tagged search options
+    opts: csse.SearchOptions                # legacy CSSE view of `policy`
     signatures: tuple[tuple[str, str], ...]
     modeled_latency_s: float
+    policy: ExecutionPolicy | None = None   # the phase-tagged unified
+                                            # ExecutionPolicy the profile
+                                            # was planned under
 
     def signature_of(self, name: str) -> str:
         return dict(self.signatures)[name]
@@ -92,7 +99,8 @@ def build_profile(cfg, phase: str, tokens: int,
     """Search (or recall) plans for every tensorized projection at this
     phase's token batch; returns the profile with its cache keys."""
     tnn = phase_tnn(cfg.tnn, phase)
-    opts = tnn.search_options(cfg.compute_dtype)
+    policy = tnn.execution_policy(cfg.compute_dtype)
+    opts = csse.SearchOptions.from_policy(policy)
     sigs: list[tuple[str, str]] = []
     latency = 0.0
     for name, d_in, d_out in tensorized_projections(cfg):
@@ -105,7 +113,7 @@ def build_profile(cfg, phase: str, tokens: int,
         latency += fp.cost.latency_s
     return ExecutionProfile(phase=phase, tokens=tokens, opts=opts,
                             signatures=tuple(sigs),
-                            modeled_latency_s=latency)
+                            modeled_latency_s=latency, policy=policy)
 
 
 def build_profiles(cfg, *, batch_size: int, prefill_chunk: int,

@@ -50,7 +50,13 @@ def test_record_round_trip(tuner, tmp_path):
 
     again = autotune.Tuner(cache_dir=str(tmp_path))
     rec2 = again.record(shape)
-    assert again.stats == {"measured": 0, "disk_hits": 1, "memo_hits": 0, "skipped": 0}
+    assert again.stats == {
+        "measured": 0,
+        "disk_hits": 1,
+        "memo_hits": 0,
+        "skipped": 0,
+        "trials": 0,
+    }
     assert rec2.best == rec.best
     assert rec2.best_s == rec.best_s
 

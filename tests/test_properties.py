@@ -11,7 +11,9 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import contraction, csse, factorizations as F, perf_model
+from repro.core.policy import ExecutionPolicy
 from repro.core.tnetwork import plan_from_tree
+from repro.memory.stash import StashPolicy
 from repro.optim import compression
 from repro.precision import (
     DTYPES,
@@ -170,6 +172,101 @@ def test_plan_peak_memory_nonnegative_monotone(rank, batch):
     plan = csse.search(net, csse.SearchOptions(objective="flops")).plan
     assert plan.peak_intermediate_elems >= 0
     assert plan.total_read_elems > 0 and plan.total_write_elems > 0
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPolicy round-trips (the unified planning object, PR 7)
+# ---------------------------------------------------------------------------
+
+import json  # noqa: E402
+
+_tiles = st.sampled_from((32, 64, 128, 256, 512))
+_quants = st.sampled_from(("bf16", "fp8_e4m3", "fp8_e5m2", "int8")).map(
+    QuantPolicy.parse
+)
+_stashes = st.sampled_from(
+    ("store", "recompute", "quantized:fp8_e4m3", "quantized:int8")
+).map(StashPolicy.parse)
+
+_policies = st.builds(
+    ExecutionPolicy,
+    objective=st.sampled_from(("latency", "energy", "edp", "flops", "measured")),
+    num_candidates=st.integers(1, 16),
+    engine=st.sampled_from(("auto", "dfs", "dp")),
+    dfs_max_nodes=st.integers(1, 9),
+    allow_outer=st.booleans(),
+    anchor_input=st.booleans(),
+    fused_chain=st.booleans(),
+    tile_sweep=st.lists(_tiles, min_size=1, max_size=3, unique=True).map(tuple),
+    sweep_strategy=st.sampled_from(("full", "halving")),
+    measure_dtype=st.sampled_from(("float32", "bfloat16")),
+    precision=_quants,
+    stash=_stashes,
+    memory_budget=st.one_of(st.none(), st.integers(1, 1 << 40)),
+    phase=st.sampled_from(("", "prefill", "decode")),
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_policies)
+def test_execution_policy_json_round_trip(xp):
+    """serialize -> (wire) -> deserialize is the identity, and the cache
+    signature survives the trip (a reloaded policy may never re-plan)."""
+    again = ExecutionPolicy.from_json(json.loads(json.dumps(xp.to_json())))
+    assert again == xp
+    assert again.signature() == xp.signature()
+    assert again.signature_payload() == xp.signature_payload()
+
+
+@settings(max_examples=50, deadline=None)
+@given(_policies, _policies)
+def test_execution_policy_signature_separates_policies(a, b):
+    """Equal policies hash equal; distinct signature payloads mean
+    distinct signatures (no cache collisions across policies)."""
+    if a == b:
+        assert a.signature() == b.signature()
+    elif a.signature_payload() != b.signature_payload():
+        assert a.signature() != b.signature()
+
+
+@settings(max_examples=50, deadline=None)
+@given(_policies)
+def test_search_options_shim_round_trip(xp):
+    """The legacy SearchOptions view lifts back to the same policy (the
+    axes SearchOptions never carried are restored as overrides)."""
+    opts = xp.search_options()
+    back = opts.to_policy(
+        tile_sweep=xp.tile_sweep, sweep_strategy=xp.sweep_strategy, stash=xp.stash
+    )
+    assert back == xp
+    # and the csse search layer hashes both spellings identically
+    assert csse.SearchOptions.from_policy(xp) == opts
+
+
+@settings(max_examples=50, deadline=None)
+@given(_policies)
+def test_execution_policy_old_kwarg_shim_equivalence(xp):
+    """from_kwargs with the pre-unification spellings (policy= for
+    precision, remat= tag for stash) builds the identical policy."""
+    built = ExecutionPolicy.from_kwargs(
+        objective=xp.objective,
+        num_candidates=xp.num_candidates,
+        engine=xp.engine,
+        dfs_max_nodes=xp.dfs_max_nodes,
+        allow_outer=xp.allow_outer,
+        anchor_input=xp.anchor_input,
+        fused_chain=xp.fused_chain,
+        tile_sweep=xp.tile_sweep,
+        sweep_strategy=xp.sweep_strategy,
+        measure_dtype=xp.measure_dtype,
+        mesh=xp.mesh,
+        policy=xp.quant_policy,
+        remat=xp.stash.tag(),
+        memory_budget=xp.memory_budget,
+        phase=xp.phase,
+    )
+    assert built == xp
+    assert built.signature() == xp.signature()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,246 @@
+"""Joint cross-layer plan search (repro.core.search) + ExecutionPolicy
+threading: the flip test, measurement budgets, the learned cost model's
+fit/persist/invalidate cycle, and the halving tile sweep."""
+
+import dataclasses
+import json
+import math
+import os
+
+import pytest
+
+from repro.core import autotune, csse, factorizations as F, perf_model
+from repro.core import search, tensorized
+from repro.core.autotune import StepShape
+from repro.core.policy import ExecutionPolicy, PolicyError
+
+
+def _atis_fact():
+    # The paper's ATIS-TT workload (benchmarks/workloads.py): tokens=128.
+    return F.tt((12, 8, 8), (8, 8, 12), 8)
+
+
+# ---------------------------------------------------------------------------
+# The flip test (ISSUE 7 acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_joint_search_flips_atis_wg():
+    """On the ATIS-TT weight-gradient phase, the jointly-searched plan
+    (different sequence, chain fusion exploited) strictly beats the best
+    per-axis composition — the cross-axis coupling per-axis search cannot
+    express."""
+    net = tensorized._wg_network(_atis_fact(), 128, 0)
+    res = search.joint_search(net, ExecutionPolicy(objective="latency"))
+    assert res.flipped
+    assert res.best.modeled_s < res.per_axis.modeled_s
+    assert res.best.result.plan.steps != res.per_axis.result.plan.steps
+    # the winning combo turns fusion on; the per-axis sequence (frozen
+    # under the unfused default) cannot profit from it the same way
+    assert res.best.policy.fused_chain
+
+
+def test_joint_never_worse_than_per_axis():
+    """Joint search includes every per-axis composition point, so its
+    modeled objective can never be worse."""
+    for core in range(3):
+        net = tensorized._wg_network(_atis_fact(), 128, core)
+        res = search.joint_search(net, ExecutionPolicy(objective="latency"))
+        assert res.best.modeled_s <= res.per_axis.modeled_s + 1e-15
+
+
+def test_memory_budget_steers_stash_axis():
+    """A budget between the bare plan peak and peak+store-stash makes
+    'store' infeasible: the search must move along the stash axis."""
+    fact = _atis_fact()
+    net = fact.forward_network(batch_axes=(("b", 128),))
+    base = ExecutionPolicy(objective="latency")
+    free = search.joint_search(net, base)
+    assert free.best.policy.stash.mode == "store"  # no pressure -> store
+    store_bytes = free.best.stash_bytes
+    assert store_bytes > 0
+    cost = perf_model.evaluate(free.best.result.plan, perf_model.TPU_V5E)
+    tight = dataclasses.replace(
+        base, memory_budget=int(cost.peak_bytes + store_bytes // 4)
+    )
+    res = search.joint_search(net, tight)
+    assert math.isfinite(res.best.modeled_s)
+    assert res.best.policy.stash.mode != "store"
+
+
+# ---------------------------------------------------------------------------
+# Measured path: budgeted measurement count
+# ---------------------------------------------------------------------------
+
+
+def test_measured_joint_search_respects_budget(tmp_path):
+    """The budget is checked between finalists: a budget smaller than one
+    finalist's measured rerank stops the loop after that first finalist,
+    spending strictly less than the unbudgeted run."""
+    xp = ExecutionPolicy(
+        objective="measured", tile_sweep=(64, 128), sweep_strategy="halving"
+    )
+    net = _atis_fact().forward_network(batch_axes=(("b", 32),))
+    free_tuner = autotune.Tuner.from_policy(xp, cache_dir=str(tmp_path / "a"), iters=1)
+    csse.clear_memo()
+    free = search.joint_search(net, xp, tuner=free_tuner, measure_top=2)
+    tuner = autotune.Tuner.from_policy(xp, cache_dir=str(tmp_path / "b"), iters=1)
+    csse.clear_memo()
+    res = search.joint_search(net, xp, tuner=tuner, measure_top=2, measure_budget=1)
+    assert 0 < res.measurements < free.measurements
+    assert res.best.measured_s is not None
+    assert res.measurements == tuner.stats["trials"]
+    # only the first finalist combo fit in the budget
+    plan_walls = {
+        c.measured_s - c.stash_penalty_s
+        for c in res.candidates
+        if c.measured_s is not None
+    }
+    assert len(plan_walls) == 1
+
+
+def test_measured_finalists_outrank_modeled_candidates(tmp_path):
+    """Interpret-mode wall seconds dwarf roofline seconds; the winner must
+    still be a *measured* finalist, not an unmeasured candidate whose tiny
+    modeled score would win a naive mixed sort."""
+    xp = ExecutionPolicy(objective="measured", tile_sweep=(128,))
+    tuner = autotune.Tuner.from_policy(xp, cache_dir=str(tmp_path), iters=1)
+    net = _atis_fact().forward_network(batch_axes=(("b", 16),))
+    res = search.joint_search(net, xp, tuner=tuner, measure_top=1)
+    assert res.best.measured_s is not None
+
+
+# ---------------------------------------------------------------------------
+# Learned cost model
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_samples(n=24):
+    """(shape, latency) pairs labeled by the analytic roofline — a known
+    log-multiplicative ground truth the ridge fit should recover."""
+    out = []
+    for i in range(n):
+        m, k = 16 << (i % 4), 8 << (i % 3)
+        nn = 16 << ((i + 1) % 4)
+        shape = StepShape("gemm", (m, nn, k))
+        out.append((shape, autotune.analytic_step_s(shape)))
+    return out
+
+
+def test_cost_model_fit_and_transfer():
+    cm = search.CostModel("testdev").fit(_synthetic_samples())
+    assert cm.weights is not None and cm.n_samples == 24
+    held_out = StepShape("gemm", (96, 96, 24))
+    pred = cm.predict(held_out)
+    truth = autotune.analytic_step_s(held_out)
+    assert pred is not None
+    assert truth / 4 <= pred <= truth * 4  # transfers across shapes
+
+
+def test_cost_model_unfit_falls_back_to_analytic():
+    cm = search.CostModel("testdev").fit(_synthetic_samples(3))
+    assert cm.weights is None and cm.n_samples == 3
+    shape = StepShape("gemm", (64, 64, 64))
+    assert cm.predict(shape) is None
+    assert cm.step_latency(shape, perf_model.TPU_V5E) == pytest.approx(
+        autotune.analytic_step_s(shape)
+    )
+
+
+def test_cost_model_persist_reload_invalidate(tmp_path):
+    cm = search.CostModel("testdev").fit(_synthetic_samples())
+    cm.save(str(tmp_path))
+    again = search.CostModel.load(str(tmp_path), "testdev")
+    assert again is not None and again.weights == cm.weights
+    assert search.CostModel.load(str(tmp_path), "otherdev") is None
+    # stale SWEEP_VERSION -> model invalidates with the measurements
+    path = search.CostModel._path(str(tmp_path), "testdev")
+    with open(path) as f:
+        d = json.load(f)
+    d["sweep_version"] = autotune.SWEEP_VERSION - 1
+    with open(path, "w") as f:
+        json.dump(d, f)
+    assert search.CostModel.load(str(tmp_path), "testdev") is None
+
+
+def test_cost_model_fits_from_autotune_db(tmp_path):
+    """The model trains on the measurement DB already on disk and persists
+    alongside it."""
+    tuner = autotune.Tuner(cache_dir=str(tmp_path), iters=1, tile_sweep=(128,))
+    for i in range(search.CostModel.MIN_SAMPLES):
+        tuner.record(StepShape("gemm", (8 + 4 * i, 16, 4 + 2 * i)))
+    cm = search.CostModel.fit_from_cache(str(tmp_path))
+    assert cm.n_samples >= search.CostModel.MIN_SAMPLES
+    assert cm.weights is not None
+    assert os.path.exists(search.CostModel._path(str(tmp_path), cm.device_kind))
+    # joint_search picks it up from cache_dir and reports model_used
+    net = _atis_fact().forward_network(batch_axes=(("b", 16),))
+    res = search.joint_search(
+        net, ExecutionPolicy(objective="latency"), cache_dir=str(tmp_path)
+    )
+    assert res.model_used
+
+
+# ---------------------------------------------------------------------------
+# Halving tile sweep (the tile axis of the budget story)
+# ---------------------------------------------------------------------------
+
+
+def test_halving_sweep_uses_fewer_trials(tmp_path):
+    shape = StepShape("gemm", (256, 256, 256))
+    grid = (32, 64, 128)
+    halv = autotune.Tuner(
+        cache_dir=str(tmp_path / "h"),
+        iters=1,
+        tile_sweep=grid,
+        sweep_strategy="halving",
+    )
+    full = autotune.Tuner(cache_dir=str(tmp_path / "f"), iters=1, tile_sweep=grid)
+    rh, rf = halv.record(shape), full.record(shape)
+    assert rh.measured and rf.measured
+    assert halv.stats["trials"] == 13  # 9 -> 3 -> 1
+    assert full.stats["trials"] == 27  # 3^3, no dim collapses the grid
+    # strategies never share cache entries
+    assert halv.signature(shape) != full.signature(shape)
+
+
+def test_halving_winner_among_candidates(tmp_path):
+    tuner = autotune.Tuner(
+        cache_dir=str(tmp_path),
+        iters=1,
+        tile_sweep=(32, 64, 128),
+        sweep_strategy="halving",
+    )
+    shape = StepShape("gemm", (128, 128, 128))
+    rec = tuner.record(shape)
+    assert rec.best in tuner._candidates(shape)
+    assert rec.best_s > 0 and math.isfinite(rec.best_s)
+
+
+# ---------------------------------------------------------------------------
+# SearchOptions construction-time validation (ISSUE 7 bugfix satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_search_options_policy_typed_error():
+    with pytest.raises(PolicyError) as e:
+        csse.SearchOptions(policy="fp8_e4m3")  # a tag, not a QuantPolicy
+    assert e.value.field == "SearchOptions.policy"
+
+
+def test_search_options_objective_typed_error():
+    with pytest.raises(PolicyError) as e:
+        csse.SearchOptions(objective="speed")
+    assert e.value.field == "SearchOptions.objective"
+
+
+def test_execution_policy_field_errors():
+    with pytest.raises(PolicyError) as e:
+        ExecutionPolicy(sweep_strategy="binary")
+    assert e.value.field == "ExecutionPolicy.sweep_strategy"
+    with pytest.raises(PolicyError) as e:
+        ExecutionPolicy(tile_sweep=())
+    assert e.value.field == "ExecutionPolicy.tile_sweep"
+    with pytest.raises(PolicyError) as e:
+        ExecutionPolicy(memory_budget=-1)
+    assert e.value.field == "ExecutionPolicy.memory_budget"

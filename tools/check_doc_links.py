@@ -1,0 +1,66 @@
+"""Verify every relative markdown link in README.md and docs/ resolves.
+
+CI's lint job runs this so a renamed doc page or module can't leave
+dangling ``[text](path)`` references behind.  External links (http/https/
+mailto) and pure in-page anchors (``#...``) are skipped; ``path#anchor``
+links are checked for the file half only.
+
+    python tools/check_doc_links.py [root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — target captured up to the closing paren; images share
+# the same syntax modulo the leading "!", which the regex doesn't care
+# about.  Markdown's nested-paren escapes don't occur in this repo.
+_LINK = re.compile(r"\[[^\]]*\]\(([^()\s]+)\)")
+
+
+def doc_files(root: str) -> list[str]:
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs)
+            if f.endswith(".md"))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def broken_links(path: str) -> list[str]:
+    out = []
+    base = os.path.dirname(path)
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    out.append(f"{path}:{lineno}: broken link -> {target}")
+    return out
+
+
+def main(argv: list[str]) -> int:
+    root = argv[1] if len(argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    failures: list[str] = []
+    files = doc_files(root)
+    for f in files:
+        failures += broken_links(f)
+    for msg in failures:
+        print(msg)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if failures else 'all links resolve'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
