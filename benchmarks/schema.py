@@ -23,6 +23,13 @@ Every benchmark row normalises to one flat record:
                                # search modules: the budget currency of
                                # docs/SEARCH.md; None = module does not
                                # count measurements)
+     "achieved_gbps": float | None,  # effective HBM bandwidth the case
+                               # sustained (modeled lowering bytes /
+                               # wall_s — the roofline report's achieved
+                               # axis; None = module does not report it)
+     "chain_len": int | None,  # longest megakernel chain the compiled
+                               # plan emitted (0 = unfused; None = module
+                               # does not compile plans)
      "device": str,            # jax backend:device_kind
      "git_sha": str,           # HEAD at run time ("unknown" outside git)
      "metrics": dict}          # benchmark-specific extras (floats/strs)
@@ -68,6 +75,8 @@ def make_record(name: str, wall_s: float,
                 tok_per_s: float | None = None,
                 requests: int | None = None,
                 measurements: int | None = None,
+                achieved_gbps: float | None = None,
+                chain_len: int | None = None,
                 **metrics) -> dict:
     return {
         "name": name,
@@ -87,6 +96,10 @@ def make_record(name: str, wall_s: float,
         "requests": None if requests is None else int(requests),
         # plan-search modules: tuner trials spent producing this record
         "measurements": None if measurements is None else int(measurements),
+        # megakernel roofline: sustained HBM bandwidth + deepest chain
+        "achieved_gbps": (None if achieved_gbps is None
+                          else float(achieved_gbps)),
+        "chain_len": None if chain_len is None else int(chain_len),
         "device": device(),
         "git_sha": git_sha(),
         "metrics": metrics,
@@ -128,6 +141,16 @@ def regression_failures(records: list[dict], baseline: list[dict],
     wall_s (``min_p99_ms``), since a sub-5ms p99 on the smoke model is
     timer jitter, not a scheduler property.
 
+    fusion_hit_rate: gated on any *exact* drop — the compiler's fusion
+    decisions are deterministic, so a lower hit rate means the planner
+    stopped fusing something it used to fuse (a silent megakernel
+    regression), never noise.
+
+    achieved_gbps: the inverted bandwidth gate — fails when the sustained
+    HBM bandwidth falls below ``1/gate`` of the baseline.  Derived from
+    the same wall clock as ``wall_s``, so it shares that gate's
+    ``min_wall_s`` noise floor.
+
     New records (absent from the baseline) never fail; deleting a
     baselined record does.
     """
@@ -163,7 +186,30 @@ def regression_failures(records: list[dict], baseline: list[dict],
                 failures.append(
                     f"{name}: p99_ms {got_p99:.1f} > {gate}x baseline "
                     f"{base_p99:.1f}")
-        if base["wall_s"] < min_wall_s:
+        base_hit = base.get("fusion_hit_rate")
+        got_hit = got.get("fusion_hit_rate")
+        if base_hit is not None:
+            if got_hit is None:
+                failures.append(
+                    f"{name}: baseline has fusion_hit_rate {base_hit} but "
+                    f"the record no longer emits it")
+            elif got_hit < base_hit:
+                failures.append(
+                    f"{name}: fusion_hit_rate {got_hit:.3f} dropped below "
+                    f"baseline {base_hit:.3f}")
+        noisy_wall = base["wall_s"] < min_wall_s
+        base_bw = base.get("achieved_gbps")
+        got_bw = got.get("achieved_gbps")
+        if base_bw is not None and not noisy_wall:
+            if got_bw is None:
+                failures.append(
+                    f"{name}: baseline has achieved_gbps {base_bw:.3f} but "
+                    f"the record no longer emits it")
+            elif got_bw < base_bw / gate:
+                failures.append(
+                    f"{name}: achieved_gbps {got_bw:.3f} < baseline "
+                    f"{base_bw:.3f} / {gate}")
+        if noisy_wall:
             continue
         if got["wall_s"] > gate * base["wall_s"]:
             failures.append(

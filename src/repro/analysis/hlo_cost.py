@@ -340,3 +340,21 @@ class HloModule:
 
 def module_cost(hlo_text: str) -> Cost:
     return HloModule(hlo_text).cost()
+
+
+def dot_reference_cost(m: int, n: int, k: int,
+                       dtype_bytes: int = 4) -> Cost:
+    """Analytic cost of one ``[m,k] @ [k,n]`` dot — the closed form the
+    HLO parser must reproduce on a bare jitted matmul.
+
+    FLOPs ``2*m*n*k`` and bytes ``(m*k + k*n + m*n) * dtype_bytes`` are
+    exactly what :meth:`HloModule.cost` derives from the lowered text and
+    what ``jax.jit(...).lower(...).compile().cost_analysis()`` reports for
+    an unfused dot; the roofline unit tests cross-check all three on known
+    GEMM shapes so a parser regression cannot silently skew the
+    achieved-vs-attainable report.
+    """
+    c = Cost()
+    c.flops = 2.0 * m * n * k
+    c.bytes = float((m * k + k * n + m * n) * dtype_bytes)
+    return c

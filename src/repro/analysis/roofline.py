@@ -171,6 +171,81 @@ class Roofline:
                 f"roofline={self.roofline_fraction:6.3f}")
 
 
+@dataclasses.dataclass
+class PhaseRoofline:
+    """Achieved-vs-attainable report for one ATIS-TT phase lowering.
+
+    The megakernel benchmark feeds this the *modeled* FLOPs and HBM
+    bytes of one compiled phase plan (``CompiledPlan.hbm_bytes()`` — what
+    the lowering actually moves, chains eliding their intermediates) plus
+    the measured wall clock; the attainable time is the classic roofline
+    ``max(flops/peak, bytes/bw)`` and ``achieved_gbps`` is the effective
+    HBM bandwidth the run sustained.  ``chain_len`` records the longest
+    megakernel chain the plan emitted so regressions in fusion reach show
+    up next to the bandwidth they cost.  Pure numbers in, pure numbers
+    out — this module must stay import-free of ``repro.core`` (perf_model
+    imports :func:`ring_allreduce_bytes` from here).
+    """
+
+    phase: str                       # "fp" | "bp" | "wg" | workload tag
+    flops: float                     # modeled FLOPs of the compiled plan
+    hbm_bytes: float                 # modeled HBM traffic of the lowering
+    wall_s: float                    # measured wall-clock seconds
+    chain_len: int = 0               # longest chain emitted (0 = unfused)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def attainable_s(self) -> float:
+        """Roofline-attainable time: the binding of the two terms."""
+        return max(self.compute_s, self.memory_s)
+
+    @property
+    def dominant(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+    @property
+    def achieved_gbps(self) -> float:
+        """Effective HBM bandwidth the measured run sustained."""
+        return self.hbm_bytes / max(self.wall_s, 1e-12) / 1e9
+
+    @property
+    def attainable_gbps(self) -> float:
+        """Bandwidth the run would sustain at exactly the roofline."""
+        return self.hbm_bytes / max(self.attainable_s, 1e-12) / 1e9
+
+    @property
+    def efficiency(self) -> float:
+        """attainable_s / wall_s — fraction of the roofline achieved
+        (<= 1 on real hardware; interpret-mode walls push it near 0)."""
+        return self.attainable_s / max(self.wall_s, 1e-12)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "phase": self.phase, "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes, "wall_s": self.wall_s,
+            "chain_len": self.chain_len,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "attainable_s": self.attainable_s, "dominant": self.dominant,
+            "achieved_gbps": self.achieved_gbps,
+            "attainable_gbps": self.attainable_gbps,
+            "efficiency": self.efficiency,
+        }
+
+    def summary(self) -> str:
+        return (f"{self.phase:10s} chain<={self.chain_len} "
+                f"attainable={self.attainable_s*1e3:8.3f}ms "
+                f"wall={self.wall_s*1e3:8.3f}ms "
+                f"achieved={self.achieved_gbps:8.2f}GB/s "
+                f"dom={self.dominant}")
+
+
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str, num_devices: int,
             model_flops_total: float, hlo_text: str | None = None) -> Roofline:
     """Primary terms come from the loop-aware HLO analyzer

@@ -71,8 +71,8 @@ from repro.core.plan_compiler import (
 )
 from repro.core.tnetwork import ContractionPlan
 from repro.kernels.fused_contraction import (
-    CHAIN_VMEM_BUDGET_BYTES, INTERPRET, chain_pallas, chain_vmem_elems,
-    matmul_pallas,
+    CHAIN_VMEM_BUDGET_BYTES, INTERPRET, chain_n_pallas, chain_n_vmem_elems,
+    chain_plan, matmul_pallas,
 )
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
@@ -93,7 +93,11 @@ _DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
 # winners and custom grids (ExecutionPolicy.tile_sweep) must not collide
 # with full-sweep entries, and the learned cost model fit from this DB
 # (core/search.py) invalidates with it.
-SWEEP_VERSION = 5
+# v6: chain keys generalized from the pairwise ``(m, k, h, n)`` to the
+# flat N-ary ``(m0, k1, n1, ..., kL, nL)`` (``ChainOp.dims``) — the two
+# formats would alias, and v5 chain entries describe a kernel the
+# regroup-capable ``chain_n_pallas`` no longer dispatches verbatim.
+SWEEP_VERSION = 6
 
 
 # ---------------------------------------------------------------------------
@@ -101,16 +105,28 @@ SWEEP_VERSION = 5
 # ---------------------------------------------------------------------------
 
 
+def _chain_links(dims: tuple[int, ...]
+                 ) -> tuple[int, tuple[tuple[int, int], ...]]:
+    """Parse a flat chain key ``(m0, k1, n1, ..., kL, nL)`` into
+    ``(m0, ((k1, n1), ...))``."""
+    if len(dims) < 5 or len(dims) % 2 == 0:
+        raise ValueError(f"bad chain dims {dims}: want (m0, k1, n1, ..., "
+                         "kL, nL)")
+    return dims[0], tuple((dims[i], dims[i + 1])
+                          for i in range(1, len(dims), 2))
+
+
 @dataclass(frozen=True)
 class StepShape:
     """The tuning key of one lowered op, before backend/device qualifiers.
 
-    ``dims`` is ``(m, n, k)`` for a GEMM and ``(m, k, h, n)`` for a fused
-    chain ``(X[m,k] @ A[k,h]) @ B[h,n]``.  ``policy`` is the quantization
-    tag (``QuantPolicy.tag``, e.g. ``"fp8_e4m3/tensor"``; empty =
-    unquantized): quantized shapes sweep the scaled kernels over
-    fp8/int8 operands, and the tag keys the cache so bf16 winners are
-    never served to quantized runs.
+    ``dims`` is ``(m, n, k)`` for a GEMM and the flat
+    ``(m0, k1, n1, ..., kL, nL)`` (``ChainOp.dims``) for a fused chain —
+    unambiguous for any length, regroup factors implied by the (k, n)
+    pairs.  ``policy`` is the quantization tag (``QuantPolicy.tag``, e.g.
+    ``"fp8_e4m3/tensor"``; empty = unquantized): quantized shapes sweep
+    the scaled kernels over fp8/int8 operands, and the tag keys the cache
+    so bf16 winners are never served to quantized runs.
     """
 
     kind: str                           # "gemm" | "chain"
@@ -135,8 +151,11 @@ class StepShape:
         if self.kind == "gemm":
             m, n, k = self.dims
             return m * k + k * n + m * n
-        m, k, h, n = self.dims
-        return m * k + k * h + h * n + m * h + m * n
+        m0, links = _chain_links(self.dims)
+        rows, _ = chain_plan(m0, links)
+        weights = sum(k * n for k, n in links)
+        inters = sum(r * n for r, (_, n) in zip(rows, links[:-1]))
+        return m0 * links[0][0] + weights + inters + rows[-1] * links[-1][1]
 
 
 def analytic_gemm_s(m: int, n: int, k: int,
@@ -148,15 +167,28 @@ def analytic_gemm_s(m: int, n: int, k: int,
     return max(compute, memory) + hw.step_overhead_s
 
 
-def analytic_chain_s(m: int, k: int, h: int, n: int,
+def analytic_chain_s(*dims: int,
                      hw: perf_model.HardwareModel = perf_model.TPU_V5E
                      ) -> float:
-    """Roofline latency of a fused ``(X @ A) @ B`` whose ``[m, h]``
-    intermediate never round-trips HBM."""
-    c1 = 2 * m * h * k / (hw.peak_flops * hw.mxu_utilisation(m, h, k))
-    c2 = 2 * m * n * h / (hw.peak_flops * hw.mxu_utilisation(m, n, h))
-    memory = (m * k + k * h + h * n + m * n) * hw.dtype_bytes / hw.hbm_bw
-    return max(c1 + c2, memory) + hw.step_overhead_s
+    """Roofline latency of a fused chain whose intermediates never
+    round-trip HBM.
+
+    Accepts either the legacy pairwise form ``(m, k, h, n)`` for
+    ``(X[m,k] @ A[k,h]) @ B[h,n]`` or the flat N-ary key
+    ``(m0, k1, n1, ..., kL, nL)`` — the legacy form is exactly the flat
+    ``(m, k, h, h, n)``."""
+    if len(dims) == 4:
+        m, k, h, n = dims
+        dims = (m, k, h, h, n)
+    m0, links = _chain_links(tuple(dims))
+    rows, _ = chain_plan(m0, links)
+    compute = sum(
+        2 * r * n_i * k_i / (hw.peak_flops * hw.mxu_utilisation(r, n_i, k_i))
+        for r, (k_i, n_i) in zip(rows, links))
+    hbm_elems = (m0 * links[0][0] + sum(k * n for k, n in links)
+                 + rows[-1] * links[-1][1])
+    memory = hbm_elems * hw.dtype_bytes / hw.hbm_bw
+    return max(compute, memory) + hw.step_overhead_s
 
 
 def analytic_step_s(shape: StepShape,
@@ -355,12 +387,13 @@ class Tuner:
             wshape = (n, k) if shape.transpose_rhs else (k, n)
             w = jax.random.normal(kw, wshape, jnp.float32).astype(dtype)
             return x, w
-        m, k, h, n = shape.dims
-        kx, ka, kb = jax.random.split(key, 3)
-        x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
-        a = jax.random.normal(ka, (k, h), jnp.float32).astype(dtype)
-        b = jax.random.normal(kb, (h, n), jnp.float32).astype(dtype)
-        return x, a, b
+        m0, links = _chain_links(shape.dims)
+        keys = jax.random.split(key, 1 + len(links))
+        x = jax.random.normal(keys[0], (m0, links[0][0]),
+                              jnp.float32).astype(dtype)
+        ws = [jax.random.normal(kw, (k, n), jnp.float32).astype(dtype)
+              for kw, (k, n) in zip(keys[1:], links)]
+        return (x, *ws)
 
     def _quant_operands(self, shape: StepShape, pol):
         """Quantized operands + the scale vectors the scaled kernels take —
@@ -377,16 +410,17 @@ class Tuner:
                              scale=jnp.float32(1.0))
             sr = jnp.full((1, n), qw.scale, jnp.float32)
             return qx.q, qw.q, qx.row_scales(), sr
-        m, k, h, n = shape.dims
-        kx, ka, kb = jax.random.split(key, 3)
-        qx = _q.quantize(jax.random.normal(kx, (m, k), jnp.float32), pol)
-        qa = _q.quantize(jax.random.normal(ka, (k, h), jnp.float32), pol,
-                         scale=jnp.float32(1.0))
-        qb = _q.quantize(jax.random.normal(kb, (h, n), jnp.float32), pol,
-                         scale=jnp.float32(1.0))
-        s1 = qx.row_scales() * qa.scale
-        s2 = jnp.full((1, n), qb.scale, jnp.float32)
-        return qx.q, qa.q, qb.q, s1, s2
+        m0, links = _chain_links(shape.dims)
+        keys = jax.random.split(key, 1 + len(links))
+        qx = _q.quantize(jax.random.normal(keys[0], (m0, links[0][0]),
+                                           jnp.float32), pol)
+        qws = [_q.quantize(jax.random.normal(kw, (k, n), jnp.float32), pol,
+                           scale=jnp.float32(1.0))
+               for kw, (k, n) in zip(keys[1:], links)]
+        s_first = qx.row_scales() * qws[0].scale
+        mids = [jnp.full((1, 1), q.scale, jnp.float32) for q in qws[1:-1]]
+        s_last = jnp.full((1, links[-1][1]), qws[-1].scale, jnp.float32)
+        return (qx.q, *(q.q for q in qws), s_first, *mids, s_last)
 
     def _candidates(self, shape: StepShape) -> list[TileConfig]:
         if shape.kind == "gemm":
@@ -398,12 +432,14 @@ class Tuner:
             eff = lambda t: (min(t.block_m, m), min(t.block_n, n),  # noqa: E731
                              min(t.block_k, k))
         else:
-            m, k, h, n = shape.dims
+            m0, links = _chain_links(shape.dims)
+            rows, _ = chain_plan(m0, links)
+            m, n = rows[-1], links[-1][1]
             raw = itertools.product(self.tile_sweep, self.tile_sweep)
             cands = [TileConfig(block_m=a, block_n=b) for a, b in raw]
-            # chain tiles must respect the kernel's VMEM budget assert
+            # chain tiles must respect the kernel's VMEM budget check
             cands = [t for t in cands
-                     if chain_vmem_elems(m, k, h, n, t.block_m, t.block_n)
+                     if chain_n_vmem_elems(m0, links, t.block_m, t.block_n)
                      * 4 < CHAIN_VMEM_BUDGET_BYTES]
             eff = lambda t: (min(t.block_m, m), min(t.block_n, n))  # noqa: E731
         cands = _dedupe_tile_candidates(cands, eff)
@@ -429,11 +465,13 @@ class Tuner:
                     block_k=tiles.block_k, interpret=self.interpret,
                     scales=tuple(scales) or None)
         else:
-            x, a, b, *scales = operands
+            _, links = _chain_links(shape.dims)
+            x, *rest = operands
+            ws, scales = rest[:len(links)], rest[len(links):]
 
             def call():
-                return chain_pallas(
-                    x, a, b, block_m=tiles.block_m, block_n=tiles.block_n,
+                return chain_n_pallas(
+                    x, ws, block_m=tiles.block_m, block_n=tiles.block_n,
                     interpret=self.interpret, scales=tuple(scales) or None)
         # Always jit (also in interpret mode): measurement may run at trace
         # time under ensure_compile_time_eval, where a bare pallas_call has
@@ -498,8 +536,11 @@ class Tuner:
         goes through :meth:`_time` so ``stats["trials"]`` stays the
         comparable currency.
         """
-        dims = shape.dims if shape.kind == "gemm" else (
-            shape.dims[0], shape.dims[3])
+        if shape.kind == "gemm":
+            dims = shape.dims
+        else:
+            m0, links = _chain_links(shape.dims)
+            dims = (chain_plan(m0, links)[0][-1], links[-1][1])
 
         def coverage(t: TileConfig) -> int:
             if shape.kind == "gemm":
@@ -567,7 +608,15 @@ class Tuner:
     def chain_tiles(self, m: int, k: int, h: int, n: int, *,
                     dtype: str, policy: str = "",
                     phase: str = "") -> TileConfig:
-        return self.record(StepShape("chain", (m, k, h, n),
+        """Legacy pairwise protocol — the fixed-M two-step chain
+        ``(m, k, h, n)`` is the flat key ``(m, k, h, h, n)``."""
+        return self.chain_n_tiles((m, k, h, h, n), dtype=dtype,
+                                  policy=policy, phase=phase)
+
+    def chain_n_tiles(self, dims: tuple[int, ...], *, dtype: str,
+                      policy: str = "", phase: str = "") -> TileConfig:
+        """Tile winner for an N-ary chain keyed by ``ChainOp.dims``."""
+        return self.record(StepShape("chain", tuple(dims),
                                      dtype=dtype, policy=policy,
                                      phase=phase)).best
 
@@ -575,25 +624,37 @@ class Tuner:
                     transpose_rhs1: bool = False,
                     transpose_rhs2: bool = False,
                     policy: str = "", phase: str = "") -> bool:
-        """Measured fuse decision: chain vs the two-GEMM split it replaces.
+        """Legacy pairwise fuse decision — see :meth:`should_fuse_n`."""
+        return self.should_fuse_n(
+            (m, k, h, h, n), dtype=dtype,
+            transpose_rhs=(transpose_rhs1, transpose_rhs2),
+            policy=policy, phase=phase)
 
-        ``transpose_rhs1/2`` are the split GemmOps' actual VMEM-flip flags,
+    def should_fuse_n(self, dims: tuple[int, ...], *, dtype: str,
+                      transpose_rhs: tuple[bool, ...] = (),
+                      policy: str = "", phase: str = "") -> bool:
+        """Measured fuse decision: chain vs the per-link GEMM split.
+
+        ``transpose_rhs`` holds the split GemmOps' actual VMEM-flip flags,
         so the comparison times exactly the kernels the unfused path would
         dispatch (and reuses their ``gemm_tiles`` cache entries).
         Unmeasured shapes (size guard) keep the structural default (fuse),
         matching what CSSE stage-2 models as ``fused_chain=True``.
         """
-        chain = self.record(StepShape("chain", (m, k, h, n), dtype=dtype,
+        dims = tuple(dims)
+        m0, links = _chain_links(dims)
+        rows, _ = chain_plan(m0, links)
+        chain = self.record(StepShape("chain", dims, dtype=dtype,
                                       policy=policy, phase=phase))
-        g1 = self.record(StepShape("gemm", (m, h, k),
-                                   transpose_rhs=transpose_rhs1,
-                                   dtype=dtype, policy=policy, phase=phase))
-        g2 = self.record(StepShape("gemm", (m, n, h),
-                                   transpose_rhs=transpose_rhs2,
-                                   dtype=dtype, policy=policy, phase=phase))
-        if not (chain.measured and g1.measured and g2.measured):
+        if not transpose_rhs:
+            transpose_rhs = (False,) * len(links)
+        gemms = [self.record(StepShape("gemm", (r, n_i, k_i),
+                                       transpose_rhs=tr, dtype=dtype,
+                                       policy=policy, phase=phase))
+                 for r, (k_i, n_i), tr in zip(rows, links, transpose_rhs)]
+        if not (chain.measured and all(g.measured for g in gemms)):
             return True
-        return chain.best_s <= g1.best_s + g2.best_s
+        return chain.best_s <= sum(g.best_s for g in gemms)
 
     # -- plan-level costing --------------------------------------------------
 
@@ -610,14 +671,14 @@ class Tuner:
             return rec.latency_s, rec.measured
         if isinstance(op, ChainOp):
             rec = self.record(StepShape(
-                "chain", (op.m, op.k, op.h, op.n), dtype=dtype,
+                "chain", op.dims, dtype=dtype,
                 policy=policy_tag, phase=phase))
             return rec.latency_s, rec.measured
         cost = perf_model.evaluate_step(op.step, sizes, hw or self.hw)
         return cost.latency_s, False
 
     def plan_latency(self, plan: ContractionPlan, *,
-                     fused_chain: bool = True,
+                     fused_chain: bool = True, max_chain_len: int = 2,
                      dtype: str = "float32",
                      mesh: perf_model.MeshSpec | None = None,
                      policy=None, phase: str = "") -> float:
@@ -646,7 +707,8 @@ class Tuner:
         ptag = "" if policy is None or not policy.quantized else policy.tag
         coll = perf_model.collective_cost(plan, mesh, hw)
         plan = perf_model.localize_plan(plan, mesh)
-        compiled = compile_plan(plan, fuse=fused_chain, tuner=self,
+        compiled = compile_plan(plan, fuse=fused_chain,
+                                max_chain_len=max_chain_len, tuner=self,
                                 dtype=dtype, policy=policy, phase=phase)
         sizes = plan.network.sizes
         return coll.latency_s + sum(
@@ -659,6 +721,7 @@ class Tuner:
         :class:`repro.core.policy.ExecutionPolicy`."""
         return self.plan_latency(
             plan, fused_chain=policy.fused_chain,
+            max_chain_len=policy.max_chain_len,
             dtype=policy.measure_dtype, mesh=policy.mesh,
             policy=policy.quant_policy, phase=policy.phase)
 
@@ -688,19 +751,24 @@ class CalibratedModel:
     phase: str = ""              # phase-qualified measurement cache keys
 
     def latency(self, plan: ContractionPlan,
-                fused_chain: bool = True) -> float:
+                fused_chain: bool = True,
+                max_chain_len: int = 2) -> float:
         return self.tuner.plan_latency(plan, fused_chain=fused_chain,
+                                       max_chain_len=max_chain_len,
                                        dtype=self.dtype, mesh=self.mesh,
                                        policy=self.policy, phase=self.phase)
 
     def evaluate(self, plan: ContractionPlan,
-                 fused_chain: bool = True) -> perf_model.PlanCost:
+                 fused_chain: bool = True,
+                 max_chain_len: int = 2) -> perf_model.PlanCost:
         analytic = perf_model.evaluate(plan, self.hw,
                                        fused_chain=fused_chain,
+                                       max_chain_len=max_chain_len,
                                        mesh=self.mesh, policy=self.policy)
         return dataclasses.replace(
             analytic,
-            latency_s=self.latency(plan, fused_chain=fused_chain))
+            latency_s=self.latency(plan, fused_chain=fused_chain,
+                                   max_chain_len=max_chain_len))
 
 
 # ---------------------------------------------------------------------------
@@ -726,7 +794,7 @@ def compare_plan(tuner: Tuner, plan: ContractionPlan, *,
             measured_s = rec.best_s if rec.measured else None
             tiles = op.tiles
         elif isinstance(op, ChainOp):
-            shape = StepShape("chain", (op.m, op.k, op.h, op.n), dtype=dtype)
+            shape = StepShape("chain", op.dims, dtype=dtype)
             rec = tuner.record(shape)
             kind, analytic_s = "chain", rec.analytic_s
             measured_s = rec.best_s if rec.measured else None

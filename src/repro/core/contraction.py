@@ -65,16 +65,19 @@ def _einsum_step(step: ContractionStep, lhs: jax.Array, rhs: jax.Array,
 def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
             accum_dtype=jnp.float32, out_dtype=None,
             backend: str = "einsum", fused_chain: bool = True,
+            max_chain_len: int = 2,
             interpret: bool | None = None, tuner=None,
             mesh=None, in_specs=None,
             mesh_batch_axes=None, policy=None,
-            input_scales=None) -> jax.Array:
+            input_scales=None, psum_overlap: bool = True) -> jax.Array:
     """Run the plan over concrete arrays (one per network node, in order).
 
     ``backend="einsum"`` lowers each step to ``jnp.einsum`` (reference
     semantics); ``backend="pallas"`` compiles the plan to Pallas kernel calls
     (see :mod:`repro.core.plan_compiler`), with ``fused_chain=False``
-    disabling chain fusion there (the ablation CSSE stage-2 models).
+    disabling chain fusion there (the ablation CSSE stage-2 models) and
+    ``max_chain_len`` bounding how many consecutive steps one on-chip
+    megakernel chain may swallow (2 = the historical pairwise fusion).
     ``interpret`` forces/disables Pallas interpret mode (default: interpret
     off-TPU).  ``tuner`` (a :class:`repro.core.autotune.Tuner`) makes the
     pallas backend compile with measured tile choices and fuse decisions
@@ -121,6 +124,7 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
         # fusion axis overrides the fused_chain kwarg, its precision axis
         # becomes the QuantPolicy the rest of this function threads.
         fused_chain = policy.fused_chain
+        max_chain_len = policy.max_chain_len
         policy = policy.quant_policy
     if policy is not None and not policy.quantized:
         policy = None                       # bf16 policy == historical path
@@ -134,15 +138,18 @@ def execute(plan: ContractionPlan, tensors: Sequence[jax.Array],
                                     accum_dtype=accum_dtype,
                                     out_dtype=out_dtype, backend=backend,
                                     fused_chain=fused_chain,
+                                    max_chain_len=max_chain_len,
                                     interpret=interpret, tuner=tuner,
-                                    policy=policy, input_scales=input_scales)
+                                    policy=policy, input_scales=input_scales,
+                                    psum_overlap=psum_overlap)
 
     if backend == "pallas":
         from repro.core import plan_compiler
         dtype = (jnp.dtype(policy.operand_dtype).name if policy is not None
                  else jnp.dtype(tensors[0].dtype).name)
         compiled = plan_compiler.compile_plan(
-            plan, fuse=fused_chain, tuner=tuner, dtype=dtype, policy=policy)
+            plan, fuse=fused_chain, max_chain_len=max_chain_len,
+            tuner=tuner, dtype=dtype, policy=policy)
         return plan_compiler.run(compiled, tensors, accum_dtype=accum_dtype,
                                  out_dtype=out_dtype, interpret=interpret,
                                  input_scales=input_scales)
@@ -210,8 +217,10 @@ def _execute_einsum_quantized(plan: ContractionPlan, tensors, policy,
 
 def _execute_sharded(sharded, mesh, tensors: Sequence[jax.Array], *,
                      accum_dtype, out_dtype, backend: str,
-                     fused_chain: bool, interpret: bool | None,
-                     tuner, policy=None, input_scales=None) -> jax.Array:
+                     fused_chain: bool, max_chain_len: int = 2,
+                     interpret: bool | None,
+                     tuner, policy=None, input_scales=None,
+                     psum_overlap: bool = True) -> jax.Array:
     """SPMD dispatch of a :class:`~repro.distributed.sharding.ShardedPlan`.
 
     Each device executes the localized plan (Pallas plans compile *once*
@@ -249,7 +258,8 @@ def _execute_sharded(sharded, mesh, tensors: Sequence[jax.Array], *,
         dtype = (jnp.dtype(policy.operand_dtype).name if policy is not None
                  else jnp.dtype(tensors[0].dtype).name)
         compiled = plan_compiler.compile_plan(
-            local_plan, fuse=fused_chain, tuner=tuner, dtype=dtype,
+            local_plan, fuse=fused_chain, max_chain_len=max_chain_len,
+            tuner=tuner, dtype=dtype,
             mesh_factors=sharded.factors, policy=policy)
 
         def run_local(ts, scs):
@@ -270,7 +280,11 @@ def _execute_sharded(sharded, mesh, tensors: Sequence[jax.Array], *,
     def per_shard(*args):
         out = run_local(list(args[:num_nodes]), list(args[num_nodes:]))
         if sharded.psum_axes:
-            out = jax.lax.psum(out, sharded.psum_axes)
+            if psum_overlap:
+                from repro.distributed.sharding import overlapped_psum
+                out = overlapped_psum(out, sharded.psum_axes)
+            else:
+                out = jax.lax.psum(out, sharded.psum_axes)
         return out.astype(out_dtype)
 
     from jax.sharding import PartitionSpec as _P

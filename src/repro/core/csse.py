@@ -90,6 +90,9 @@ class SearchOptions:
     engine: str = "auto"              # auto|dfs|dp
     dfs_max_nodes: int = 7            # auto: dfs up to here, dp beyond
     fused_chain: bool = False         # stage-2 models Pallas fused execution
+    max_chain_len: int = 2            # megakernel chain-length cap stage 2
+                                      # prices and the compiler emits
+                                      # (2 = historical pairwise fusion)
     allow_outer: bool = True          # enlarged space (paper); False = Tetrix-ish
     anchor_input: bool = False        # True = Tetrix-style: X merges every step
     measure_dtype: str = "float32"    # objective="measured": operand dtype
@@ -146,7 +149,7 @@ class SearchOptions:
                   precision=self.policy, stash=STORE,
                   memory_budget=self.memory_budget,
                   tile_sweep=(128,), sweep_strategy="full",
-                  phase=self.phase)
+                  phase=self.phase, max_chain_len=self.max_chain_len)
 
     # -- ExecutionPolicy interop (the unified surface, docs/SEARCH.md) ------
 
@@ -162,6 +165,7 @@ class SearchOptions:
                   num_candidates=self.num_candidates, engine=self.engine,
                   dfs_max_nodes=self.dfs_max_nodes,
                   fused_chain=self.fused_chain,
+                  max_chain_len=self.max_chain_len,
                   allow_outer=self.allow_outer,
                   anchor_input=self.anchor_input,
                   measure_dtype=self.measure_dtype, mesh=self.mesh,
@@ -439,6 +443,10 @@ def _signature(net: TensorNetwork, opts, hw: perf_model.HardwareModel) -> str:
         "policy": xp.signature_payload(),
         "hw": (hw.name, hw.peak_flops, hw.hbm_bw, hw.dtype_bytes,
                hw.step_overhead_s, hw.ici_bw),
+        # Winners are ranked BY the analytic model; when its semantics
+        # change (e.g. the chain-elision predicate), every cached tree was
+        # chosen under a model that no longer exists and must re-rank.
+        "model_version": perf_model.MODEL_VERSION,
     }
     return hashlib.sha256(json.dumps(payload, default=str).encode()).hexdigest()
 
@@ -459,36 +467,54 @@ def plan_signature(net: TensorNetwork, opts=None,
     return _signature(net, opts, perf_model.apply_policy(hw, quant))
 
 
-def _disk_load(sig: str, net: TensorNetwork) -> TreeT | None:
-    """Load a cached winning tree; any corruption (bad JSON, wrong
-    structure, a tree that does not cover the network) reads as a miss so
-    the search falls through to a fresh run and overwrites the bad entry."""
-    path = os.path.join(_cache_dir(), sig + ".json")
-    try:
-        with open(path) as f:
-            tree = _untuple(json.load(f)["tree"])
-    except (OSError, ValueError, KeyError, TypeError):
-        return None
+def _valid_tree(tree, net: TensorNetwork) -> bool:
     try:
         leaves = tree_leaves(tree)
     except (TypeError, RecursionError):
         # RecursionError: a non-int leaf (e.g. a string, which iterates
         # into itself) from a hand-edited / partially-written entry.
-        return None
+        return False
     if not all(isinstance(x, int) for x in leaves):
-        return None
-    if sorted(leaves) != list(range(net.num_nodes)):
-        return None
-    return tree
+        return False
+    return sorted(leaves) == list(range(net.num_nodes))
 
 
-def _disk_store(sig: str, tree: TreeT) -> None:
+def _disk_load(sig: str, net: TensorNetwork
+               ) -> tuple[TreeT, list[tuple[int, TreeT]]] | None:
+    """Load a cached winner plus its stage-1 candidate list; any
+    corruption (bad JSON, wrong structure, a tree that does not cover the
+    network) reads as a miss so the search falls through to a fresh run
+    and overwrites the bad entry.  Candidates are best-effort: invalid
+    entries are dropped rather than invalidating the winner — consumers
+    like the joint search only use them to widen their sequence pool."""
+    path = os.path.join(_cache_dir(), sig + ".json")
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        tree = _untuple(payload["tree"])
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+    if not _valid_tree(tree, net):
+        return None
+    candidates: list[tuple[int, TreeT]] = []
+    try:
+        for flops, cand in payload.get("candidates", []):
+            cand = _untuple(cand)
+            if isinstance(flops, int) and _valid_tree(cand, net):
+                candidates.append((flops, cand))
+    except (ValueError, TypeError):
+        candidates = []
+    return tree, candidates
+
+
+def _disk_store(sig: str, tree: TreeT,
+                candidates: list[tuple[int, TreeT]] | None = None) -> None:
     try:
         os.makedirs(_cache_dir(), exist_ok=True)
         path = os.path.join(_cache_dir(), sig + ".json")
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"tree": tree}, f)
+            json.dump({"tree": tree, "candidates": candidates or []}, f)
         os.replace(tmp, path)
     except OSError:
         pass
@@ -530,8 +556,9 @@ def search(net: TensorNetwork, opts=None,
     def stage2_metric(plan: ContractionPlan,
                       cost: perf_model.PlanCost) -> float:
         if measured_model is not None:
-            return measured_model.latency(plan,
-                                          fused_chain=opts.fused_chain)
+            return measured_model.latency(
+                plan, fused_chain=opts.fused_chain,
+                max_chain_len=opts.max_chain_len)
         return cost.metric(opts.objective)
 
     sig = _signature(net, sig_opts, hw)
@@ -542,20 +569,24 @@ def search(net: TensorNetwork, opts=None,
     if net.num_nodes == 1:
         plan = plan_from_tree(net, 0)
         cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain,
+                                   max_chain_len=opts.max_chain_len,
                                    mesh=opts.mesh)
         res = SearchResult(0, plan, cost, [(0, 0)], [(0.0, 0)], {})
         _MEMO[sig] = res
         return res
 
     if measured_model is None:
-        cached_tree = _disk_load(sig, net)
-        if cached_tree is not None:
+        cached = _disk_load(sig, net)
+        if cached is not None:
+            cached_tree, cached_cands = cached
             plan = plan_from_tree(net, cached_tree)
             cost = perf_model.evaluate(plan, hw,
                                        fused_chain=opts.fused_chain,
+                                       max_chain_len=opts.max_chain_len,
                                        mesh=opts.mesh)
             res = SearchResult(cached_tree, plan, cost,
-                               [(plan.total_flops, cached_tree)],
+                               cached_cands
+                               or [(plan.total_flops, cached_tree)],
                                [(cost.metric(opts.objective), cached_tree)],
                                {"cache": "disk"})
             _MEMO[sig] = res
@@ -583,6 +614,7 @@ def search(net: TensorNetwork, opts=None,
     for flops, tree in candidates:
         plan = plan_from_tree(net, tree)
         cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain,
+                                   max_chain_len=opts.max_chain_len,
                                    mesh=opts.mesh)
         scored.append((stage2_metric(plan, cost), tree, plan, cost))
     scored.sort(key=lambda x: x[0])
@@ -613,18 +645,19 @@ def search(net: TensorNetwork, opts=None,
     )
     _MEMO[sig] = res
     if measured_model is None:
-        _disk_store(sig, tree)
+        _disk_store(sig, tree, candidates)
     return res
 
 
 def fixed_plan(net: TensorNetwork, tree: TreeT,
                hw: perf_model.HardwareModel = perf_model.TPU_V5E,
-               fused_chain: bool = False,
+               fused_chain: bool = False, max_chain_len: int = 2,
                mesh: perf_model.MeshSpec | None = None,
                policy=None) -> SearchResult:
     """Wrap a hard-coded sequence (prior-work baselines) as a SearchResult."""
     plan = plan_from_tree(net, tree)
-    cost = perf_model.evaluate(plan, hw, fused_chain=fused_chain, mesh=mesh,
+    cost = perf_model.evaluate(plan, hw, fused_chain=fused_chain,
+                               max_chain_len=max_chain_len, mesh=mesh,
                                policy=policy)
     return SearchResult(tree, plan, cost, [(plan.total_flops, tree)],
                         [(cost.metric("edp"), tree)], {"engine": "fixed"})

@@ -39,6 +39,14 @@ from repro.core.tnetwork import (
     plan_from_tree,
 )
 
+#: Bump whenever the analytic cost semantics change (byte accounting,
+#: elision predicate, utilisation curve): cached sequence winners were
+#: ranked by the old model and must be invalidated through the search
+#: signature (csse._signature).
+#: 2: chain elision restricted to once-consumed lhs links, mirroring the
+#:    compiler's _fusable_link predicate.
+MODEL_VERSION = 2
+
 
 @dataclass(frozen=True)
 class HardwareModel:
@@ -349,13 +357,17 @@ def evaluate_step(step: ContractionStep, sizes, hw: HardwareModel,
 
 
 def evaluate(plan: ContractionPlan, hw: HardwareModel = TPU_V5E,
-             fused_chain: bool = False,
+             fused_chain: bool = False, max_chain_len: int = 2,
              mesh: MeshSpec | None = None, policy=None) -> PlanCost:
     """Cost a full contraction plan.
 
     With ``fused_chain``, an intermediate consumed by the next step and small
     enough for VMEM residency skips its HBM write+read (Pallas fused
-    execution / FETTA butterfly analogue).
+    execution / FETTA butterfly analogue).  ``max_chain_len`` caps how many
+    consecutive steps one VMEM-resident run may span, matching the
+    compiler's megakernel chain-length cap: after ``max_chain_len`` fused
+    links the intermediate is written back to HBM and a new chain begins
+    (2 = the historical pairwise fusion).
 
     With ``policy`` (a quantization policy), every byte term reprices at
     the policy's storage width via :func:`apply_policy` — FP8/INT8 halve
@@ -374,20 +386,36 @@ def evaluate(plan: ContractionPlan, hw: HardwareModel = TPU_V5E,
     plan = localize_plan(plan, mesh)
     sizes = plan.network.sizes
     num_inputs = plan.network.num_nodes
+    uses: dict[int, int] = {}    # slot -> consumption count across the plan
+    for step in plan.steps:
+        uses[step.lhs] = uses.get(step.lhs, 0) + 1
+        uses[step.rhs] = uses.get(step.rhs, 0) + 1
     resident: set[int] = set()   # slots currently living in VMEM only
     step_costs: list[StepCost] = []
+    run_len = 1                  # steps in the current VMEM-resident chain
     for i, step in enumerate(plan.steps):
         read = 0
+        consumed_resident = False
         for slot, axes in ((step.lhs, step.lhs_shape), (step.rhs, step.rhs_shape)):
             if slot in resident:
+                consumed_resident = True
                 continue
             read += math.prod(axes)
+        run_len = run_len + 1 if consumed_resident else 1
         write = math.prod(step.out_shape)
-        if fused_chain:
+        if fused_chain and run_len < max_chain_len:
             out_elems = math.prod(step.out_shape)
+            # Mirror the compiler's chain predicate (_fusable_link): only
+            # an intermediate consumed exactly once, as the *next* step's
+            # lhs, can stay VMEM-resident — rhs consumption never chains,
+            # so crediting it here would steer the sequence search toward
+            # plans the lowering then refuses to fuse.  (The layout-order
+            # half of the predicate needs matricization and stays with the
+            # compiler; _score prices the compiled plan, so any residual
+            # optimism is corrected before candidates are ranked.)
             consumed_next = (i + 1 < len(plan.steps) and
-                             step.out in (plan.steps[i + 1].lhs,
-                                          plan.steps[i + 1].rhs))
+                             plan.steps[i + 1].lhs == step.out and
+                             uses.get(step.out, 0) == 1)
             if consumed_next and out_elems * hw.dtype_bytes <= hw.vmem_bytes // 2:
                 resident.add(step.out)
                 write = 0

@@ -16,12 +16,15 @@ behaviours *real* on the executor side.  The pipeline is:
    reshape can express are fixed with an explicit ``jnp.transpose`` and
    recorded as ``hbm_transposes`` in the lowering report.
 
-2. **Chain fusion** — adjacent step pairs where the intermediate is consumed
-   exactly once, feeds the next step as its lhs with compatible axis groups,
-   and fits the VMEM budget are fused into a single ``chain_pallas`` call:
-   the ``[bm, H]`` intermediate of ``(X @ A) @ B`` lives in VMEM scratch and
-   never touches HBM.  This realises what CSSE stage-2 models as
-   ``fused_chain=True``.
+2. **Chain fusion** — maximal runs of adjacent steps where each intermediate
+   is consumed exactly once, feeds the next step as its lhs with compatible
+   axis groups, and the operand set fits the VMEM budget are fused into a
+   single ``chain_n_pallas`` call (up to ``max_chain_len`` links): every
+   ``[bm, H_i]`` intermediate of ``((X @ W1) @ W2) ... @ Wn`` lives in VMEM
+   scratch and never touches HBM.  This realises what CSSE stage-2 models
+   as ``fused_chain=True`` with the matching ``max_chain_len``.  A chain
+   the kernel refuses to lower (:class:`ChainLoweringError`) degrades to
+   the unfused per-step GEMM path instead of crashing.
 
 3. **Fallback** — steps that are not matricizable (batch axes shared by both
    operands and the output, e.g. BT's block hyperedge; single-operand
@@ -46,7 +49,8 @@ import jax.numpy as jnp
 from repro.core.contraction import _einsum_spec, _einsum_step
 from repro.core.tnetwork import AxisId, ContractionPlan, ContractionStep
 from repro.kernels.fused_contraction import (
-    CHAIN_VMEM_BUDGET_BYTES, chain_pallas, chain_vmem_elems, matmul_pallas,
+    CHAIN_VMEM_BUDGET_BYTES, ChainLoweringError, chain_n_pallas,
+    chain_n_vmem_elems, chain_plan, matmul_pallas,
 )
 
 
@@ -123,32 +127,76 @@ class GemmOp:
 
 @dataclass(frozen=True)
 class ChainOp:
-    """Two steps fused into one ``chain_pallas`` call.
+    """>= 2 consecutive steps fused into one ``chain_n_pallas`` call.
 
-    ``Y = (X @ A) @ B`` with the ``[M, H]`` intermediate VMEM-resident:
-    X is ``first``'s lhs, A its rhs, B ``second``'s rhs.
+    ``Y = (((X @ W1) @ W2) ... @ Wn)`` with every intermediate
+    VMEM-resident: X is ``steps[0]``'s lhs matricized to ``[m0, k]``, W_i
+    is ``steps[i]``'s rhs matricized to ``link_shapes[i]``.  Where a link
+    folds trailing row axes of the previous intermediate into its
+    contraction (TT/TTM sweeps), ``link_shapes`` encodes that regrouping
+    (``k_{i+1} = g_i * n_i``, see ``kernels.fused_contraction.chain_plan``)
+    and the kernel reshapes in VMEM; ``m`` is the *final* row count
+    ``m0 / prod(g_i)``.
     """
 
-    first: ContractionStep
-    second: ContractionStep
-    m_axes: tuple[AxisId, ...]
-    h_axes: tuple[AxisId, ...]          # first's N == second's K
+    steps: tuple[ContractionStep, ...]
+    m_axes: tuple[AxisId, ...]          # LAST step's free lhs axes
+    h_axes: tuple[AxisId, ...]          # first boundary: steps[0]'s N
     n_axes: tuple[AxisId, ...]
-    m: int
-    h: int
+    m: int                              # final output rows (last step's M)
+    m0: int                             # first link's rows (x rows)
     n: int
     k: int                              # first's contraction size
+    link_shapes: tuple[tuple[int, int], ...]   # (k_i, n_i) per link
     x_perm: tuple[int, ...] | None
-    a_perm: tuple[int, ...] | None      # rhs of first -> [K, H]
-    b_perm: tuple[int, ...] | None      # rhs of second -> [H, N]
+    w_perms: tuple[tuple[int, ...] | None, ...]  # rhs_i -> [k_i, n_i]
     out_perm: tuple[int, ...] | None
     tiles: TileConfig | None = None      # autotuned grid tiles (None=defaults)
+
+    # Historical two-step accessors, still used by describe()/cost code
+    # that only cares about the chain's endpoints.
+    @property
+    def first(self) -> ContractionStep:
+        return self.steps[0]
+
+    @property
+    def second(self) -> ContractionStep:
+        return self.steps[-1]
+
+    @property
+    def length(self) -> int:
+        return len(self.steps)
+
+    @property
+    def hs(self) -> tuple[int, ...]:
+        """Interior boundary widths (link i's N for i < length-1)."""
+        return tuple(n for _, n in self.link_shapes[:-1])
+
+    @property
+    def h(self) -> int:
+        return self.hs[0]
+
+    @property
+    def a_perm(self) -> tuple[int, ...] | None:
+        return self.w_perms[0]
+
+    @property
+    def b_perm(self) -> tuple[int, ...] | None:
+        return self.w_perms[-1]
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        """(m0, k_1, n_1, ..., k_L, n_L) — the autotuner's chain key.
+
+        Flat and unambiguous: the regroup factors are implied by the
+        (k, n) pairs, so two chains with equal ``dims`` lower to the same
+        kernel."""
+        return (self.m0,) + tuple(d for kn in self.link_shapes for d in kn)
 
     @property
     def hbm_transposes(self) -> int:
         return sum(p is not None
-                   for p in (self.x_perm, self.a_perm, self.b_perm,
-                             self.out_perm))
+                   for p in (self.x_perm, *self.w_perms, self.out_perm))
 
 
 @dataclass(frozen=True)
@@ -208,38 +256,112 @@ def _consumed_exactly_once(plan: ContractionPlan, slot: int,
     return uses == 1 and slot in (consumer.lhs, consumer.rhs)
 
 
-def _try_fuse(plan: ContractionPlan, g1: GemmOp, g2: GemmOp,
-              vmem_budget: int) -> ChainOp | None:
-    """Fuse consecutive GEMMs into ``(X @ A) @ B`` when the intermediate can
-    stay VMEM-resident: consumed once, feeds the next step's lhs as a pure
-    ``[M.., H..]`` reshape, and the operand set fits the budget."""
-    s1, s2 = g1.step, g2.step
-    if s2.lhs != s1.out:
-        return None
-    if not _consumed_exactly_once(plan, s1.out, s2):
-        return None
-    m1, m2 = g1.mat, g2.mat
-    # The intermediate's axes are m_axes1 + n_axes1 (plan_from_tree emits
-    # lhs-major out orders); the second step must consume exactly the n-group
-    # as its K and keep the m-group free, with no reshuffle in between.
-    if m2.lhs_perm is not None:
-        return None
-    if m2.m_axes != m1.m_axes or m2.k_axes != m1.n_axes:
-        return None
-    if m1.out_perm is not None:
-        return None
-    if chain_vmem_elems(m1.m, m1.k, m1.n, m2.n) * 4 >= vmem_budget:
-        return None
-    # chain_pallas takes A as [K, H] and B as [H, N]: re-derive operand perms
-    # without the transpose_rhs option (the chain kernel has no stored-T arg).
-    a_perm = _perm_or_none(s1.rhs_axes, m1.k_axes + m1.n_axes)
-    b_perm = _perm_or_none(s2.rhs_axes, m2.k_axes + m2.n_axes)
+def _fusable_link(plan: ContractionPlan, g_prev: GemmOp,
+                  g_next: GemmOp) -> bool:
+    """May ``g_next`` extend an on-chip chain ending at ``g_prev``?
+
+    The intermediate must be consumed once and feed the next step's lhs
+    *in layout order*: the intermediate's axes are m_axes + n_axes
+    (plan_from_tree emits lhs-major out orders), and the next step must
+    keep a prefix of the m-group free while consuming the remaining
+    m-suffix plus the whole n-group as its K, with no reshuffle in
+    between.  The fixed-M matmul chain is the ``suffix == ()`` case; a
+    non-empty suffix is the TT/TTM sweep pattern, realised in the kernel
+    as a contiguous VMEM regrouping (``chain_plan``'s ``g_i``)."""
+    s_prev, s_next = g_prev.step, g_next.step
+    if s_next.lhs != s_prev.out:
+        return False
+    if not _consumed_exactly_once(plan, s_prev.out, s_next):
+        return False
+    m_prev, m_next = g_prev.mat, g_next.mat
+    if m_next.lhs_perm is not None:
+        return False
+    if m_prev.out_perm is not None:
+        return False
+    keep = len(m_next.m_axes)
+    if m_next.m_axes != m_prev.m_axes[:keep]:
+        return False
+    if m_next.k_axes != m_prev.m_axes[keep:] + m_prev.n_axes:
+        return False
+    return True
+
+
+def _chain_shapes(run: Sequence[GemmOp]) -> tuple[tuple[int, int], ...]:
+    """Per-link matricized weight shapes ``(k_i, n_i)`` of a chain run."""
+    return tuple((g.mat.k, g.mat.n) for g in run)
+
+
+def _chain_fits(run: Sequence[GemmOp], vmem_budget: int) -> bool:
+    try:
+        elems = chain_n_vmem_elems(run[0].mat.m, _chain_shapes(run))
+    except ChainLoweringError:
+        return False
+    return elems * 4 < vmem_budget
+
+
+def _build_chain(run: Sequence[GemmOp]) -> ChainOp:
+    """Assemble the ChainOp for a validated run of >= 2 fusable GEMMs.
+
+    ``chain_n_pallas`` takes every weight as ``[k_i, n_i]``: operand
+    perms are re-derived without the transpose_rhs option (the chain
+    kernel has no stored-T arg)."""
+    if len(run) < 2:
+        raise ChainLoweringError(f"chain needs >= 2 steps, got {len(run)}")
+    first, last = run[0], run[-1]
+    shapes = _chain_shapes(run)
+    # Re-validate the regroup geometry end to end — raises the typed
+    # error the compiler catches to degrade to the unfused path.
+    rows, _ = chain_plan(first.mat.m, shapes)
+    if rows[-1] != last.mat.m:
+        raise ChainLoweringError(
+            f"chain row geometry mismatch: {rows[-1]} vs {last.mat.m}")
+    w_perms = tuple(
+        _perm_or_none(g.step.rhs_axes, g.mat.k_axes + g.mat.n_axes)
+        for g in run)
     return ChainOp(
-        first=s1, second=s2,
-        m_axes=m1.m_axes, h_axes=m1.n_axes, n_axes=m2.n_axes,
-        m=m1.m, h=m1.n, n=m2.n, k=m1.k,
-        x_perm=m1.lhs_perm, a_perm=a_perm, b_perm=b_perm,
-        out_perm=m2.out_perm)
+        steps=tuple(g.step for g in run),
+        m_axes=last.mat.m_axes, h_axes=first.mat.n_axes,
+        n_axes=last.mat.n_axes,
+        m=last.mat.m, m0=first.mat.m,
+        n=last.mat.n, k=first.mat.k, link_shapes=shapes,
+        x_perm=first.mat.lhs_perm, w_perms=w_perms,
+        out_perm=last.mat.out_perm)
+
+
+def _tuned_chain(tuner, chain: ChainOp, run: Sequence[GemmOp],
+                 dtype: str, ptag: str, phase: str) -> ChainOp | None:
+    """Apply the measured fuse decision + tile winner to a structural chain.
+
+    Two-step chains keep the historical ``should_fuse``/``chain_tiles``
+    protocol exactly; longer chains use the N-ary ``should_fuse_n``/
+    ``chain_n_tiles`` when the tuner provides them (duck-typed — a minimal
+    tuner that only speaks the pairwise protocol keeps longer chains on
+    structural defaults).  Regrouped two-step chains (``m != m0``) also
+    use the N-ary protocol: the pairwise ``(m, k, h, n)`` key cannot
+    express the row-fold and would alias distinct kernels."""
+    if chain.length == 2 and chain.m == chain.m0:
+        if tuner.should_fuse(chain.m, chain.k, chain.h, chain.n,
+                             dtype=dtype,
+                             transpose_rhs1=run[0].mat.transpose_rhs,
+                             transpose_rhs2=run[1].mat.transpose_rhs,
+                             policy=ptag, phase=phase):
+            return dataclasses.replace(
+                chain, tiles=tuner.chain_tiles(
+                    chain.m, chain.k, chain.h, chain.n, dtype=dtype,
+                    policy=ptag, phase=phase))
+        return None                      # measured: two GEMMs beat the chain
+    should_fuse_n = getattr(tuner, "should_fuse_n", None)
+    if should_fuse_n is not None and not should_fuse_n(
+            chain.dims, dtype=dtype,
+            transpose_rhs=tuple(g.mat.transpose_rhs for g in run),
+            policy=ptag, phase=phase):
+        return None                 # measured: the GEMM split beats the chain
+    chain_n_tiles = getattr(tuner, "chain_n_tiles", None)
+    if chain_n_tiles is not None:
+        return dataclasses.replace(
+            chain, tiles=chain_n_tiles(chain.dims, dtype=dtype,
+                                       policy=ptag, phase=phase))
+    return chain
 
 
 # ---------------------------------------------------------------------------
@@ -275,7 +397,7 @@ class CompiledPlan:
         chains = [op for op in self.ops if isinstance(op, ChainOp)]
         einsums = [op for op in self.ops if isinstance(op, EinsumOp)]
         num_steps = len(self.plan.steps)
-        fused_steps = 2 * len(chains)
+        fused_steps = sum(op.length for op in chains)
         return {
             "num_steps": num_steps,
             "num_ops": len(self.ops),
@@ -284,6 +406,8 @@ class CompiledPlan:
             "num_einsum_fallback": len(einsums),
             "fused_steps": fused_steps,
             "fusion_hit_rate": fused_steps / num_steps if num_steps else 0.0,
+            "max_chain_len_emitted": max(
+                (op.length for op in chains), default=0),
             "vmem_transposes": sum(g.mat.transpose_rhs for g in gemms),
             "hbm_transposes": (sum(g.mat.hbm_transposes for g in gemms)
                                + sum(c.hbm_transposes for c in chains)),
@@ -307,9 +431,10 @@ class CompiledPlan:
                 lines.append(f"gemm{t} t{op.step.out}: "
                              f"[{op.mat.m}x{op.mat.k}] @ [{op.mat.k}x{op.mat.n}]")
             elif isinstance(op, ChainOp):
-                lines.append(f"chain t{op.second.out}: "
-                             f"([{op.m}x{op.k}] @ [{op.k}x{op.h}]) @ "
-                             f"[{op.h}x{op.n}]  (intermediate VMEM-resident)")
+                links = " @ ".join(f"[{k}x{n}]" for k, n in op.link_shapes)
+                lines.append(f"chain t{op.second.out} (len {op.length}): "
+                             f"[{op.m0}x{op.k}] x ({links})  "
+                             f"(intermediates VMEM-resident)")
             else:
                 lines.append(f"einsum t{op.step.out}: {op.spec}  "
                              f"# {op.reason}")
@@ -319,17 +444,47 @@ class CompiledPlan:
                      f"{r['num_einsum_fallback']} einsum)")
         return "\n".join(lines)
 
+    def hbm_bytes(self, dtype_bytes: int = 4) -> int:
+        """HBM boundary traffic of the *emitted* kernel dispatches.
+
+        Sums each op's operand + result footprint at ``dtype_bytes`` width.
+        A ChainOp charges only its chain-boundary tensors (x, the weights,
+        the final output) — the VMEM-resident intermediates move zero HBM
+        bytes, which is exactly the saving the megakernel lowering exists
+        to deliver.  This is the "measured from the lowering" counterpart
+        to ``perf_model.evaluate``'s plan-level model: it reflects what the
+        compiler actually emitted, fallbacks and fusion vetoes included.
+        """
+        total = 0
+        for op in self.ops:
+            if isinstance(op, ChainOp):
+                elems = (op.m0 * op.k
+                         + sum(k * n for k, n in op.link_shapes)
+                         + op.m * op.n)
+            elif isinstance(op, GemmOp):
+                mat = op.mat
+                elems = mat.m * mat.k + mat.k * mat.n + mat.m * mat.n
+            else:
+                s = op.step
+                elems = (math.prod(s.lhs_shape) + math.prod(s.rhs_shape)
+                         + math.prod(s.out_shape))
+            total += elems * dtype_bytes
+        return total
+
 
 def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
                  vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
                  tuner=None, dtype: str = "float32",
                  mesh_factors=None, policy=None,
-                 phase: str = "") -> CompiledPlan:
+                 phase: str = "", max_chain_len: int = 2) -> CompiledPlan:
     """Lower every step; then (unless ``fuse=False``, the ablation CSSE
-    stage-2 prices as ``fused_chain=False``) fuse eligible adjacent GEMM
-    pairs.  ``vmem_budget`` may only tighten fusion: ``chain_pallas`` itself
-    asserts against :data:`CHAIN_VMEM_BUDGET_BYTES`, so larger values are
-    clamped rather than compiling chains the kernel would reject.
+    stage-2 prices as ``fused_chain=False``) fuse maximal eligible runs of
+    adjacent GEMMs into chains of up to ``max_chain_len`` links (the
+    historical pairwise fusion is ``max_chain_len=2``, the default).
+    ``vmem_budget`` may only tighten fusion: ``chain_n_pallas`` itself
+    raises :class:`ChainLoweringError` against
+    :data:`CHAIN_VMEM_BUDGET_BYTES`, so larger values are clamped rather
+    than compiling chains the kernel would reject.
 
     ``tuner`` (an :class:`repro.core.autotune.Tuner`, duck-typed) replaces
     the fixed 128-tile defaults with measured winners: every GEMM/chain gets
@@ -359,6 +514,7 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     if isinstance(policy, ExecutionPolicy):
         fuse = policy.fused_chain
         phase = policy.phase
+        max_chain_len = policy.max_chain_len
         policy = policy.quant_policy
     if policy is not None and not policy.quantized:
         policy = None
@@ -387,29 +543,34 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     fused: list[LoweredOp] = []
     i = 0
     while i < len(lowered):
-        a = lowered[i]
-        if (i + 1 < len(lowered) and isinstance(a, GemmOp)
-                and isinstance(lowered[i + 1], GemmOp)):
-            chain = _try_fuse(plan, a, lowered[i + 1], vmem_budget)
-            if chain is not None and tuner is not None:
-                b = lowered[i + 1]
-                if tuner.should_fuse(chain.m, chain.k, chain.h, chain.n,
-                                     dtype=dtype,
-                                     transpose_rhs1=a.mat.transpose_rhs,
-                                     transpose_rhs2=b.mat.transpose_rhs,
-                                     policy=ptag, phase=phase):
-                    chain = dataclasses.replace(
-                        chain, tiles=tuner.chain_tiles(
-                            chain.m, chain.k, chain.h, chain.n, dtype=dtype,
-                            policy=ptag, phase=phase))
-                else:
-                    chain = None     # measured: two GEMMs beat the chain
-            if chain is not None:
-                fused.append(chain)
-                i += 2
-                continue
-        fused.append(a)
-        i += 1
+        op0 = lowered[i]
+        chain = None
+        if isinstance(op0, GemmOp) and max_chain_len >= 2:
+            # Greedy maximal chain: extend while the next step links, the
+            # VMEM accounting admits the extended operand set, and the
+            # policy's chain-length cap allows it.
+            run = [op0]
+            while (len(run) < max_chain_len
+                   and i + len(run) < len(lowered)
+                   and isinstance(lowered[i + len(run)], GemmOp)
+                   and _fusable_link(plan, run[-1], lowered[i + len(run)])
+                   and _chain_fits(run + [lowered[i + len(run)]],
+                                   vmem_budget)):
+                run.append(lowered[i + len(run)])
+            if len(run) >= 2:
+                try:
+                    chain = _build_chain(run)
+                except ChainLoweringError:
+                    chain = None         # degrade to the unfused GEMMs
+                if chain is not None and tuner is not None:
+                    chain = _tuned_chain(tuner, chain, run, dtype, ptag,
+                                         phase)
+        if chain is not None:
+            fused.append(chain)
+            i += chain.length
+        else:
+            fused.append(op0)
+            i += 1
     return CompiledPlan(plan=plan, ops=tuple(fused),
                         mesh_factors=mesh_factors, policy=policy)
 
@@ -428,7 +589,7 @@ def _as_2d(x: jax.Array, perm: tuple[int, ...] | None,
 
 def _op_reads(op: LoweredOp) -> tuple[int, ...]:
     if isinstance(op, ChainOp):
-        return (op.first.lhs, op.first.rhs, op.second.rhs)
+        return (op.steps[0].lhs, *(s.rhs for s in op.steps))
     return (op.step.lhs, op.step.rhs)
 
 
@@ -484,13 +645,28 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
                 res = jnp.transpose(res, mat.out_perm)
             out_slot = op.step.out
         else:                            # ChainOp
-            x = _as_2d(slots[op.first.lhs], op.x_perm, op.m, op.k)
-            a = _as_2d(slots[op.first.rhs], op.a_perm, op.k, op.h)
-            b = _as_2d(slots[op.second.rhs], op.b_perm, op.h, op.n)
+            x = _as_2d(slots[op.steps[0].lhs], op.x_perm, op.m0, op.k)
+            ws = [_as_2d(slots[s.rhs], p, ki, ni)
+                  for (s, p), (ki, ni) in zip(zip(op.steps, op.w_perms),
+                                              op.link_shapes)]
             tile_kw = {} if op.tiles is None else op.tiles.as_kwargs(
                 with_k=False)
-            res = chain_pallas(x, a, b, out_dtype=out_dtype,
-                               interpret=interpret, **tile_kw)
+            try:
+                res = chain_n_pallas(x, ws, out_dtype=out_dtype,
+                                     interpret=interpret, **tile_kw)
+            except ChainLoweringError:
+                # Kernel refused the fused lowering (e.g. a VMEM budget
+                # tightened after compile): degrade to the unfused path —
+                # one GEMM per link, storage dtype between links, exactly
+                # what fuse=False would have emitted for these steps.  The
+                # reshape regroups trailing row axes into each link's K
+                # (the HBM-level analogue of the kernel's VMEM regroup).
+                res = x
+                for w, (ki, _) in zip(ws, op.link_shapes):
+                    res = matmul_pallas(res.reshape(-1, ki), w,
+                                        out_dtype=out_dtype,
+                                        interpret=interpret
+                                        ).astype(out_dtype)
             res = res.reshape(tuple(sizes[ax] for ax in op.m_axes + op.n_axes))
             if op.out_perm is not None:
                 res = jnp.transpose(res, op.out_perm)
@@ -601,22 +777,45 @@ def _run_quantized(compiled: CompiledPlan, tensors: Sequence[jax.Array], *,
                 res = jnp.transpose(res, mat.out_perm)
             out_slot = op.step.out
         else:                            # ChainOp
-            qx = qslots[op.first.lhs]
+            qx = qslots[op.steps[0].lhs]
             if not qx.per_tensor and (op.x_perm is not None
                                       or not op.m_axes):
                 qx = per_tensor(qx)
-            qa = per_tensor(qslots[op.first.rhs])
-            qb = per_tensor(qslots[op.second.rhs])
-            x2 = _as_2d(qx.q, op.x_perm, op.m, op.k)
-            a2 = _as_2d(qa.q, op.a_perm, op.k, op.h)
-            b2 = _as_2d(qb.q, op.b_perm, op.h, op.n)
-            s1 = _q.expand_row_scales(qx.scale, op.m) * qa.scale
-            s2 = jnp.full((1, op.n), qb.scale, jnp.float32)
+            qws = [per_tensor(qslots[s.rhs]) for s in op.steps]
+            x2 = _as_2d(qx.q, op.x_perm, op.m0, op.k)
+            w2s = [_as_2d(q.q, p, ki, ni)
+                   for (q, p), (ki, ni) in zip(zip(qws, op.w_perms),
+                                               op.link_shapes)]
+            # Folded per-link dequantization: the lhs row scales absorb the
+            # first weight's per-tensor scale; each interior weight
+            # contributes a [1, 1] scalar; the last weight's scale applies
+            # per output column.  Every VMEM intermediate therefore holds
+            # dequantized real values and no full-width intermediate ever
+            # reaches HBM.  (Per-tensor scalars commute with the kernel's
+            # row regrouping, so the folding is regroup-safe.)
+            s_first = _q.expand_row_scales(qx.scale, op.m0) * qws[0].scale
+            mids = [jnp.full((1, 1), q.scale, jnp.float32)
+                    for q in qws[1:-1]]
+            s_last = jnp.full((1, op.n), qws[-1].scale, jnp.float32)
+            scales = (s_first, *mids, s_last)
             tile_kw = {} if op.tiles is None else op.tiles.as_kwargs(
                 with_k=False)
-            res = chain_pallas(x2, a2, b2, out_dtype=jnp.float32,
-                               interpret=interpret, scales=(s1, s2),
-                               **tile_kw)
+            try:
+                res = chain_n_pallas(x2, w2s, out_dtype=jnp.float32,
+                                     interpret=interpret, scales=scales,
+                                     **tile_kw)
+            except ChainLoweringError:
+                # Unfused fallback mirroring the kernel's link math exactly
+                # (f32 first dot, bf16 intermediates, per-link scales,
+                # row regrouping as an HBM-level reshape).
+                res = jnp.dot(x2.astype(jnp.float32),
+                              w2s[0].astype(jnp.float32),
+                              preferred_element_type=jnp.float32) * s_first
+                for w2, (ki, _), s in zip(w2s[1:], op.link_shapes[1:],
+                                          (*mids, s_last)):
+                    lhs = res.astype(jnp.bfloat16).reshape(-1, ki)
+                    res = jnp.dot(lhs, w2.astype(jnp.bfloat16),
+                                  preferred_element_type=jnp.float32) * s
             res = res.reshape(tuple(sizes[ax] for ax in op.m_axes + op.n_axes))
             if op.out_perm is not None:
                 res = jnp.transpose(res, op.out_perm)

@@ -67,7 +67,8 @@ class PolicyError(ValueError):
 
 def _validate(owner: str, *, objective, num_candidates, engine,
               dfs_max_nodes, mesh, precision, stash, memory_budget,
-              tile_sweep, sweep_strategy, phase) -> None:
+              tile_sweep, sweep_strategy, phase,
+              max_chain_len=2) -> None:
     """Shared validator — ExecutionPolicy and the SearchOptions shim both
     funnel through here so the two surfaces can never drift."""
     def err(name, msg):
@@ -108,6 +109,9 @@ def _validate(owner: str, *, objective, num_candidates, engine,
             f"expected one of {SWEEP_STRATEGIES}")
     if not isinstance(phase, str):
         err("phase", f"must be a string tag, got {type(phase).__name__}")
+    if not isinstance(max_chain_len, int) or max_chain_len < 2:
+        err("max_chain_len", f"must be an int >= 2 (2 = historical "
+            f"pairwise fusion), got {max_chain_len!r}")
 
 
 @dataclass(frozen=True)
@@ -120,7 +124,9 @@ class ExecutionPolicy:
       ``dfs_max_nodes`` / ``allow_outer`` / ``anchor_input``: the CSSE
       two-stage search space and stage-2 metric.
     * **fusion** — ``fused_chain``: stage 2 models (and the compiler
-      emits) VMEM-resident chain execution.
+      emits) VMEM-resident chain execution; ``max_chain_len`` caps how
+      many links one megakernel chain may fuse (2 = the historical
+      pairwise fusion).
     * **tile** — ``tile_sweep`` / ``sweep_strategy`` /
       ``measure_dtype``: the autotuner's per-step grid and how it is
       swept (``full`` exhaustive vs ``halving`` successive-halving).
@@ -143,6 +149,7 @@ class ExecutionPolicy:
     anchor_input: bool = False
     # fusion axis
     fused_chain: bool = False
+    max_chain_len: int = 2
     # tile axis
     tile_sweep: tuple[int, ...] = (128, 256, 512)
     sweep_strategy: str = "full"
@@ -164,7 +171,8 @@ class ExecutionPolicy:
                   precision=self.precision, stash=self.stash,
                   memory_budget=self.memory_budget,
                   tile_sweep=self.tile_sweep,
-                  sweep_strategy=self.sweep_strategy, phase=self.phase)
+                  sweep_strategy=self.sweep_strategy, phase=self.phase,
+                  max_chain_len=self.max_chain_len)
 
     # -- derived ------------------------------------------------------------
 
@@ -196,6 +204,10 @@ class ExecutionPolicy:
             "fused_chain": self.fused_chain,
             "tile": (list(self.tile_sweep), self.sweep_strategy,
                      self.measure_dtype),
+            # Pairwise (the historical default) hashes as the absent key,
+            # so pre-megakernel cache entries stay valid.
+            **({"max_chain_len": self.max_chain_len}
+               if self.max_chain_len != 2 else {}),
             "mesh": (None if self.mesh is None
                      else list(self.mesh.signature_payload())),
             # bf16 hashes as None: byte-identical to the historical
@@ -223,6 +235,7 @@ class ExecutionPolicy:
             "allow_outer": self.allow_outer,
             "anchor_input": self.anchor_input,
             "fused_chain": self.fused_chain,
+            "max_chain_len": self.max_chain_len,
             "tile_sweep": list(self.tile_sweep),
             "sweep_strategy": self.sweep_strategy,
             "measure_dtype": self.measure_dtype,
@@ -266,6 +279,7 @@ class ExecutionPolicy:
             allow_outer=bool(d.get("allow_outer", True)),
             anchor_input=bool(d.get("anchor_input", False)),
             fused_chain=bool(d.get("fused_chain", False)),
+            max_chain_len=int(d.get("max_chain_len", 2)),
             tile_sweep=tuple(int(t) for t in d.get("tile_sweep",
                                                    (128, 256, 512))),
             sweep_strategy=d.get("sweep_strategy", "full"),
@@ -321,7 +335,9 @@ class ExecutionPolicy:
         return csse.SearchOptions(
             objective=self.objective, num_candidates=self.num_candidates,
             engine=self.engine, dfs_max_nodes=self.dfs_max_nodes,
-            fused_chain=self.fused_chain, allow_outer=self.allow_outer,
+            fused_chain=self.fused_chain,
+            max_chain_len=self.max_chain_len,
+            allow_outer=self.allow_outer,
             anchor_input=self.anchor_input,
             measure_dtype=self.measure_dtype, mesh=self.mesh,
             policy=self.quant_policy, memory_budget=self.memory_budget,

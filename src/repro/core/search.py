@@ -59,7 +59,9 @@ from repro.core.autotune import (
 )
 from repro.core.plan_compiler import ChainOp, GemmOp, compile_plan
 from repro.core.policy import ExecutionPolicy
-from repro.core.tnetwork import ContractionPlan, TensorNetwork
+from repro.core.tnetwork import (
+    ContractionPlan, TensorNetwork, plan_from_tree,
+)
 from repro.memory.stash import StashPolicy
 from repro.precision.policy import QuantPolicy
 
@@ -87,10 +89,22 @@ def step_features(shape: StepShape) -> list[float]:
         elems = m * k + k * n + m * n
         chain = 0.0
     else:
-        m, k, h, n = shape.dims
-        flops = 2 * m * h * k + 2 * m * n * h
-        elems = m * k + k * h + h * n + m * n
-        chain = 1.0
+        m0 = shape.dims[0]
+        if len(shape.dims) == 4:        # legacy pairwise key (m, k, h, n)
+            _, k, h, n = shape.dims
+            links = ((k, h), (h, n))
+        else:                           # flat N-link key (m0, k1, n1, ...)
+            rest = shape.dims[1:]
+            links = tuple(zip(rest[0::2], rest[1::2]))
+        flops, r = 0, m0
+        elems = m0 * links[0][0]
+        for i, (k, n) in enumerate(links):
+            if i:                       # regroup: fold g = k/n_prev rows
+                r = r * links[i - 1][1] // k
+            flops += 2 * r * k * n
+            elems += k * n
+        elems += r * links[-1][1]
+        chain = float(len(links))       # chain length carries the signal
     return [1.0, _log2(flops), _log2(elems),
             _log2(min(shape.dims)), _log2(max(shape.dims)),
             chain, 1.0 if shape.policy else 0.0]
@@ -236,6 +250,7 @@ def model_plan_latency(plan: ContractionPlan, policy: ExecutionPolicy, *,
     coll = perf_model.collective_cost(plan, policy.mesh, qhw)
     local = perf_model.localize_plan(plan, policy.mesh)
     compiled = compile_plan(local, fuse=policy.fused_chain,
+                            max_chain_len=policy.max_chain_len,
                             dtype=policy.measure_dtype, policy=quant,
                             phase=policy.phase)
     sizes = local.network.sizes
@@ -247,7 +262,7 @@ def model_plan_latency(plan: ContractionPlan, policy: ExecutionPolicy, *,
                               dtype=policy.measure_dtype, policy=ptag,
                               phase=policy.phase)
         elif isinstance(op, ChainOp):
-            shape = StepShape("chain", (op.m, op.k, op.h, op.n),
+            shape = StepShape("chain", op.dims,
                               dtype=policy.measure_dtype, policy=ptag,
                               phase=policy.phase)
         else:
@@ -292,6 +307,12 @@ def stash_overhead(net: TensorNetwork, policy: ExecutionPolicy,
 # ---------------------------------------------------------------------------
 
 
+#: Measured finalists whose wall clocks sit within this multiplicative
+#: band of the best are indistinguishable to the tuner (min-of-noisy
+#: timings compresses real gaps); their order falls back to the model.
+MEASURED_TIE_BAND = 1.05
+
+
 @dataclass(frozen=True)
 class SearchSpace:
     """The discrete combo axes the joint loop enumerates.
@@ -305,19 +326,28 @@ class SearchSpace:
     fused: tuple[bool, ...] = (False, True)
     precisions: tuple[str, ...] = ("bf16", "fp8_e4m3")
     stashes: tuple[str, ...] = ("store", "recompute")
+    #: megakernel chain-length caps; explored only under ``fused=True``
+    #: (unfused plans have no chains for the cap to bound).  Deeper caps
+    #: also widen the CSSE generator's elision horizon — the pairwise cap
+    #: alone can misrank sequences whose fusable runs are longer than 2,
+    #: which is why 3 rides in the default space.
+    chain_lens: tuple[int, ...] = (2, 3)
 
     def combos(self, base: ExecutionPolicy):
         for f in self.fused:
-            for p in self.precisions:
-                for s in self.stashes:
-                    yield dataclasses.replace(
-                        base, fused_chain=f,
-                        precision=QuantPolicy.parse(p),
-                        stash=StashPolicy.parse(s))
+            lens = self.chain_lens if f else self.chain_lens[:1]
+            for ln in lens:
+                for p in self.precisions:
+                    for s in self.stashes:
+                        yield dataclasses.replace(
+                            base, fused_chain=f, max_chain_len=ln,
+                            precision=QuantPolicy.parse(p),
+                            stash=StashPolicy.parse(s))
 
     def default_policy(self, base: ExecutionPolicy) -> ExecutionPolicy:
         return dataclasses.replace(
             base, fused_chain=self.fused[0],
+            max_chain_len=self.chain_lens[0],
             precision=QuantPolicy.parse(self.precisions[0]),
             stash=StashPolicy.parse(self.stashes[0]))
 
@@ -368,6 +398,7 @@ def _score(net: TensorNetwork, plan: ContractionPlan,
         quant = policy.quant_policy
         qhw = perf_model.apply_policy(hw, quant)
         cost = perf_model.evaluate(plan, qhw, fused_chain=policy.fused_chain,
+                                   max_chain_len=policy.max_chain_len,
                                    mesh=policy.mesh, policy=quant)
         if cost.peak_bytes + stash_b > policy.memory_budget:
             return math.inf, pen_s, stash_b
@@ -392,9 +423,11 @@ def joint_search(net: TensorNetwork,
     cannot express), candidates are scored by ``model`` (loaded/fit from
     ``cache_dir`` when not given; analytic fallback when unfit), and —
     only when ``base.objective == "measured"`` and a ``tuner`` is
-    provided — the top ``measure_top`` finalists are actually measured,
-    stopping early once ``measure_budget`` tuner trials are spent.  The
-    tile axis rides inside the tuner (``base.tile_sweep`` grid,
+    provided — the top ``measure_top`` finalists are actually measured:
+    each finalist's ``finalist_candidates`` best pooled sequences (under
+    the same ranking metric) are priced by wall clock and the fastest
+    wins, stopping early once ``measure_budget`` tuner trials are spent.
+    The tile axis rides inside the tuner (``base.tile_sweep`` grid,
     ``base.sweep_strategy`` — use ``"halving"`` to stretch the budget).
 
     Returns the winner plus the :func:`compose_per_axis` baseline and the
@@ -409,11 +442,44 @@ def joint_search(net: TensorNetwork,
             cache_dir)
     usable_model = model if model is not None and model.weights else None
 
-    candidates: list[Candidate] = []
+    gen_results: list[tuple[ExecutionPolicy, csse.SearchResult]] = []
+    pool: dict = {}        # tree -> plan, union across every combo's search
     for xp in space.combos(base):
         gen = dataclasses.replace(xp, objective=gen_objective)
         res = csse.search(net, gen, hw=hw)
+        gen_results.append((xp, res))
+        for tree in {res.tree, *(t for _, t in res.candidates)}:
+            if tree not in pool:
+                pool[tree] = plan_from_tree(net, tree)
+
+    candidates: list[Candidate] = []
+    for xp, res in gen_results:
         total, pen_s, stash_b = _score(net, res.plan, xp, hw, usable_model)
+        # The generator's stage-2 ranks trees by perf_model.evaluate, but
+        # candidates compete on _score — the *compiled* plan priced by the
+        # learned model when fit (which can disagree with the roofline
+        # exactly where measurements taught it something: per-step
+        # dispatch overhead, real chain savings) and by the compiled
+        # analytic pricing otherwise.  Re-score every sequence any combo
+        # surfaced — disk-cached searches return a single tree, so a
+        # combo's best sequence may only exist in a sibling combo's
+        # candidate list — and represent each combo by the argmin under
+        # the ranking metric itself.  This also guarantees joint never
+        # loses to compose_per_axis on a metric mismatch: the per-axis
+        # frozen sequence comes from the base-axes combo's search, so it
+        # is always in the pool.
+        for tree, plan in pool.items():
+            if tree == res.tree:
+                continue
+            alt, alt_pen, alt_b = _score(net, plan, xp, hw, usable_model)
+            if alt < total:
+                cost = perf_model.evaluate(
+                    plan, hw, fused_chain=xp.fused_chain,
+                    max_chain_len=xp.max_chain_len, mesh=xp.mesh,
+                    policy=xp.quant_policy)
+                res = dataclasses.replace(res, tree=tree, plan=plan,
+                                          cost=cost)
+                total, pen_s, stash_b = alt, alt_pen, alt_b
         candidates.append(Candidate(policy=xp, result=res, modeled_s=total,
                                     stash_penalty_s=pen_s,
                                     stash_bytes=stash_b))
@@ -443,21 +509,34 @@ def joint_search(net: TensorNetwork,
             if (measure_budget is not None
                     and tuner.stats["trials"] - before >= measure_budget):
                 break
-            # Finalists get the full measured treatment: re-run the CSSE
-            # rerank under objective="measured" so the *plan* is chosen by
-            # wall clock, not by the analytic generator (whose ranking can
-            # be far off the measured one).  The tuner's halving sweep and
-            # its shape cache keep the per-finalist cost bounded.
+            # Finalists get the measured treatment: the combo's pooled
+            # sequences are re-ranked under the candidate-ranking metric
+            # (the learned model when fit) and the short head is measured
+            # plan-by-plan — the plan is chosen by wall clock among the
+            # sequences the ranking metric itself believes in, not among
+            # stage-1's flops order (which can exclude the ranking's own
+            # pick).  The tuner's halving sweep and its shape cache keep
+            # the per-plan cost bounded.
             mxp = dataclasses.replace(cand.policy, objective="measured")
-            if finalist_candidates is not None:
-                # The analytic/model pre-ranking already ordered this
-                # combo's plans; the measured rerank only needs to
-                # adjudicate the short head of that list.
-                mxp = dataclasses.replace(
-                    mxp, num_candidates=min(mxp.num_candidates,
-                                            finalist_candidates))
-            plan_res = csse.search(net, mxp, hw=hw, tuner=tuner)
-            plan_s = plan_res.cost.latency_s
+            k = (finalist_candidates if finalist_candidates is not None
+                 else mxp.num_candidates)
+            ranked = sorted(
+                pool.items(),
+                key=lambda kv: _score(net, kv[1], cand.policy, hw,
+                                      usable_model)[0])[:max(1, k)]
+            best_tree, plan_s = None, math.inf
+            for tree, plan in ranked:
+                if (best_tree is not None and measure_budget is not None
+                        and tuner.stats["trials"] - before
+                        >= measure_budget):
+                    break
+                s = tuner.plan_latency_policy(plan, mxp)
+                if s < plan_s:
+                    best_tree, plan_s = tree, s
+            plan_res = csse.fixed_plan(
+                net, best_tree, hw=hw, fused_chain=mxp.fused_chain,
+                max_chain_len=mxp.max_chain_len, mesh=mxp.mesh,
+                policy=mxp.quant_policy)
             seen[key] = (plan_res, plan_s)
             cand.result = plan_res
             cand.measured_s = plan_s + cand.stash_penalty_s
@@ -465,9 +544,18 @@ def joint_search(net: TensorNetwork,
         # Measured finalists compete among themselves (wall seconds and
         # modeled seconds are different scales — interpret-mode walls in
         # CI are orders of magnitude above the roofline); unmeasured
-        # candidates keep their model ranking behind them.
+        # candidates keep their model ranking behind them.  Finalists
+        # inside the tuner's discrimination floor are ties — the sweep's
+        # min-of-noisy-timings compresses real gaps, so a sub-noise
+        # measured margin must not override the model — and ties break by
+        # modeled score.
         meas = sorted((c for c in candidates if c.measured_s is not None),
                       key=lambda c: c.measured_s)
+        if len(meas) > 1:
+            floor = meas[0].measured_s * MEASURED_TIE_BAND
+            head = [c for c in meas if c.measured_s <= floor]
+            head.sort(key=lambda c: c.modeled_s)
+            meas = head + [c for c in meas if c.measured_s > floor]
         candidates = meas + [c for c in candidates if c.measured_s is None]
 
     per_axis = compose_per_axis(net, base, space, hw=hw, model=usable_model)
@@ -500,6 +588,8 @@ def compose_per_axis(net: TensorNetwork, base: ExecutionPolicy,
 
     policy = best_setting(space.fused, lambda f: dataclasses.replace(
         policy, fused_chain=f))
+    policy = best_setting(space.chain_lens, lambda ln: dataclasses.replace(
+        policy, max_chain_len=ln))
     policy = best_setting(space.precisions, lambda p: dataclasses.replace(
         policy, precision=QuantPolicy.parse(p)))
     policy = best_setting(space.stashes, lambda s: dataclasses.replace(

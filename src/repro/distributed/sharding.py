@@ -36,6 +36,7 @@ import dataclasses
 from typing import Any, Mapping, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import perf_model
@@ -423,3 +424,33 @@ def shard_plan(plan: ContractionPlan, mesh: Mesh | None,
         in_specs=in_specs, out_spec=out_spec, psum_axes=psum_axes,
         spec=spec, local_plan=perf_model.localize_plan(plan, spec),
         factors=tuple(sorted(spec.factors(net).items())))
+
+
+def overlapped_psum(x: jax.Array, axes: Sequence[str],
+                    num_chunks: int = 4) -> jax.Array:
+    """Deferred partial-sum reduction, chunked to overlap with compute.
+
+    The WG phase's one deferred ``psum`` is a single bulk collective at
+    the very end of the per-shard plan — nothing for the scheduler to
+    hide it behind.  Splitting the output along its leading dim into
+    ``num_chunks`` independent ``psum``\\ s gives XLA's latency-hiding
+    scheduler chunk boundaries at which reduction traffic can interleave
+    with the tail of the megakernel chain still producing later rows —
+    the mesh-collective analog of FETTA overlapping its butterfly
+    reduction network with PE-array compute.
+
+    Bitwise-identical to the single ``psum``: each chunk reduces exactly
+    the same addends in the same order (``psum`` of a concatenation is
+    the concatenation of per-chunk ``psum``\\ s).  Falls back to the
+    plain collective when the output is a scalar, has a leading dim the
+    chunk count does not divide, or ``num_chunks <= 1``.
+    """
+    axes = tuple(axes)
+    if not axes:
+        return x
+    if (x.ndim == 0 or num_chunks <= 1
+            or x.shape[0] % num_chunks != 0):
+        return jax.lax.psum(x, axes)
+    chunks = jnp.split(x, num_chunks, axis=0)
+    return jnp.concatenate([jax.lax.psum(c, axes) for c in chunks],
+                           axis=0)

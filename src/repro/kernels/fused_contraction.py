@@ -1,7 +1,7 @@
 """Pallas TPU kernels for tensor-contraction hot spots.
 
-Two kernels realise FETTA's micro-architectural ideas on the TPU memory
-hierarchy (HBM -> VMEM -> MXU):
+Two kernel families realise FETTA's micro-architectural ideas on the TPU
+memory hierarchy (HBM -> VMEM -> MXU):
 
 * ``matmul_pallas`` — an MXU-tiled GEMM whose rhs may be stored transposed
   (``[N, K]`` layout).  The transpose happens **in VMEM after the DMA**,
@@ -11,15 +11,30 @@ hierarchy (HBM -> VMEM -> MXU):
   accumulator, K innermost ("output-stationary": the Psum tile stays
   resident while operand tiles stream, exactly the OS dataflow of Fig. 9).
 
-* ``chain_pallas`` — two chained contractions ``(X @ A) @ B`` with the
-  ``[bm, H]`` intermediate held in VMEM scratch, so the intermediate tensor
-  of a TT/TTM chain never round-trips HBM (FETTA's butterfly-fed CE array /
-  ETTE's look-ahead registers).  This is what ``fused_chain=True`` in the
-  CSSE stage-2 model assumes the runtime can do.
+* ``chain_n_pallas`` — an N-step contraction chain
+  ``(((X @ W1) @ W2) ... @ Wn)`` with every ``[bm, H_i]`` intermediate held
+  in VMEM scratch, so no intermediate tensor of a TT/TTM chain ever
+  round-trips HBM (FETTA's butterfly-fed CE array / ETTE's look-ahead
+  registers).  Two ping-pong scratch buffers double-buffer the chain: link
+  ``i+1`` reads one buffer while the other is free to accept the next
+  write, and Pallas's grid pipeline prefetches the next grid cell's
+  operand tiles while the current cell computes.  ``chain_pallas`` is the
+  historical two-step entry point, now a thin wrapper.  This is what
+  ``fused_chain=True`` / ``max_chain_len`` in the CSSE stage-2 model
+  assume the runtime can do.
+
+Quantized variants fold dequantization into per-link epilogues: operands
+stream at fp8/int8 width, every VMEM intermediate holds *dequantized* real
+values (bf16 between MXU passes), and the chain's quantized inputs never
+materialize at full width in HBM.
 
 Both use 128-aligned BlockSpecs (MXU edge) and f32 accumulation over bf16
 operands.  On CPU hosts they run under ``interpret=True`` (pure-Python
 execution of the kernel body) and are validated against ``ref.py``.
+
+Shape/budget violations raise :class:`ChainLoweringError` (a typed
+``ValueError``) instead of bare asserts — the plan compiler catches it and
+falls back to the unfused GEMM path, and the checks survive ``python -O``.
 """
 
 from __future__ import annotations
@@ -37,15 +52,87 @@ INTERPRET = jax.default_backend() != "tpu"
 
 # Conservative VMEM budget for the chain kernel's resident operand set; the
 # plan compiler (repro.core.plan_compiler) consults the same numbers when
-# deciding whether an adjacent step pair may fuse.
+# deciding whether a run of adjacent steps may fuse.
 CHAIN_VMEM_BUDGET_BYTES = 100 * 2 ** 20
+
+
+class ChainLoweringError(ValueError):
+    """A kernel launch was asked for shapes/scales it cannot lower.
+
+    Raised (instead of a bare ``assert``, which vanishes under
+    ``python -O``) by the kernel wrappers on contraction-dim mismatches,
+    malformed scale vectors and VMEM-budget violations.  The plan compiler
+    treats it as "do not fuse": ``compile_plan`` skips the chain and
+    ``plan_compiler.run`` re-executes a rejected chain as plain GEMMs, so
+    a lowering refusal degrades to the unfused path instead of crashing.
+    """
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ChainLoweringError(msg)
 
 
 def chain_vmem_elems(m: int, k: int, h: int, n: int,
                      block_m: int = 128, block_n: int = 128) -> int:
-    """f32 elements resident in VMEM for one ``chain_pallas`` grid cell."""
+    """f32 elements resident in VMEM for one 2-step chain grid cell
+    (historical single-scratch accounting; :func:`chain_n_vmem_elems` is
+    the N-step double-buffered generalisation)."""
     bm, bn = min(block_m, m), min(block_n, n)
     return bm * k + k * h + h * bn + bm * h + bm * bn
+
+
+def chain_plan(m0: int, shapes) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Validate an N-link chain and derive its row geometry.
+
+    ``shapes`` is the per-link matricized weight shape ``(k_i, n_i)``;
+    ``m0`` is the first link's row count.  Link ``i+1`` consumes link
+    ``i``'s ``[rows_i, n_i]`` output reshaped to ``[rows_i / g_i,
+    g_i * n_i]`` where ``g_i = k_{i+1} / n_i`` — the contiguous row-major
+    regrouping that folds trailing row axes into the next contraction
+    (FETTA's "tensor shaping during computation"; ``g_i = 1`` is the
+    classic fixed-M matmul chain).  Returns ``(rows, regroups)`` where
+    ``rows[i]`` is link ``i``'s row count (``rows[-1]`` is the final
+    output M) and ``regroups[i] = g_i``.  Raises
+    :class:`ChainLoweringError` on non-integral regroups.
+    """
+    shapes = tuple((int(k), int(n)) for k, n in shapes)
+    _require(len(shapes) >= 2,
+             f"chain needs >= 2 links, got {len(shapes)}")
+    rows, regroups = [m0], []
+    for i in range(len(shapes) - 1):
+        n_i, k_next = shapes[i][1], shapes[i + 1][0]
+        _require(k_next % n_i == 0,
+                 f"chain link {i + 1}: K={k_next} does not regroup "
+                 f"[rows, {n_i}] (not a multiple)")
+        g = k_next // n_i
+        _require(rows[-1] % g == 0,
+                 f"chain link {i + 1}: rows {rows[-1]} not divisible by "
+                 f"regroup factor {g}")
+        regroups.append(g)
+        rows.append(rows[-1] // g)
+    return tuple(rows), tuple(regroups)
+
+
+def chain_n_vmem_elems(m0: int, shapes,
+                       block_m: int = 128, block_n: int = 128) -> int:
+    """f32 elements resident in VMEM for one ``chain_n_pallas`` grid cell.
+
+    ``shapes`` is the per-link ``(k_i, n_i)`` weight shape tuple (see
+    :func:`chain_plan`); ``m0`` the first link's row count.  Interior
+    weights are resident whole, the last weight per column block, plus the
+    x row block, the two ping-pong intermediate scratch buffers (sized for
+    the widest per-final-row intermediate) and the output tile.
+    """
+    shapes = tuple(shapes)
+    rows, _ = chain_plan(m0, shapes)
+    m_final, n_last = rows[-1], shapes[-1][1]
+    bm, bn = min(block_m, m_final), min(block_n, n_last)
+    mults = [r // m_final for r in rows]         # R_i: rows per final row
+    interior_w = sum(k * n for k, n in shapes[:-1])
+    inter_cols = [mults[i] * shapes[i][1] for i in range(len(shapes) - 1)]
+    return (bm * mults[0] * shapes[0][0] + interior_w
+            + shapes[-1][0] * bn + 2 * bm * max(inter_cols) + bm * bn)
 
 
 # ---------------------------------------------------------------------------
@@ -113,7 +200,7 @@ def matmul_pallas(x: jax.Array, w: jax.Array, *, transpose_rhs: bool = False,
         n, k2 = w.shape
     else:
         k2, n = w.shape
-    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    _require(k == k2, f"contraction mismatch {k} vs {k2}")
     out_dtype = out_dtype or (x.dtype if scales is None else jnp.float32)
     interpret = INTERPRET if interpret is None else interpret
 
@@ -142,7 +229,9 @@ def matmul_pallas(x: jax.Array, w: jax.Array, *, transpose_rhs: bool = False,
         scale_specs, scale_ops = [], ()
     else:
         sl, sr = scales
-        assert sl.shape == (m, 1) and sr.shape == (1, n), (sl.shape, sr.shape)
+        _require(sl.shape == (m, 1) and sr.shape == (1, n),
+                 f"bad GEMM scale shapes {sl.shape}/{sr.shape} for "
+                 f"[{m}x{k}] @ [{k}x{n}]")
         if mp:
             sl = jnp.pad(sl, ((0, mp), (0, 0)))
         if np_:
@@ -169,104 +258,195 @@ def matmul_pallas(x: jax.Array, w: jax.Array, *, transpose_rhs: bool = False,
 
 
 # ---------------------------------------------------------------------------
-# Fused two-step contraction chain
+# Fused N-step contraction chain
 # ---------------------------------------------------------------------------
 
 
-def _chain_kernel(x_ref, a_ref, b_ref, o_ref, t_ref, *, h_dtype):
-    # x: [bm, K], a: [K, H], b: [H, bn]; t (scratch): [bm, H] f32
-    t = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
-    t_ref[...] = t
-    # Cast the VMEM-resident intermediate to the operand dtype before the
-    # second MXU pass (matches the non-fused two-einsum semantics).
-    o_ref[...] = jnp.dot(t_ref[...].astype(h_dtype), b_ref[...],
-                         preferred_element_type=jnp.float32
-                         ).astype(o_ref.dtype)
+def _chain_n_kernel(*refs, h_dtype, n_w: int, bm: int,
+                    shapes: tuple[tuple[int, int], ...],
+                    mults: tuple[int, ...], quant: bool):
+    """N-link chain body over two ping-pong f32 scratch buffers.
+
+    ``refs`` = x, w_1..w_n, [scale_1..scale_n,] out, t0, t1.  Link ``i``
+    reads the buffer link ``i-1`` wrote (``t[(i-1) % 2]``) and writes the
+    other, so consecutive MXU passes never contend on one buffer — the
+    VMEM double-buffering half of the pipeline (operand-tile prefetch
+    across grid cells is Pallas's BlockSpec pipeline).
+
+    Link ``i`` computes on ``bm * mults[i]`` rows; where ``mults`` steps
+    down, the intermediate is re-read regrouped (``[r, n] -> [r/g,
+    g*n]``) — a contiguous row-major reshape performed on the VMEM value,
+    never in HBM.  Intermediates are stored per-final-row as ``[bm,
+    mults[i] * n_i]`` so both regrouped and fixed-M links read the same
+    layout.  Quantized links multiply each dot by that link's folded
+    dequantization scale before the downcast, so every resident
+    intermediate holds *real* values.
+    """
+    x_ref = refs[0]
+    w_refs = refs[1:1 + n_w]
+    if quant:
+        s_refs = refs[1 + n_w:1 + 2 * n_w]
+        o_ref, t0_ref, t1_ref = refs[1 + 2 * n_w:]
+    else:
+        s_refs = None
+        o_ref, t0_ref, t1_ref = refs[1 + n_w:]
+    t_refs = (t0_ref, t1_ref)
+    for i in range(n_w):
+        k_i, n_i = shapes[i]
+        if i == 0:
+            lhs = x_ref[...]                      # (bm * mults[0], k_1)
+            if quant:
+                lhs = lhs.astype(jnp.float32)
+        else:
+            cols = mults[i - 1] * shapes[i - 1][1]
+            flat = t_refs[(i - 1) % 2][:, :cols].astype(h_dtype)
+            lhs = flat.reshape(bm * mults[i], k_i)   # regroup in VMEM
+        w = w_refs[i][...]
+        if quant:
+            w = w.astype(jnp.float32 if i == 0 else h_dtype)
+        acc = jnp.dot(lhs, w, preferred_element_type=jnp.float32)
+        if quant:
+            acc = acc * s_refs[i][...]
+        if i == n_w - 1:
+            o_ref[...] = acc.astype(o_ref.dtype)  # (bm, bn)
+        else:
+            t_refs[i % 2][:, :mults[i] * n_i] = acc.reshape(
+                bm, mults[i] * n_i)
 
 
-def _chain_scaled_kernel(x_ref, a_ref, b_ref, s1_ref, s2_ref, o_ref, t_ref,
-                         *, h_dtype):
-    """Quantized chain: the first dot's epilogue dequantizes the VMEM
-    intermediate (``s1`` folds the lhs row scales with A's scale), the
-    second dequantizes the output (``s2`` carries B's per-col scale).
-    The intermediate lives in VMEM as bf16 between the two MXU passes —
-    its HBM round-trip stays elided, same as the unquantized chain."""
-    t = jnp.dot(x_ref[...].astype(jnp.float32),
-                a_ref[...].astype(jnp.float32),
-                preferred_element_type=jnp.float32)
-    t_ref[...] = t * s1_ref[...]
-    o_ref[...] = (jnp.dot(t_ref[...].astype(h_dtype),
-                          b_ref[...].astype(h_dtype),
-                          preferred_element_type=jnp.float32)
-                  * s2_ref[...]).astype(o_ref.dtype)
+def chain_n_pallas(x: jax.Array, weights, *,
+                   block_m: int = 128, block_n: int = 128,
+                   out_dtype=None, interpret: bool | None = None,
+                   scales=None) -> jax.Array:
+    """N-step contraction chain with every intermediate VMEM-resident.
+
+    ``weights`` is a sequence of >= 2 matrices ``W_i[k_i, n_i]`` with
+    ``k_1 == x.shape[1]``.  Each link feeds the next either directly
+    (``k_{i+1} == n_i``, the classic matmul chain) or through a contiguous
+    row regrouping ``[r, n_i] -> [r / g, g * n_i]`` when ``k_{i+1} =
+    g * n_i`` (see :func:`chain_plan`) — how a TT/TTM sweep's "consume a
+    mode axis per step" structure becomes one on-chip chain.  The output
+    is ``[m0 / prod(g), n_last]``.  Interior boundary operands must fit in
+    VMEM alongside the tiles (true for TNN cores, where each boundary is a
+    product of a few factor/rank dims); the wrapper enforces a
+    conservative budget via :class:`ChainLoweringError`.
+
+    ``scales`` switches to the quantized kernel: operands hold fp8/int8
+    values and ``scales`` carries one folded dequantization factor per
+    link — ``(s_first [m0, 1], c_2 [1, 1], ..., c_{n-1} [1, 1],
+    s_last [1, n_last])`` where ``s_first`` is the lhs row scales already
+    multiplied by W1's per-tensor scale, each interior ``c_i`` is W_i's
+    per-tensor scale, and ``s_last`` W_n's scale per output column.  Each
+    link's epilogue applies its factor before the bf16 downcast, so
+    intermediates hold dequantized real values and quantized inputs never
+    round-trip HBM at full width.
+    """
+    weights = tuple(weights)
+    _require(len(weights) >= 2,
+             f"chain needs >= 2 weights, got {len(weights)}")
+    _require(x.ndim == 2, f"chain lhs must be 2-D, got shape {x.shape}")
+    for i, w in enumerate(weights):
+        _require(w.ndim == 2,
+                 f"chain weight {i} must be 2-D, got shape {w.shape}")
+    m0 = x.shape[0]
+    shapes = tuple(w.shape for w in weights)
+    _require(shapes[0][0] == x.shape[1],
+             f"chain link 0: contraction mismatch "
+             f"{shapes[0][0]} vs {x.shape[1]}")
+    rows, _ = chain_plan(m0, shapes)     # raises on non-integral regroups
+    m_final, n = rows[-1], shapes[-1][1]
+    out_dtype = out_dtype or (x.dtype if scales is None else jnp.float32)
+    interpret = INTERPRET if interpret is None else interpret
+
+    bm, bn = min(block_m, m_final), min(block_n, n)
+    vmem_elems = chain_n_vmem_elems(m0, shapes, block_m, block_n)
+    _require(vmem_elems * 4 < CHAIN_VMEM_BUDGET_BYTES,
+             f"chain operands exceed VMEM budget: {vmem_elems * 4} bytes")
+    mults = tuple(r // m_final for r in rows)    # R_i: rows per final row
+
+    mp, np_ = (-m_final % bm), (-n % bn)
+    if mp:
+        # Pad whole final-row groups so the per-link regrouping still
+        # lines up (padded rows are zeros -> zero outputs, sliced off).
+        x = jnp.pad(x, ((0, mp * mults[0]), (0, 0)))
+    if np_:
+        weights = weights[:-1] + (
+            jnp.pad(weights[-1], ((0, 0), (0, np_))),)
+    M, N = m_final + mp, n + np_
+
+    n_w = len(weights)
+    if scales is None:
+        kernel = functools.partial(_chain_n_kernel, h_dtype=x.dtype,
+                                   n_w=n_w, bm=bm, shapes=shapes,
+                                   mults=mults, quant=False)
+        scale_specs, scale_ops = [], ()
+    else:
+        scales = tuple(scales)
+        _require(len(scales) == n_w,
+                 f"expected {n_w} chain scales, got {len(scales)}")
+        s_first, *mid, s_last = scales
+        _require(s_first.shape == (m0, 1),
+                 f"chain lhs scale must be [{m0}, 1], got {s_first.shape}")
+        _require(s_last.shape == (1, n),
+                 f"chain out scale must be [1, {n}], got {s_last.shape}")
+        for j, s in enumerate(mid):
+            _require(tuple(s.shape) == (1, 1),
+                     f"chain interior scale {j + 1} must be [1, 1], "
+                     f"got {s.shape}")
+        if mp:
+            s_first = jnp.pad(s_first, ((0, mp * mults[0]), (0, 0)))
+        if np_:
+            s_last = jnp.pad(s_last, ((0, 0), (0, np_)))
+        # bf16 VMEM intermediates — operands are fp8/int8, which cannot
+        # hold the dequantized intermediate values.
+        kernel = functools.partial(_chain_n_kernel, h_dtype=jnp.bfloat16,
+                                   n_w=n_w, bm=bm, shapes=shapes,
+                                   mults=mults, quant=True)
+        scale_specs = [pl.BlockSpec((bm * mults[0], 1),
+                                    lambda i, j: (i, 0))]
+        scale_specs += [pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+                        for _ in mid]
+        scale_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+        scale_ops = (s_first, *mid, s_last)
+
+    # Interior weights resident whole; the last weight streams per column
+    # block (the only chain operand besides x/out that scales with the
+    # grid).
+    w_specs = [pl.BlockSpec(shapes[i], lambda i_, j_: (0, 0))
+               for i in range(n_w - 1)]
+    w_specs.append(pl.BlockSpec((shapes[-1][0], bn), lambda i, j: (0, j)))
+    inter_cols = [mults[i] * shapes[i][1] for i in range(n_w - 1)]
+    max_mid = max(inter_cols)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm * mults[0], shapes[0][0]),
+                         lambda i, j: (i, 0)),
+            *w_specs,
+            *scale_specs,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, max_mid), jnp.float32),
+                        pltpu.VMEM((bm, max_mid), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, *weights, *scale_ops)
+    return out[:m_final, :n]
 
 
 def chain_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *,
                  block_m: int = 128, block_n: int = 128,
                  out_dtype=None, interpret: bool | None = None,
                  scales=None) -> jax.Array:
-    """``Y[M, N] = (X[M, K] @ A[K, H]) @ B[H, N]`` — intermediate in VMEM.
-
-    K and H must fit in VMEM alongside the tiles (true for TNN cores, where
-    K = prod of a few factor dims and H = rank*factor products); the wrapper
-    asserts a conservative budget.
-
-    ``scales=(s1, s2)`` switches to the quantized kernel: operands hold
-    fp8/int8 values, ``s1`` (``[M, 1]`` f32, the lhs row scales already
-    multiplied by A's scale) dequantizes the VMEM intermediate, ``s2``
-    (``[1, N]`` f32, B's scale per column) the output.
-    """
-    m, k = x.shape
-    k2, h = a.shape
-    h2, n = b.shape
-    assert k == k2 and h == h2
-    out_dtype = out_dtype or (x.dtype if scales is None else jnp.float32)
-    interpret = INTERPRET if interpret is None else interpret
-
-    bm, bn = min(block_m, m), min(block_n, n)
-    vmem_elems = chain_vmem_elems(m, k, h, n, block_m, block_n)
-    assert vmem_elems * 4 < CHAIN_VMEM_BUDGET_BYTES, (
-        f"chain operands exceed VMEM budget: {vmem_elems * 4} bytes")
-
-    mp, np_ = (-m % bm), (-n % bn)
-    if mp:
-        x = jnp.pad(x, ((0, mp), (0, 0)))
-    if np_:
-        b = jnp.pad(b, ((0, 0), (0, np_)))
-    M, N = m + mp, n + np_
-
-    # One launch configuration; the quantized variant swaps the kernel body
-    # (bf16 VMEM intermediate — operands are fp8/int8, which cannot hold
-    # the unscaled intermediate) and appends the scale-vector operands.
-    if scales is None:
-        kernel = functools.partial(_chain_kernel, h_dtype=x.dtype)
-        scale_specs, scale_ops = [], ()
-    else:
-        s1, s2 = scales
-        assert s1.shape == (m, 1) and s2.shape == (1, n), (s1.shape, s2.shape)
-        if mp:
-            s1 = jnp.pad(s1, ((0, mp), (0, 0)))
-        if np_:
-            s2 = jnp.pad(s2, ((0, 0), (0, np_)))
-        kernel = functools.partial(_chain_scaled_kernel, h_dtype=jnp.bfloat16)
-        scale_specs = [pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-                       pl.BlockSpec((1, bn), lambda i, j: (0, j))]
-        scale_ops = (s1, s2)
-
-    out = pl.pallas_call(
-        kernel,
-        grid=(M // bm, N // bn),
-        in_specs=[
-            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((k, h), lambda i, j: (0, 0)),
-            pl.BlockSpec((h, bn), lambda i, j: (0, j)),
-            *scale_specs,
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, h), jnp.float32)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
-        interpret=interpret,
-    )(x, a, b, *scale_ops)
-    return out[:m, :n]
+    """``Y[M, N] = (X[M, K] @ A[K, H]) @ B[H, N]`` — the historical
+    two-step chain entry point, now the ``len(weights) == 2`` case of
+    :func:`chain_n_pallas` (identical math, same scale convention:
+    ``scales=(s1, s2)`` with ``s1 [M, 1]`` the lhs row scales folded with
+    A's scale and ``s2 [1, N]`` B's per-column scale)."""
+    return chain_n_pallas(x, (a, b), block_m=block_m, block_n=block_n,
+                          out_dtype=out_dtype, interpret=interpret,
+                          scales=scales)

@@ -1,0 +1,687 @@
+"""Megakernel differential harness (docs/MEGAKERNEL.md).
+
+Every chain length, dtype, and scale placement the N-step lowering
+accepts must be provably equivalent to the einsum reference:
+
+* hypothesis-driven kernel-level differentials — random regrouping chain
+  geometries x lengths 2..5 x dtypes (f32 bitwise, bf16/fp8/int8 bitwise
+  vs an op-for-op link emulation and bounded vs the f32 reference);
+* plan-level invariance — the chain-length cap and the VMEM budget never
+  change f32-accumulated results (bitwise), while deeper caps strictly
+  reduce both the lowered and the modeled HBM bytes;
+* the typed :class:`ChainLoweringError` surface and the compiler's
+  degrade-to-unfused fallbacks;
+* quant prologue/epilogue bit-stability vs the scaled-GEMM machinery and
+  tolerance vs the PR-4 plan-boundary quantization path;
+* ``overlapped_psum`` bitwise identity + WG output/gradient parity on
+  the 8-device CI leg;
+* roofline / HLO-cost cross-checks against
+  ``jax.jit(...).lower().compile().cost_analysis()`` on known GEMMs.
+"""
+
+import math
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_cost, roofline
+from repro.analysis.roofline import PhaseRoofline
+from repro.core import contraction, csse, factorizations as F
+from repro.core import perf_model, plan_compiler, search
+from repro.core import tensorized as tz
+from repro.core.csse import plan_from_tree
+from repro.core.policy import ExecutionPolicy, PolicyError
+from repro.kernels import fused_contraction as fc
+from repro.kernels.fused_contraction import (
+    ChainLoweringError,
+    chain_n_pallas,
+    chain_plan,
+    matmul_pallas,
+)
+from repro.precision import QuantPolicy
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs hypothesis; the sweep below still runs
+    HAVE_HYPOTHESIS = False
+
+_needs8 = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 devices (CI forced-host-device leg)"
+)
+
+# Per-dtype differential bounds (test_precision's tolerances), applied
+# per chain link — quantization error compounds once per boundary.
+TOL = {"bf16": 4e-2, "fp8_e4m3": 2e-1, "fp8_e5m2": 3e-1, "int8": 8e-2}
+QUANT = ["fp8_e4m3", "fp8_e5m2", "int8"]
+
+_QMAX = {"int8": 127.0, "fp8_e4m3": 448.0, "fp8_e5m2": 57344.0}
+_QDT = {
+    "int8": jnp.int8,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+    "fp8_e5m2": jnp.float8_e5m2,
+}
+
+
+def _atis_fact():
+    return F.tt((12, 8, 8), (8, 8, 12), 8)
+
+
+def _fp_workload(tokens=32, seed=0):
+    """ATIS-TT forward phase, left-deep fixed tree + random f32 inputs."""
+    fact = _atis_fact()
+    net = fact.forward_network(batch_axes=(("b", tokens),))
+    plan = plan_from_tree(net, fact.fixed_tree(net))
+    key = jax.random.PRNGKey(seed)
+    tensors = []
+    for i in range(net.num_nodes):
+        key, sub = jax.random.split(key)
+        tensors.append(jax.random.normal(sub, net.node_shape(i), jnp.float32) / 8)
+    return plan, tensors
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level differentials: random chain geometries, lengths 2..5
+# ---------------------------------------------------------------------------
+#
+# ``g_i = k_{i+1} / n_i`` in {1, 2} exercises both the fixed-M matmul
+# chain and the row-folding regroup; ``m0 = m_final * prod(g)`` keeps the
+# row geometry integral (chain_plan's invariant).  A deterministic seeded
+# sweep (3 geometries per chain length) always runs; when hypothesis is
+# installed (CI's requirements-dev.txt) the same checks also fuzz over
+# freshly drawn geometries.
+
+
+def _pick_geometry(pick):
+    """Build one geometry from a chooser ``pick(options) -> option``."""
+    n_links = pick([2, 3, 4, 5])
+    k1 = pick([4, 8])
+    ns = [pick([2, 4, 8]) for _ in range(n_links)]
+    gs = [pick([1, 2]) for _ in range(n_links - 1)]
+    shapes = [(k1, ns[0])]
+    for i in range(1, n_links):
+        shapes.append((gs[i - 1] * ns[i - 1], ns[i]))
+    m_final = pick([8, 16])
+    return m_final * math.prod(gs), tuple(shapes)
+
+
+def _geometry_sweep(per_len=3, seed=0):
+    rng = random.Random(seed)
+    by_len = {2: [], 3: [], 4: [], 5: []}
+    while any(len(v) < per_len for v in by_len.values()):
+        geom = _pick_geometry(rng.choice)
+        bucket = by_len[len(geom[1])]
+        if len(bucket) < per_len and geom not in bucket:
+            bucket.append(geom)
+    return [g for v in by_len.values() for g in v]
+
+
+GEOMETRIES = _geometry_sweep()
+
+
+def _geom_id(geom):
+    m0, shapes = geom
+    return f"m{m0}x" + "-".join(f"{k}x{n}" for k, n in shapes)
+
+
+def _chain_inputs(m0, shapes, dtype=jnp.float32, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes) + 1)
+    x = jax.random.normal(keys[0], (m0, shapes[0][0]), jnp.float32) / 4
+    ws = [
+        jax.random.normal(keys[i + 1], s, jnp.float32) / 4
+        for i, s in enumerate(shapes)
+    ]
+    return x.astype(dtype), tuple(w.astype(dtype) for w in ws)
+
+
+def _chain_ref(x, weights):
+    """Ground truth: the einsum-equivalent f32 matmul chain, regrouping
+    each intermediate ``[r, n] -> [r/g, g*n]`` as an HBM-level reshape."""
+    r = x.astype(jnp.float32)
+    for w in weights:
+        r = jnp.dot(
+            r.reshape(-1, w.shape[0]),
+            w.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    return r
+
+
+def _chain_emul(x, weights, scales=None, out_dtype=None):
+    """Op-for-op jnp emulation of ``_chain_n_kernel``'s link math: f32
+    first dot, storage/bf16 intermediates, per-link scales before the
+    downcast.  The kernel must match this *bitwise* in interpret mode —
+    that is what makes the fused lowering provably a layout optimization,
+    not a numerics change."""
+    quant = scales is not None
+    h = jnp.bfloat16 if quant else x.dtype
+    out_dtype = out_dtype or (jnp.float32 if quant else x.dtype)
+    acc = None
+    for i, w in enumerate(weights):
+        if i == 0:
+            lhs = x.astype(jnp.float32) if quant else x
+            wv = w.astype(jnp.float32) if quant else w
+        else:
+            lhs = acc.astype(h).reshape(-1, w.shape[0])
+            wv = w.astype(h) if quant else w
+        acc = jnp.dot(lhs, wv, preferred_element_type=jnp.float32)
+        if quant:
+            acc = acc * scales[i]
+    return acc.astype(out_dtype)
+
+
+def _quantize(x, tag, axis=None):
+    """Per-tensor (axis=None) or per-row (axis=1) symmetric quantization."""
+    amax = (
+        jnp.max(jnp.abs(x))
+        if axis is None
+        else jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    )
+    s = amax / _QMAX[tag] + 1e-30
+    if tag == "int8":
+        q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    else:
+        q = (x / s).astype(_QDT[tag])
+    return q, s
+
+
+def _chain_scales(sx, w_scales, m0, n_last):
+    """Fold per-link dequant factors per chain_n_pallas's convention:
+    (s_first [m0,1] = lhs scales x W1's scale, interior [1,1] scalars,
+    s_last [1,n_last] = Wn's scale per output column)."""
+    s_first = jnp.broadcast_to(jnp.reshape(sx, (-1, 1)), (m0, 1)) * w_scales[0]
+    mid = [jnp.reshape(s, (1, 1)) for s in w_scales[1:-1]]
+    s_last = jnp.broadcast_to(jnp.reshape(w_scales[-1], (1, -1)), (1, n_last))
+    return (s_first, *mid, s_last)
+
+
+def _check_chain_f32(m0, shapes):
+    x, ws = _chain_inputs(m0, shapes)
+    got = chain_n_pallas(x, ws)
+    want = _chain_ref(x, ws)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _check_chain_bf16(m0, shapes):
+    x, ws = _chain_inputs(m0, shapes, dtype=jnp.bfloat16)
+    got = chain_n_pallas(x, ws)
+    emul = _chain_emul(x, ws)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(emul, np.float32)
+    )
+    ref = np.asarray(_chain_ref(x, ws))
+    tol = TOL["bf16"] * len(shapes)
+    scale = max(float(np.abs(ref).max()), 1e-6)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), ref, rtol=tol, atol=tol * scale
+    )
+
+
+def _check_chain_quant(m0, shapes, tag, row_scales):
+    x, ws = _chain_inputs(m0, shapes)
+    qx, sx = _quantize(x, tag, axis=1 if row_scales else None)
+    qws, sws = zip(*[_quantize(w, tag) for w in ws])
+    scales = _chain_scales(sx, sws, m0, shapes[-1][1])
+    got = chain_n_pallas(qx, qws, scales=scales)
+    emul = _chain_emul(qx, qws, scales=scales)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(emul))
+    ref = np.asarray(_chain_ref(x, ws))
+    tol = TOL[tag] * len(shapes)
+    scale = max(float(np.abs(ref).max()), 1e-6)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=tol, atol=tol * scale)
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES, ids=_geom_id)
+def test_chain_f32_bitwise_matches_einsum_reference(geom):
+    _check_chain_f32(*geom)
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES, ids=_geom_id)
+def test_chain_bf16_bitwise_matches_link_emulation(geom):
+    _check_chain_bf16(*geom)
+
+
+@pytest.mark.parametrize("tag", QUANT)
+@pytest.mark.parametrize("geom", GEOMETRIES[::2], ids=_geom_id)
+def test_chain_quant_scale_placements_bitwise_match_emulation(geom, tag):
+    """Both scale placements (per-row and per-tensor lhs) over every
+    quant dtype: bitwise vs the link emulation, bounded vs the real f32
+    reference."""
+    _check_chain_quant(*geom, tag, True)
+    _check_chain_quant(*geom, tag, False)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _chain_geometries(draw):
+        return _pick_geometry(lambda opts: draw(st.sampled_from(opts)))
+
+    @given(geom=_chain_geometries())
+    @settings(max_examples=15, deadline=None)
+    def test_chain_f32_fuzz(geom):
+        _check_chain_f32(*geom)
+
+    @given(geom=_chain_geometries())
+    @settings(max_examples=10, deadline=None)
+    def test_chain_bf16_fuzz(geom):
+        _check_chain_bf16(*geom)
+
+    @given(
+        geom=_chain_geometries(),
+        tag=st.sampled_from(QUANT),
+        row_scales=st.booleans(),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_chain_quant_fuzz(geom, tag, row_scales):
+        _check_chain_quant(*geom, tag, row_scales)
+
+
+def test_chain_quant_prologue_matches_scaled_gemm():
+    """The chain's quant prologue *is* the scaled-GEMM machinery: link 0
+    of a quantized chain equals matmul_pallas with the same folded row
+    scales, and composing it with the emulated bf16 tail reproduces the
+    fused kernel bitwise."""
+    m0, shapes = 32, ((8, 8), (8, 4))
+    x, ws = _chain_inputs(m0, shapes)
+    qx, sx = _quantize(x, "int8", axis=1)
+    qws, sws = zip(*[_quantize(w, "int8") for w in ws])
+    scales = _chain_scales(sx, sws, m0, 4)
+    link0 = matmul_pallas(
+        qx,
+        qws[0],
+        out_dtype=jnp.float32,
+        scales=(sx * sws[0], jnp.ones((1, 8), jnp.float32)),
+    )
+    acc0 = (
+        jnp.dot(
+            qx.astype(jnp.float32),
+            qws[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        * scales[0]
+    )
+    np.testing.assert_array_equal(np.asarray(link0), np.asarray(acc0))
+    tail = (
+        jnp.dot(
+            link0.astype(jnp.bfloat16),
+            qws[1].astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        * scales[1]
+    )
+    got = chain_n_pallas(qx, qws, scales=scales)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(tail))
+
+
+# ---------------------------------------------------------------------------
+# Plan-level invariance: caps and VMEM budgets never change f32 results
+# ---------------------------------------------------------------------------
+
+
+def test_chain_cap_never_changes_f32_results():
+    """fuse=False and every chain-length cap produce bitwise-identical
+    f32 outputs — the cap is a pure layout decision."""
+    plan, tensors = _fp_workload()
+    want = contraction.execute(plan, tensors, backend="einsum")
+    unfused = plan_compiler.run(plan_compiler.compile_plan(plan, fuse=False), tensors)
+    outs = {}
+    for cap in (2, 3, 4):
+        compiled = plan_compiler.compile_plan(plan, fuse=True, max_chain_len=cap)
+        assert compiled.report()["max_chain_len_emitted"] <= cap
+        outs[cap] = plan_compiler.run(compiled, tensors)
+    deep = plan_compiler.compile_plan(plan, fuse=True, max_chain_len=4)
+    assert deep.report()["max_chain_len_emitted"] >= 3
+    for got in outs.values():
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(outs[2]))
+    np.testing.assert_array_equal(np.asarray(unfused), np.asarray(outs[2]))
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(
+        np.asarray(outs[2]), np.asarray(want), rtol=1e-5, atol=1e-5 * scale
+    )
+
+
+def test_vmem_budget_never_changes_f32_results():
+    """Tightening the VMEM budget only un-fuses chains; the result stays
+    bitwise identical across the whole budget range."""
+    plan, tensors = _fp_workload()
+    budgets = (4096, 64 * 1024, fc.CHAIN_VMEM_BUDGET_BYTES)
+    outs = [
+        plan_compiler.run(
+            plan_compiler.compile_plan(plan, fuse=True, max_chain_len=4, vmem_budget=b),
+            tensors,
+        )
+        for b in budgets
+    ]
+    tight = plan_compiler.compile_plan(
+        plan, fuse=True, max_chain_len=4, vmem_budget=budgets[0]
+    )
+    full = plan_compiler.compile_plan(plan, fuse=True, max_chain_len=4)
+    assert tight.report()["num_chain"] == 0  # budget un-fused everything
+    assert full.report()["num_chain"] >= 1
+    for got in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(outs[0]))
+
+
+def test_deep_chains_reduce_lowered_and_modeled_hbm_bytes():
+    """The benchmark acceptance claim at tier-1 scale: 3+-step chains
+    move strictly fewer HBM bytes than the pairwise lowering in both the
+    compiled accounting and the perf model, at identical FLOPs."""
+    plan, _ = _fp_workload(tokens=128)
+    lowered, modeled, flops = {}, {}, set()
+    for cap in (2, 3, 4):
+        compiled = plan_compiler.compile_plan(plan, fuse=True, max_chain_len=cap)
+        cost = perf_model.evaluate(plan, fused_chain=True, max_chain_len=cap)
+        lowered[cap] = compiled.hbm_bytes()
+        modeled[cap] = cost.bytes_hbm
+        flops.add(cost.flops)
+    assert lowered[3] < lowered[2] and lowered[4] < lowered[2]
+    assert modeled[3] < modeled[2]
+    assert len(flops) == 1  # the cap moves bytes, never FLOPs
+
+
+def test_perf_model_cap_is_inert_when_unfused():
+    plan, _ = _fp_workload()
+    costs = {
+        cap: perf_model.evaluate(plan, fused_chain=False, max_chain_len=cap)
+        for cap in (2, 5)
+    }
+    assert costs[2].bytes_hbm == costs[5].bytes_hbm
+    assert costs[2].latency_s == costs[5].latency_s
+
+
+# ---------------------------------------------------------------------------
+# Typed error surface + degrade-to-unfused fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_chain_lowering_typed_errors():
+    assert issubclass(ChainLoweringError, ValueError)
+    x = jnp.ones((8, 4), jnp.float32)
+    w = jnp.ones((4, 4), jnp.float32)
+    with pytest.raises(ChainLoweringError, match="needs >= 2"):
+        chain_n_pallas(x, [w])
+    with pytest.raises(ChainLoweringError, match="2-D"):
+        chain_n_pallas(jnp.ones((8,), jnp.float32), [w, w])
+    with pytest.raises(ChainLoweringError, match="contraction mismatch"):
+        chain_n_pallas(x, [jnp.ones((6, 4), jnp.float32), w])
+    with pytest.raises(ChainLoweringError, match="regroup"):
+        chain_plan(8, ((4, 3), (5, 4)))  # K=5 does not regroup n=3
+    with pytest.raises(ChainLoweringError, match="not divisible"):
+        chain_plan(3, ((4, 4), (8, 4)))  # g=2 does not divide 3 rows
+    with pytest.raises(ChainLoweringError, match="chain scales"):
+        chain_n_pallas(x, [w, w], scales=(jnp.ones((8, 1)),))
+    with pytest.raises(ChainLoweringError, match="lhs scale"):
+        chain_n_pallas(x, [w, w], scales=(jnp.ones((4, 1)), jnp.ones((1, 4))))
+
+
+def test_chain_vmem_budget_guard(monkeypatch):
+    monkeypatch.setattr(fc, "CHAIN_VMEM_BUDGET_BYTES", 1024)
+    x = jnp.ones((32, 16), jnp.float32)
+    ws = [jnp.ones((16, 16), jnp.float32)] * 2
+    with pytest.raises(ChainLoweringError, match="VMEM budget"):
+        chain_n_pallas(x, ws)
+
+
+def test_run_degrades_to_unfused_when_kernel_refuses(monkeypatch):
+    """A chain the kernel rejects at run time (e.g. a budget tightened
+    after compile) re-executes as plain GEMMs with identical results."""
+    plan, tensors = _fp_workload()
+    compiled = plan_compiler.compile_plan(plan, fuse=True, max_chain_len=4)
+    assert compiled.report()["num_chain"] >= 1
+    want = plan_compiler.run(compiled, tensors)
+
+    def refuse(*args, **kwargs):
+        raise ChainLoweringError("test: kernel refuses every chain")
+
+    monkeypatch.setattr(plan_compiler, "chain_n_pallas", refuse)
+    got = plan_compiler.run(compiled, tensors)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6 * scale
+    )
+
+
+def test_compile_plan_degrades_on_bad_chain(monkeypatch):
+    """compile_plan swallows ChainLoweringError from chain assembly and
+    keeps the unfused GEMMs — never crashes, never loses steps."""
+
+    def refuse(*args, **kwargs):
+        raise ChainLoweringError("test: no chain is buildable")
+
+    monkeypatch.setattr(plan_compiler, "chain_plan", refuse)
+    plan, tensors = _fp_workload()
+    compiled = plan_compiler.compile_plan(plan, fuse=True, max_chain_len=4)
+    assert compiled.report()["num_chain"] == 0
+    want = contraction.execute(plan, tensors, backend="einsum")
+    got = plan_compiler.run(compiled, tensors)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5 * scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# Quant boundaries at plan level: fused chains vs the plan-boundary path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tag", ["fp8_e4m3", "int8"])
+def test_quant_chain_vs_plan_boundary_path(tag):
+    """The fused quant chain (scales folded into prologue/epilogue) and
+    the PR-4 plan-boundary path (requantize between steps) agree within
+    the dtype tolerance, both against the f32 reference and each other;
+    the fused path is deterministic (bitwise-stable across runs)."""
+    plan, tensors = _fp_workload()
+    qp = QuantPolicy.parse(tag)
+    want = contraction.execute(plan, tensors, backend="einsum")
+    scale = float(jnp.max(jnp.abs(want)))
+    boundary = contraction.execute(
+        plan, tensors, backend="pallas", policy=qp, fused_chain=False
+    )
+    for cap in (2, 4):
+        got = contraction.execute(
+            plan,
+            tensors,
+            backend="pallas",
+            policy=qp,
+            fused_chain=True,
+            max_chain_len=cap,
+        )
+        again = contraction.execute(
+            plan,
+            tensors,
+            backend="pallas",
+            policy=qp,
+            fused_chain=True,
+            max_chain_len=cap,
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(again))
+        tol = TOL[tag]
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=tol, atol=tol * scale
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(boundary), rtol=tol, atol=tol * scale
+        )
+
+
+def test_execute_threads_max_chain_len():
+    plan, tensors = _fp_workload()
+    want = contraction.execute(plan, tensors, backend="einsum")
+    got = contraction.execute(
+        plan, tensors, backend="pallas", fused_chain=True, max_chain_len=4
+    )
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5 * scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# Policy + search-space threading
+# ---------------------------------------------------------------------------
+
+
+def test_policy_max_chain_len_validation_and_roundtrip():
+    with pytest.raises(PolicyError):
+        ExecutionPolicy(max_chain_len=1)
+    p = ExecutionPolicy(max_chain_len=4)
+    assert ExecutionPolicy.from_json(p.to_json()).max_chain_len == 4
+    # signature back-compat: the key only appears off the pairwise default,
+    # so pre-existing tuner caches stay valid.
+    assert "max_chain_len" not in ExecutionPolicy().signature_payload()
+    assert p.signature_payload()["max_chain_len"] == 4
+
+
+def test_search_space_chain_axis():
+    """The chain-length axis only varies under fused_chain=True, and the
+    default space carries (2, 3) — the pairwise cap alone can misrank
+    CSSE sequences whose fusable runs are longer than 2."""
+    space = search.SearchSpace()
+    assert space.chain_lens == (2, 3)
+    combos = list(space.combos(ExecutionPolicy(objective="latency")))
+    fused_lens = {c.max_chain_len for c in combos if c.fused_chain}
+    unfused_lens = {c.max_chain_len for c in combos if not c.fused_chain}
+    assert fused_lens == {2, 3}
+    assert unfused_lens == {2}
+
+
+# ---------------------------------------------------------------------------
+# Roofline + HLO-cost cross-checks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,k", [(64, 48, 32), (128, 128, 128)])
+def test_gemm_cost_three_way_cross_check(m, n, k):
+    """dot_reference_cost == the HLO text parser == XLA's own
+    cost_analysis, on GEMMs small enough that the compiled module is the
+    bare dot."""
+    f = jax.jit(lambda a, b: a @ b)
+    compiled = f.lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    ).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    parsed = hlo_cost.HloModule(compiled.as_text()).cost()
+    ref = hlo_cost.dot_reference_cost(m, n, k)
+    assert ref.flops == 2.0 * m * n * k
+    assert ref.bytes == (m * k + k * n + m * n) * 4.0
+    assert parsed.flops == ref.flops == ca["flops"]
+    assert parsed.bytes == ref.bytes == ca["bytes accessed"]
+
+
+def test_phase_roofline_known_numbers():
+    r = PhaseRoofline(
+        phase="fp",
+        flops=2 * roofline.PEAK_FLOPS,
+        hbm_bytes=roofline.HBM_BW,
+        wall_s=4.0,
+        chain_len=3,
+    )
+    assert r.compute_s == pytest.approx(2.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.attainable_s == pytest.approx(2.0)
+    assert r.dominant == "compute"
+    assert r.efficiency == pytest.approx(0.5)
+    assert r.achieved_gbps == pytest.approx(roofline.HBM_BW / 4.0 / 1e9)
+    assert r.attainable_gbps == pytest.approx(roofline.HBM_BW / 2.0 / 1e9)
+    d = r.to_dict()
+    assert d["phase"] == "fp" and d["chain_len"] == 3
+    mem = PhaseRoofline(phase="wg", flops=1.0, hbm_bytes=roofline.HBM_BW, wall_s=1.0)
+    assert mem.dominant == "memory"
+    assert mem.achieved_gbps == pytest.approx(roofline.HBM_BW / 1e9)
+    assert mem.efficiency == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# 8-device leg: overlapped psum identity + WG output/gradient parity
+# ---------------------------------------------------------------------------
+
+
+def _mesh8():
+    n = jax.device_count()
+    return jax.make_mesh((8, n // 8), ("data", "model"))
+
+
+@_needs8
+def test_overlapped_psum_bitwise_matches_single_psum():
+    """Chunked psum is algebraically the same reduction (psum of a
+    concat == concat of per-chunk psums) — bitwise, including the
+    fallback branches (non-divisible leading dim, scalar, no axes)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import overlapped_psum
+
+    mesh = _mesh8()
+    x = jax.random.normal(jax.random.key(0), (64, 16), jnp.float32)
+
+    def run(fn):
+        return shard_map(fn, mesh=mesh, in_specs=P("data"), out_specs=P())(x)
+
+    want = run(lambda v: jax.lax.psum(v, ("data",)))
+    got = run(lambda v: overlapped_psum(v, ("data",)))  # 8 rows -> 4 chunks
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    odd = run(lambda v: overlapped_psum(v, ("data",), num_chunks=3))
+    np.testing.assert_array_equal(np.asarray(odd), np.asarray(want))
+    assert overlapped_psum(x, ()) is x  # no axes -> identity, no psum
+
+
+@_needs8
+@pytest.mark.parametrize("backend", ["einsum", "pallas"])
+def test_wg_psum_overlap_output_parity(backend):
+    """The deferred-psum WG path produces bitwise-identical outputs with
+    overlap on and off, under both backends."""
+    net = tz._wg_network(_atis_fact(), 128, 0)
+    plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+    arrays = [
+        jax.random.normal(jax.random.key(i), net.node_shape(i), jnp.float32) / 8
+        for i in range(net.num_nodes)
+    ]
+    on = contraction.execute(
+        plan, arrays, backend=backend, mesh=_mesh8(), psum_overlap=True
+    )
+    off = contraction.execute(
+        plan, arrays, backend=backend, mesh=_mesh8(), psum_overlap=False
+    )
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+
+
+@_needs8
+def test_wg_psum_overlap_gradient_parity():
+    """Gradients through the sharded WG execution do not depend on the
+    overlap lowering — the chunked reduction transposes like the single
+    psum."""
+    net = tz._wg_network(_atis_fact(), 128, 0)
+    plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+    arrays = [
+        jax.random.normal(jax.random.key(i), net.node_shape(i), jnp.float32) / 8
+        for i in range(net.num_nodes)
+    ]
+    mesh = _mesh8()
+
+    def loss(t0, overlap):
+        out = contraction.execute(
+            plan,
+            [t0] + arrays[1:],
+            backend="einsum",
+            mesh=mesh,
+            psum_overlap=overlap,
+        )
+        return jnp.sum(out * out)
+
+    g_on = jax.grad(lambda t: loss(t, True))(arrays[0])
+    g_off = jax.grad(lambda t: loss(t, False))(arrays[0])
+    scale = max(float(jnp.max(jnp.abs(g_off))), 1e-6)
+    np.testing.assert_allclose(
+        np.asarray(g_on), np.asarray(g_off), rtol=1e-6, atol=1e-6 * scale
+    )

@@ -503,18 +503,37 @@ def test_sharded_quantized_execution_parity(backend):
 
 @_needs8
 def test_sharded_fp8_layer_grads_match_single_device():
+    """Data-parallel fp8 grads track single-device fp8 grads to within
+    one e4m3 quantization step, and stay anchored to the full-precision
+    reference at the dtype tolerance.
+
+    The cross tolerance is 1e-1, not the full-precision suite's 5e-2:
+    plan intermediates are requantized against amax computed from
+    different partials (whole batch vs per-shard before the psum), so
+    elementwise agreement is only guaranteed to ~one fp8 rounding step
+    (up to 6.25% rel for e4m3), and which element lands worst moves
+    with the searched contraction tree."""
     l0, lq = _layers("fp8_e4m3")
     lm = dataclasses.replace(lq, mesh=_mesh8(), mesh_axes=("data",))
     params = lq.init(jax.random.key(0))
+    p0 = {k: v for k, v in params.items() if k != tz.AMAX_KEY}
     x = _rand((16, 8, 768), seed=61)
 
+    g0 = jax.grad(lambda p: (l0(p, x) ** 2).sum())(p0)
     g1 = jax.grad(lambda p: (lq(p, x) ** 2).sum())(params)
     gm = jax.jit(jax.grad(lambda p: (lm(p, x) ** 2).sum()))(params)
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gm)):
         scale = max(float(jnp.max(jnp.abs(a))), 1e-6)
         np.testing.assert_allclose(
-            np.asarray(b), np.asarray(a), rtol=5e-2, atol=5e-2 * scale
+            np.asarray(b), np.asarray(a), rtol=1e-1, atol=1e-1 * scale
         )
+    # Truth anchor: the sharded fp8 grads hit the same full-precision
+    # reference bound the single-device parity test enforces.
+    for a, b in zip(
+        jax.tree.leaves(g0["cores"]), jax.tree.leaves(gm["cores"])
+    ):
+        scale = max(float(jnp.max(jnp.abs(a))), 1e-6)
+        assert float(jnp.max(jnp.abs(b - a))) / scale < TOL["fp8_e4m3"]
 
 
 @pytest.mark.slow

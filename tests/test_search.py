@@ -21,23 +21,30 @@ def _atis_fact():
 
 
 # ---------------------------------------------------------------------------
-# The flip test (ISSUE 7 acceptance)
+# The flip test (ISSUE 7 acceptance, revised by the megakernel compiler)
 # ---------------------------------------------------------------------------
 
 
-def test_joint_search_flips_atis_wg():
-    """On the ATIS-TT weight-gradient phase, the jointly-searched plan
-    (different sequence, chain fusion exploited) strictly beats the best
-    per-axis composition — the cross-axis coupling per-axis search cannot
-    express."""
+def test_joint_search_converges_atis_wg():
+    """ISSUE 7's flip example is closed by the megakernel compiler: the
+    regrouping link predicate fuses the per-axis pipeline's *frozen*
+    sequence too (its steps regroup-chain even though their row counts
+    differ), so the cross-axis gap the joint search exploited on the
+    ATIS-TT weight-gradient phase no longer exists.  What must survive:
+    the joint loop re-finds that optimum (never loses to the baseline),
+    and both winners get there by turning fusion on."""
+    from repro.core import plan_compiler
+
     net = tensorized._wg_network(_atis_fact(), 128, 0)
     res = search.joint_search(net, ExecutionPolicy(objective="latency"))
-    assert res.flipped
-    assert res.best.modeled_s < res.per_axis.modeled_s
-    assert res.best.result.plan.steps != res.per_axis.result.plan.steps
-    # the winning combo turns fusion on; the per-axis sequence (frozen
-    # under the unfused default) cannot profit from it the same way
+    assert res.best.modeled_s <= res.per_axis.modeled_s + 1e-15
     assert res.best.policy.fused_chain
+    assert res.per_axis.policy.fused_chain
+    # why the flip closed: the frozen per-axis sequence now emits a chain
+    compiled = plan_compiler.compile_plan(
+        res.per_axis.result.plan, fuse=True,
+        max_chain_len=res.per_axis.policy.max_chain_len)
+    assert compiled.report()["num_chain"] >= 1
 
 
 def test_joint_never_worse_than_per_axis():
