@@ -157,7 +157,23 @@ def validate(rows) -> list[str]:
 
 
 if __name__ == "__main__":
+    import argparse
+
+    from repro import telemetry as tm
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--serve-trace", default=None, metavar="PATH",
+                    help="write a telemetry trace of the benchmark run "
+                         "(per-request lifecycle lanes, tick spans, "
+                         "occupancy samples; '*.jsonl' streams, other "
+                         "suffixes write Chrome trace-event JSON)")
+    args = ap.parse_args()
+    owns_trace = bool(args.serve_trace) and not tm.enabled()
+    if owns_trace:
+        tm.configure(args.serve_trace)
     for row in run(smoke=True):
         print(row)
     errs = validate(run(print_fn=lambda *_: None, smoke=True))
+    if owns_trace:
+        tm.finalize()
     raise SystemExit(1 if errs else 0)

@@ -1,0 +1,132 @@
+"""Telemetry overhead benchmark: tracing must be (nearly) free.
+
+The tracer's contract (docs/OBSERVABILITY.md) is two-sided:
+
+* **Disabled** — every instrumented call site is one attribute load and
+  a falsy check.  Measured here as nanoseconds per ``tm.span`` +
+  ``tm.inc`` pair, gated at an absolute bound loose enough for CI's
+  shared runners but tight enough that an accidental dict build or
+  clock read on the disabled path fails the suite.
+* **Enabled** — a full in-memory trace of ``bench_plan_compiler.run``
+  (the suite's densest span emitter: CSSE spans, compile spans,
+  counters) must not slow it by more than ``OVERHEAD_GATE`` (3%), with
+  an absolute floor of ``ABS_FLOOR_S`` so sub-millisecond jitter on a
+  fast run cannot fail the ratio.
+
+Both sides use min-of-``REPEATS`` walls (min is the standard
+noise-rejecting estimator for cold-cache-free repeat timing), and the
+enabled/disabled runs alternate so drift in machine load hits both
+arms equally.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro import telemetry as tm
+
+from benchmarks import bench_plan_compiler
+
+REPEATS = 3
+OVERHEAD_GATE = 1.03         # enabled wall <= 3% over disabled wall
+ABS_FLOOR_S = 0.050          # ratio only gates above this disabled wall
+DISABLED_NS_BOUND = 2000.0   # ns per disabled span+inc pair (CI-loose)
+_CALLS = 100_000
+
+
+_silent = lambda *a, **k: None  # noqa: E731
+
+
+def _disabled_ns_per_call() -> float:
+    """ns per (span + inc) pair with the tracer disabled."""
+    assert not tm.enabled()
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(_CALLS):
+            with tm.span("bench.noop"):
+                pass
+            tm.inc("bench.noop")
+        best = min(best, time.perf_counter() - t0)
+    return best / _CALLS * 1e9
+
+
+def _wall_once() -> float:
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        bench_plan_compiler.run(print_fn=_silent)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _wall_disabled() -> float:
+    with tm.suspended():
+        return _wall_once()
+
+
+def _wall_enabled(external: bool) -> float:
+    if external:
+        # Suite runs under --trace: the tracer is already on; the extra
+        # spans land in the caller's trace, which is fine.
+        return _wall_once()
+    tm.configure()               # in-memory trace, no output file
+    try:
+        return _wall_once()
+    finally:
+        tm.reset()
+
+
+def run(print_fn=print, smoke: bool = True) -> list[dict]:
+    external = tm.enabled()
+    with tm.suspended():
+        ns = _disabled_ns_per_call()
+    # Alternate the arms so load drift is shared: off, on, off, on ...
+    wall_off = _wall_disabled()
+    wall_on = _wall_enabled(external)
+    wall_off = min(wall_off, _wall_disabled())
+    wall_on = min(wall_on, _wall_enabled(external))
+    ratio = wall_on / wall_off if wall_off > 0 else 1.0
+    rows = [{
+        "name": "telemetry/overhead/plan_compiler",
+        "wall_s": wall_off,
+        "fusion_hit_rate": None,
+        "traced_wall_s": wall_on,
+        "overhead_ratio": ratio,
+        "disabled_ns_per_call": ns,
+    }]
+    print_fn(f"disabled span+inc: {ns:.0f} ns/call "
+             f"(bound {DISABLED_NS_BOUND:.0f})")
+    print_fn(f"plan_compiler wall: off={wall_off*1e3:.1f}ms "
+             f"on={wall_on*1e3:.1f}ms ratio={ratio:.3f} "
+             f"(gate {OVERHEAD_GATE:.2f}x above "
+             f"{ABS_FLOOR_S*1e3:.0f}ms)")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    failures = []
+    for r in rows:
+        if r["disabled_ns_per_call"] > DISABLED_NS_BOUND:
+            failures.append(
+                f"{r['name']}: disabled tracer costs "
+                f"{r['disabled_ns_per_call']:.0f} ns/call "
+                f"> {DISABLED_NS_BOUND:.0f} (the no-op fast path grew "
+                f"real work)")
+        if (r["wall_s"] >= ABS_FLOOR_S
+                and r["overhead_ratio"] > OVERHEAD_GATE):
+            failures.append(
+                f"{r['name']}: enabled tracing slows the workload "
+                f"{r['overhead_ratio']:.3f}x > {OVERHEAD_GATE}x "
+                f"({r['wall_s']*1e3:.1f}ms -> "
+                f"{r['traced_wall_s']*1e3:.1f}ms)")
+    return failures
+
+
+if __name__ == "__main__":
+    for row in run(smoke=True):
+        print(row)
+    errs = validate(run(print_fn=lambda *_: None, smoke=True))
+    for e in errs:
+        print("FAIL:", e)
+    raise SystemExit(1 if errs else 0)

@@ -96,6 +96,7 @@ _memory_records = _flat_records("dtype", "policy", "peak_bytes")
 _serving_records = _flat_records("dtype", "policy", "peak_bytes",
                                  "p50_ms", "p99_ms", "ttft_ms",
                                  "tok_per_s", "requests")
+_telemetry_records = _flat_records()
 
 
 def _suite(smoke: bool):
@@ -127,6 +128,9 @@ def _suite(smoke: bool):
         ("Serving: continuous batching under a seeded Poisson trace "
          "(p50/p99/ttft, bf16 vs fp8 KV)",
          "bench_serving", _serving_records),
+        ("Telemetry overhead: disabled fast path + <=3% traced slowdown "
+         "(docs/OBSERVABILITY.md)",
+         "bench_telemetry", _telemetry_records),
     ]
     if not smoke:
         suite = [
@@ -170,7 +174,17 @@ def main(argv=None) -> None:
                          "$GITHUB_STEP_SUMMARY when set, so CI renders "
                          "the per-benchmark deltas without artifact "
                          "downloads")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a telemetry trace of the whole suite "
+                         "('*.jsonl' streams events, other suffixes "
+                         "write Chrome trace-event JSON; render with "
+                         "python -m repro.analysis.trace_report)")
     args = ap.parse_args(argv)
+
+    from repro import telemetry as tm
+    owns_trace = bool(args.trace) and not tm.enabled()
+    if owns_trace:
+        tm.configure(args.trace)
 
     import importlib
 
@@ -219,6 +233,10 @@ def main(argv=None) -> None:
                 f.write(f"\n\ngate {args.gate}x: "
                         f"{'PASS' if not gate_failures else 'FAIL'}\n")
             print(f"wrote delta table to {summary}")
+
+    if owns_trace:
+        tm.finalize()
+        print(f"\nwrote telemetry trace {args.trace}")
 
     print("\n" + "=" * 70)
     if all_failures:

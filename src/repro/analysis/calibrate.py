@@ -12,10 +12,18 @@ On CPU hosts the kernels run in Pallas interpret mode, so the absolute
 ratios describe the interpreter — still the honest cost of this backend,
 and the loop (search → compile → measure → rerank) is identical on TPU.
 
+``--trace PATH`` skips the live search entirely and calibrates from the
+drift records of a recorded telemetry trace (``--tnn-trace`` /
+``--serve-trace`` / ``REPRO_TRACE`` output): every ``tm.drift`` pair in
+the file — autotuner steps, plan-level predictions — feeds the same
+geometric-mean summary, so a trace from any run doubles as calibration
+input.
+
 Usage:
   PYTHONPATH=src python -m repro.analysis.calibrate                # ATIS-TT
   PYTHONPATH=src python -m repro.analysis.calibrate --workload UCF-TR --bp
   PYTHONPATH=src python -m repro.analysis.calibrate --json out.json
+  PYTHONPATH=src python -m repro.analysis.calibrate --trace run.json
 """
 
 from __future__ import annotations
@@ -109,6 +117,32 @@ def print_report(records: list[dict], tuner: autotune.Tuner,
     print_fn(f"tuner stats: {tuner.stats}")
 
 
+def calibrate_from_trace(path: str, print_fn=print) -> list[dict]:
+    """Calibrate from the drift records of a recorded telemetry trace
+    instead of a live search — returns the per-name drift summary."""
+    from repro.analysis import trace_report
+    from repro.telemetry import export
+
+    events = export.load_trace(path)
+    rows = trace_report.drift_summary(events)
+    print_fn(f"== drift calibration from {path} "
+             f"({sum(r['count'] for r in rows)} records) ==")
+    if not rows:
+        print_fn("no drift records in trace — record one with a "
+                 "measuring tuner (objective='measured', --tnn-trace)")
+        return rows
+    for r in rows:
+        print_fn(f"  {r['name']}: n={r['count']} geomean "
+                 f"measured/predicted = {r['geomean_ratio']:.2f}x "
+                 f"(max {r['max_ratio']:.2f}x)")
+    mean_log = sum(math.log(r["geomean_ratio"]) * r["count"]
+                   for r in rows) / sum(r["count"] for r in rows)
+    print_fn(f"overall geomean measured/analytic ratio: "
+             f"{math.exp(mean_log):.2f}x (the constant to fold into "
+             f"perf_model if the drift is systematic)")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--workload", action="append", default=None,
@@ -119,8 +153,20 @@ def main() -> None:
                     help="also calibrate the BP (dX) network")
     ap.add_argument("--json", default=None,
                     help="write the records to this JSON file too")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="calibrate from a recorded telemetry trace's "
+                         "drift records instead of a live search")
     args = ap.parse_args()
     names = args.workload or ["ATIS-TT"]
+
+    if args.trace:
+        rows = calibrate_from_trace(args.trace)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"trace": args.trace, "drift": rows}, f,
+                          indent=2)
+            print(f"wrote {args.json}")
+        return
 
     tuner = autotune.default_tuner()
     records = []

@@ -1,0 +1,170 @@
+"""Render a telemetry trace: per-phase span tables + model drift.
+
+Reads either trace format the tracer writes (``*.jsonl`` event stream
+or Chrome trace-event JSON — ``repro.telemetry.export.load_trace``
+handles both) and prints:
+
+* a **per-phase span table** — one row per span name: count, total,
+  mean, and max duration, sorted by total time (where the wall went);
+* the **counter snapshot** — final values of every typed counter
+  (cache hits, degrades, collective bytes, ...);
+* the **drift summary** — per drift-record name, how far the analytic
+  ``perf_model`` prediction sits from the measurement: count, geometric
+  mean and max of measured/predicted, plus a log2-bucket histogram
+  (each bucket is "within 2^k x of the model").
+
+``analysis/calibrate.py --trace PATH`` reuses :func:`drift_summary` to
+feed recorded drift pairs into its calibration report.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.trace_report trace.json
+  PYTHONPATH=src python -m repro.analysis.trace_report trace.jsonl --json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from repro.telemetry import export
+
+
+def phase_table(events: list[dict]) -> list[dict]:
+    """One row per span name: count + total/mean/max duration (ms),
+    sorted by total descending."""
+    agg: dict[str, dict] = {}
+    for ev in events:
+        if ev.get("type") != "span":
+            continue
+        dur_ms = float(ev.get("dur") or 0.0) * 1e-3
+        row = agg.setdefault(ev["name"], {"name": ev["name"], "count": 0,
+                                          "total_ms": 0.0, "max_ms": 0.0})
+        row["count"] += 1
+        row["total_ms"] += dur_ms
+        row["max_ms"] = max(row["max_ms"], dur_ms)
+    rows = sorted(agg.values(), key=lambda r: -r["total_ms"])
+    for row in rows:
+        row["mean_ms"] = row["total_ms"] / row["count"]
+    return rows
+
+
+def counter_values(events: list[dict]) -> dict[str, int]:
+    """Final counter values.  Prefers the ``counters`` snapshot the
+    tracer appends at finalize; Chrome round-trips turn that snapshot
+    into per-name ``counter`` samples, so fall back to the last sample
+    seen per name."""
+    last: dict[str, int] = {}
+    for ev in events:
+        kind = ev.get("type")
+        if kind == "counters":
+            last.update(ev.get("values", {}))
+        elif kind == "counter":
+            val = ev.get("value")
+            if isinstance(val, (int, float)) and val == int(val):
+                last[ev["name"]] = int(val)
+    return last
+
+
+def drift_summary(events: list[dict]) -> list[dict]:
+    """Per drift-record name: count, geometric-mean and max
+    measured/predicted ratio, and a log2 histogram of the ratios
+    (bucket k holds ratios in [2^k, 2^(k+1)))."""
+    by_name: dict[str, list[float]] = {}
+    for ev in events:
+        if ev.get("type") != "drift":
+            continue
+        pred = ev.get("predicted_s")
+        meas = ev.get("measured_s")
+        if not pred or not meas or pred <= 0 or meas <= 0:
+            continue
+        by_name.setdefault(ev["name"], []).append(meas / pred)
+    rows = []
+    for name, ratios in sorted(by_name.items()):
+        hist: dict[int, int] = {}
+        for r in ratios:
+            k = math.floor(math.log2(r))
+            hist[k] = hist.get(k, 0) + 1
+        mean_log = sum(math.log(r) for r in ratios) / len(ratios)
+        rows.append({"name": name, "count": len(ratios),
+                     "geomean_ratio": math.exp(mean_log),
+                     "max_ratio": max(ratios),
+                     "log2_hist": dict(sorted(hist.items()))})
+    return rows
+
+
+def _hist_line(hist: dict[int, int], width: int = 24) -> list[str]:
+    """ASCII rows for a log2 ratio histogram."""
+    if not hist:
+        return []
+    peak = max(hist.values())
+    lines = []
+    for k in sorted(hist):
+        bar = "#" * max(1, round(hist[k] / peak * width))
+        lines.append(f"    2^{k:+d}..2^{k + 1:+d}x "
+                     f"{hist[k]:5d} {bar}")
+    return lines
+
+
+def render(events: list[dict], print_fn=print) -> None:
+    spans = phase_table(events)
+    print_fn(f"== spans ({sum(r['count'] for r in spans)} events, "
+             f"{len(spans)} phases) ==")
+    if spans:
+        print_fn(f"{'phase':32s} {'count':>7s} {'total_ms':>10s} "
+                 f"{'mean_ms':>9s} {'max_ms':>9s}")
+        for r in spans:
+            print_fn(f"{r['name']:32s} {r['count']:7d} "
+                     f"{r['total_ms']:10.2f} {r['mean_ms']:9.3f} "
+                     f"{r['max_ms']:9.3f}")
+    else:
+        print_fn("  (no span events)")
+
+    counters = counter_values(events)
+    print_fn(f"\n== counters ({len(counters)}) ==")
+    for name in sorted(counters):
+        print_fn(f"  {name:40s} {counters[name]:>12d}")
+
+    drifts = drift_summary(events)
+    print_fn(f"\n== model-vs-measured drift "
+             f"({sum(r['count'] for r in drifts)} records) ==")
+    if not drifts:
+        print_fn("  (no drift records — run with a measuring tuner, "
+                 "e.g. objective='measured')")
+    for r in drifts:
+        print_fn(f"  {r['name']}: n={r['count']} "
+                 f"geomean measured/predicted = "
+                 f"{r['geomean_ratio']:.2f}x "
+                 f"(max {r['max_ratio']:.2f}x)")
+        for line in _hist_line(r["log2_hist"]):
+            print_fn(line)
+
+
+def report(path: str) -> dict:
+    """Machine-readable report for one trace file."""
+    events = export.load_trace(path)
+    return {"path": path,
+            "spans": phase_table(events),
+            "counters": counter_values(events),
+            "drift": drift_summary(events)}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("trace", help="trace file (*.jsonl event stream or "
+                                  "Chrome trace-event JSON)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the report as JSON instead of tables")
+    args = ap.parse_args(argv)
+    events = export.load_trace(args.trace)
+    if args.json:
+        print(json.dumps({"spans": phase_table(events),
+                          "counters": counter_values(events),
+                          "drift": drift_summary(events)}, indent=2))
+        return
+    print(f"trace: {args.trace} ({len(events)} events)\n")
+    render(events)
+
+
+if __name__ == "__main__":
+    main()

@@ -65,6 +65,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tm
 from repro.core import perf_model
 from repro.core.plan_compiler import (
     ChainOp, CompiledPlan, GemmOp, TileConfig, compile_plan,
@@ -365,6 +366,7 @@ class Tuner:
     def _time(self, fn, iters: int | None = None,
               warmup: int | None = None) -> float:
         self.stats["trials"] += 1
+        tm.inc("autotune.trials")
         iters = self.iters if iters is None else iters
         warmup = self.warmup if warmup is None else warmup
         for _ in range(warmup):
@@ -486,6 +488,7 @@ class Tuner:
             shape, perf_model.apply_policy(self.hw, shape.quant_policy()))
         if shape.elems() > self.max_measure_elems:
             self.stats["skipped"] += 1
+            tm.inc("autotune.skipped")
             return TuneRecord(shape=shape, best=TileConfig(),
                               best_s=math.inf, analytic_s=analytic,
                               measured=False, trials=[], source="measured")
@@ -493,9 +496,24 @@ class Tuner:
         # jitted train step).  jax trace contexts are thread-local, so the
         # sweep always runs on a worker thread, where the timed kernels
         # execute for real instead of being staged into the outer trace.
+        # Tracer context is thread-local too: hand the caller's span
+        # across so the sweep parents under csse.stage2 (or whoever asked).
+        ctx = tm.current_context()
+
+        def job():
+            with tm.attach(ctx):
+                with tm.span("autotune.sweep", kind=shape.kind,
+                             dims=list(shape.dims), dtype=shape.dtype):
+                    return self._sweep(shape)
+
         with concurrent.futures.ThreadPoolExecutor(1) as pool:
-            best, best_s, trials = pool.submit(self._sweep, shape).result()
+            best, best_s, trials = pool.submit(job).result()
         self.stats["measured"] += 1
+        tm.inc("autotune.measured")
+        if math.isfinite(best_s):
+            tm.drift("autotune.step", predicted_s=analytic,
+                     measured_s=best_s, kind=shape.kind,
+                     dims=list(shape.dims))
         return TuneRecord(shape=shape, best=best, best_s=best_s,
                           analytic_s=analytic, measured=True, trials=trials,
                           source="measured")
@@ -579,10 +597,12 @@ class Tuner:
         rec = self._memo.get(sig)
         if rec is not None:
             self.stats["memo_hits"] += 1
+            tm.inc("autotune.memo_hits")
             return rec
         rec = self._disk_load(sig)
         if rec is not None:
             self.stats["disk_hits"] += 1
+            tm.inc("autotune.disk_hits")
             self._memo[sig] = rec
             return rec
         rec = self._measure(shape)

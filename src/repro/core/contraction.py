@@ -26,6 +26,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tm
 from repro.core.tnetwork import ContractionPlan, ContractionStep
 
 # CPU backend cannot run batched bf16 x bf16 -> f32 dots; upcast there.
@@ -286,6 +287,26 @@ def _execute_sharded(sharded, mesh, tensors: Sequence[jax.Array], *,
             else:
                 out = jax.lax.psum(out, sharded.psum_axes)
         return out.astype(out_dtype)
+
+    # Host-side collective accounting: the deferred psum moves a ring
+    # all-reduce's worth of wire bytes per device — 2(w-1)/w of the
+    # accum-dtype output shard, over the product of the psum mesh axes.
+    # Counted here (the one host-side point that knows the local plan and
+    # the mesh) because nothing inside shard_map may touch host telemetry.
+    if tm.enabled() and sharded.psum_axes:
+        lnet = local_plan.network
+        out_elems = 1
+        for ax in lnet.output:
+            out_elems *= lnet.sizes[ax]
+        payload = out_elems * jnp.dtype(accum_dtype).itemsize
+        ways = 1
+        for ax in sharded.psum_axes:
+            ways *= mesh.shape[ax]
+        wire = int(2 * (ways - 1) / ways * payload) if ways > 1 else 0
+        tm.inc("sharded.psum_count")
+        tm.inc("sharded.collective_bytes", wire)
+        tm.event("sharded.psum", bytes=wire, ways=ways,
+                 axes=list(sharded.psum_axes))
 
     from jax.sharding import PartitionSpec as _P
     in_specs = tuple(sharded.in_specs) + (_P(),) * len(scales)

@@ -63,6 +63,7 @@ import os
 import time
 from dataclasses import dataclass, field
 
+from repro import telemetry as tm
 from repro.core import perf_model
 from repro.core.policy import ExecutionPolicy, PolicyError, _validate
 from repro.core.tnetwork import (
@@ -74,7 +75,29 @@ from repro.precision.policy import QuantPolicy
 
 _DEFAULT_CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
                                   "..", ".cache", "csse")
-_MEMO: dict[str, "SearchResult"] = {}
+#: memo entries are (perf_model.MODEL_VERSION at store time, result) so a
+#: model-semantics change invalidates observably even in-process
+_MEMO: dict[str, tuple[int, "SearchResult"]] = {}
+
+#: Winner-cache counters, the CSSE analog of ``Tuner.stats`` (same
+#: always-on dict convention): every ``search`` call lands in exactly one
+#: of memo_hits / disk_hits / misses, and ``invalidations`` additionally
+#: counts entries dropped because they were ranked under a different
+#: ``perf_model.MODEL_VERSION``.  A snapshot is surfaced in every
+#: ``SearchResult.stats["cache_stats"]``; mirrored into telemetry
+#: counters (``csse.cache.*``) when tracing is enabled.
+CACHE_STATS = {"memo_hits": 0, "disk_hits": 0, "misses": 0,
+               "invalidations": 0}
+
+
+def reset_cache_stats() -> None:
+    for k in CACHE_STATS:
+        CACHE_STATS[k] = 0
+
+
+def _count(kind: str) -> None:
+    CACHE_STATS[kind] += 1
+    tm.inc(f"csse.cache.{kind}")
 
 
 def _cache_dir() -> str:
@@ -285,7 +308,7 @@ def _dfs_candidates(g: _Graph, opts: SearchOptions) -> list[tuple[int, TreeT]]:
         best.sort(key=lambda x: x[0])
         del best[N:]
 
-    stats = {"visited": 0}
+    stats = {"visited": 0, "pruned": 0}
 
     def recurse(nodes: list[tuple[int, int, TreeT]], acc: int):
         # nodes: list of (subset_mask, live_axis_mask, tree)
@@ -312,6 +335,7 @@ def _dfs_candidates(g: _Graph, opts: SearchOptions) -> list[tuple[int, TreeT]]:
                 # but deeper completions might still beat — cannot break the
                 # whole loop, only skip (bound is on the *accumulated* cost,
                 # which is monotone along a path).
+                stats["pruned"] += 1
                 continue
             sub = nodes[i][0] | nodes[j][0]
             merged = (sub, g.live(sub), (nodes[i][2], nodes[j][2]))
@@ -446,7 +470,11 @@ def _signature(net: TensorNetwork, opts, hw: perf_model.HardwareModel) -> str:
         # Winners are ranked BY the analytic model; when its semantics
         # change (e.g. the chain-elision predicate), every cached tree was
         # chosen under a model that no longer exists and must re-rank.
-        "model_version": perf_model.MODEL_VERSION,
+        # MODEL_VERSION is deliberately NOT part of this hash: it is
+        # stored inside the memo/disk entries and checked at load, so a
+        # version bump reads as an *observable invalidation*
+        # (CACHE_STATS["invalidations"]) instead of a silent signature
+        # miss that strands the stale entry on disk forever.
     }
     return hashlib.sha256(json.dumps(payload, default=str).encode()).hexdigest()
 
@@ -494,6 +522,12 @@ def _disk_load(sig: str, net: TensorNetwork
         tree = _untuple(payload["tree"])
     except (OSError, ValueError, KeyError, TypeError):
         return None
+    if payload.get("model_version") != perf_model.MODEL_VERSION:
+        # Ranked under different model semantics: the tree may be valid
+        # but the *choice* is stale — drop it (the fresh search
+        # overwrites) and count the invalidation distinctly from a miss.
+        _count("invalidations")
+        return None
     if not _valid_tree(tree, net):
         return None
     candidates: list[tuple[int, TreeT]] = []
@@ -514,7 +548,8 @@ def _disk_store(sig: str, tree: TreeT,
         path = os.path.join(_cache_dir(), sig + ".json")
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"tree": tree, "candidates": candidates or []}, f)
+            json.dump({"tree": tree, "candidates": candidates or [],
+                       "model_version": perf_model.MODEL_VERSION}, f)
         os.replace(tmp, path)
     except OSError:
         pass
@@ -541,7 +576,25 @@ def search(net: TensorNetwork, opts=None,
     DB, not the signature, determines the ranking) but their *step*
     measurements are themselves disk-cached, so a warm second run
     re-measures nothing.
+
+    Every call lands in exactly one :data:`CACHE_STATS` bucket and the
+    returned ``stats["cache_stats"]`` carries the snapshot; with
+    tracing enabled the whole search runs under a ``csse.search`` span
+    (stage1/stage2 children, autotune sweeps parented through the
+    worker-thread handoff) and measured stage-2 scoring emits one
+    ``csse.plan`` drift record per candidate.
     """
+    if not tm.enabled():
+        return _search_impl(net, opts, hw, tuner)
+    probe = opts if opts is not None else SearchOptions()
+    with tm.span("csse.search", nodes=net.num_nodes,
+                 objective=getattr(probe, "objective", "edp"),
+                 phase=getattr(probe, "phase", "")):
+        return _search_impl(net, opts, hw, tuner)
+
+
+def _search_impl(net: TensorNetwork, opts,
+                 hw: perf_model.HardwareModel, tuner) -> SearchResult:
     sig_opts = opts if opts is not None else SearchOptions()
     opts = _as_options(sig_opts)
     hw = perf_model.apply_policy(hw, opts.policy)
@@ -562,22 +615,33 @@ def search(net: TensorNetwork, opts=None,
         return cost.metric(opts.objective)
 
     sig = _signature(net, sig_opts, hw)
-    memo = _MEMO.get(sig)
-    if memo is not None:
-        return memo
+    got = _MEMO.get(sig)
+    if got is not None:
+        ver, memo = got
+        if ver == perf_model.MODEL_VERSION:
+            _count("memo_hits")
+            memo.stats["cache_stats"] = dict(CACHE_STATS)
+            return memo
+        # Ranked under superseded model semantics (a test or a reload
+        # bumped MODEL_VERSION mid-process): observable invalidation.
+        _count("invalidations")
+        del _MEMO[sig]
 
     if net.num_nodes == 1:
+        _count("misses")
         plan = plan_from_tree(net, 0)
         cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain,
                                    max_chain_len=opts.max_chain_len,
                                    mesh=opts.mesh)
-        res = SearchResult(0, plan, cost, [(0, 0)], [(0.0, 0)], {})
-        _MEMO[sig] = res
+        res = SearchResult(0, plan, cost, [(0, 0)], [(0.0, 0)],
+                           {"cache_stats": dict(CACHE_STATS)})
+        _MEMO[sig] = (perf_model.MODEL_VERSION, res)
         return res
 
     if measured_model is None:
         cached = _disk_load(sig, net)
         if cached is not None:
+            _count("disk_hits")
             cached_tree, cached_cands = cached
             plan = plan_from_tree(net, cached_tree)
             cost = perf_model.evaluate(plan, hw,
@@ -588,35 +652,51 @@ def search(net: TensorNetwork, opts=None,
                                cached_cands
                                or [(plan.total_flops, cached_tree)],
                                [(cost.metric(opts.objective), cached_tree)],
-                               {"cache": "disk"})
-            _MEMO[sig] = res
+                               {"cache": "disk",
+                                "cache_stats": dict(CACHE_STATS)})
+            _MEMO[sig] = (perf_model.MODEL_VERSION, res)
             return res
 
+    _count("misses")
     g = _Graph(net)
     t0 = time.perf_counter()
     engine = opts.engine
     if engine == "auto":
         engine = "dfs" if g.K <= opts.dfs_max_nodes else "dp"
-    if engine == "dfs":
-        candidates, stats = _dfs_candidates(g, opts)
-    elif engine == "dp":
-        candidates, stats = _dp_candidates(g, opts)
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
+    with tm.span("csse.stage1", engine=engine, nodes=g.K):
+        if engine == "dfs":
+            candidates, stats = _dfs_candidates(g, opts)
+        elif engine == "dp":
+            candidates, stats = _dp_candidates(g, opts)
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
     stats = dict(stats)
     stats["engine"] = engine
     stats["stage1_s"] = time.perf_counter() - t0
+    tm.inc("csse.stage1.candidates", len(candidates))
+    tm.inc("csse.stage1.pruned", stats.get("pruned", 0))
 
     assert candidates, "stage 1 found no complete contraction sequence"
 
     # Stage 2: rerank under the hardware model (or measured step costs).
     scored: list[tuple[float, TreeT, ContractionPlan, perf_model.PlanCost]] = []
-    for flops, tree in candidates:
-        plan = plan_from_tree(net, tree)
-        cost = perf_model.evaluate(plan, hw, fused_chain=opts.fused_chain,
-                                   max_chain_len=opts.max_chain_len,
-                                   mesh=opts.mesh)
-        scored.append((stage2_metric(plan, cost), tree, plan, cost))
+    with tm.span("csse.stage2", candidates=len(candidates),
+                 objective=opts.objective):
+        for flops, tree in candidates:
+            plan = plan_from_tree(net, tree)
+            cost = perf_model.evaluate(plan, hw,
+                                       fused_chain=opts.fused_chain,
+                                       max_chain_len=opts.max_chain_len,
+                                       mesh=opts.mesh)
+            metric = stage2_metric(plan, cost)
+            if measured_model is not None:
+                # One drift record per candidate: the analytic latency
+                # the roofline predicts vs the measured plan latency
+                # stage 2 actually ranked by.
+                tm.drift("csse.plan", predicted_s=cost.latency_s,
+                         measured_s=metric, phase=opts.phase,
+                         nodes=net.num_nodes)
+            scored.append((metric, tree, plan, cost))
     scored.sort(key=lambda x: x[0])
     # Memory budget: a hard constraint, not a tiebreak.  Rank only the
     # candidates whose modeled peak fits; when nothing fits, degrade to the
@@ -636,6 +716,7 @@ def search(net: TensorNetwork, opts=None,
     if measured_model is not None:
         stats["stage2"] = "measured"
         stats["tuner"] = dict(measured_model.tuner.stats)
+    stats["cache_stats"] = dict(CACHE_STATS)
 
     res = SearchResult(
         tree=tree, plan=plan, cost=cost,
@@ -643,7 +724,7 @@ def search(net: TensorNetwork, opts=None,
         stage2_costs=[(m, t) for m, t, _, _ in scored],
         stats=stats,
     )
-    _MEMO[sig] = res
+    _MEMO[sig] = (perf_model.MODEL_VERSION, res)
     if measured_model is None:
         _disk_store(sig, tree, candidates)
     return res

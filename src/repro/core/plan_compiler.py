@@ -46,12 +46,39 @@ from typing import Sequence, Union
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tm
 from repro.core.contraction import _einsum_spec, _einsum_step
 from repro.core.tnetwork import AxisId, ContractionPlan, ContractionStep
 from repro.kernels.fused_contraction import (
     CHAIN_VMEM_BUDGET_BYTES, ChainLoweringError, chain_n_pallas,
     chain_n_vmem_elems, chain_plan, matmul_pallas,
 )
+
+_log = tm.get_logger("plan_compiler")
+
+#: ChainLoweringError degrades by site, always counted (tracer on or off)
+#: so tests and postmortems get exact figures; mirrored into the tracer
+#: as ``plan_compiler.chain_degrade.<site>`` counters when tracing.
+DEGRADE_COUNTS = {"compile": 0, "runtime": 0, "runtime_quantized": 0}
+
+
+def reset_degrade_counts() -> None:
+    for k in DEGRADE_COUNTS:
+        DEGRADE_COUNTS[k] = 0
+
+
+def _degrade(site: str, err: Exception) -> None:
+    """Count a ChainLoweringError degrade and warn once per site — the
+    fallback is silent-by-design in the fast path, but it must never be
+    *invisible*: a fleet that quietly unfuses every chain looks healthy
+    while running the slow plan."""
+    DEGRADE_COUNTS[site] += 1
+    tm.inc(f"plan_compiler.chain_degrade.{site}")
+    _log.warn_once(
+        f"plan_compiler.chain_degrade.{site}",
+        f"chain fusion degraded to unfused GEMMs at {site}: {err} "
+        "(warning once; every occurrence is counted in "
+        f"plan_compiler.chain_degrade.{site})")
 
 
 # ---------------------------------------------------------------------------
@@ -510,6 +537,7 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     ``phase`` qualifies every tuner lookup the same way (serving's
     phase-specialized profiles tune prefill and decode independently;
     ``""`` is the training default)."""
+    _t0 = tm.now_us()
     from repro.core.policy import ExecutionPolicy
     if isinstance(policy, ExecutionPolicy):
         fuse = policy.fused_chain
@@ -537,8 +565,9 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
     if mesh_factors is not None:
         mesh_factors = tuple(mesh_factors)
     if not fuse:
-        return CompiledPlan(plan=plan, ops=tuple(lowered),
-                            mesh_factors=mesh_factors, policy=policy)
+        return _emit_compile(
+            CompiledPlan(plan=plan, ops=tuple(lowered),
+                         mesh_factors=mesh_factors, policy=policy), _t0)
 
     fused: list[LoweredOp] = []
     i = 0
@@ -560,8 +589,9 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
             if len(run) >= 2:
                 try:
                     chain = _build_chain(run)
-                except ChainLoweringError:
+                except ChainLoweringError as err:
                     chain = None         # degrade to the unfused GEMMs
+                    _degrade("compile", err)
                 if chain is not None and tuner is not None:
                     chain = _tuned_chain(tuner, chain, run, dtype, ptag,
                                          phase)
@@ -571,8 +601,30 @@ def compile_plan(plan: ContractionPlan, *, fuse: bool = True,
         else:
             fused.append(op0)
             i += 1
-    return CompiledPlan(plan=plan, ops=tuple(fused),
-                        mesh_factors=mesh_factors, policy=policy)
+    return _emit_compile(
+        CompiledPlan(plan=plan, ops=tuple(fused),
+                     mesh_factors=mesh_factors, policy=policy), _t0)
+
+
+def _emit_compile(compiled: CompiledPlan, t0: float) -> CompiledPlan:
+    """Publish one compile's lowering summary to the tracer: a
+    ``plan.compile`` span plus the fusion counters (hit rate and chain
+    lengths as gauges — :meth:`CompiledPlan.report` re-expressed as
+    trace currency)."""
+    if not tm.enabled():
+        return compiled
+    tm.complete_span("plan.compile", t0, tm.now_us(),
+                     steps=len(compiled.plan.steps),
+                     ops=len(compiled.ops))
+    rep = compiled.report()
+    tm.inc("plan_compiler.compiled")
+    tm.inc("plan_compiler.steps", rep["num_steps"])
+    tm.inc("plan_compiler.fused_steps", rep["fused_steps"])
+    tm.inc("plan_compiler.chains", rep["num_chain"])
+    tm.inc("plan_compiler.einsum_fallbacks", rep["num_einsum_fallback"])
+    tm.sample("plan_compiler.fusion_hit_rate", rep["fusion_hit_rate"])
+    tm.sample("plan_compiler.max_chain_len", rep["max_chain_len_emitted"])
+    return compiled
 
 
 # ---------------------------------------------------------------------------
@@ -624,7 +676,12 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
     for t, op in enumerate(compiled.ops):
         for slot in _op_reads(op):
             last_use[slot] = t
+    # Per-op execution spans: under jit these time the *dispatch/trace*
+    # of each kernel (jax is async), eagerly/interpreted they bound the
+    # kernel itself — either way the trace shows which op ran when.
+    _trace = tm.enabled()
     for t, op in enumerate(compiled.ops):
+        _t0 = tm.now_us() if _trace else 0.0
         if isinstance(op, EinsumOp):
             res = _einsum_step(op.step, slots[op.step.lhs],
                                slots[op.step.rhs], accum_dtype)
@@ -654,7 +711,8 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
             try:
                 res = chain_n_pallas(x, ws, out_dtype=out_dtype,
                                      interpret=interpret, **tile_kw)
-            except ChainLoweringError:
+            except ChainLoweringError as err:
+                _degrade("runtime", err)
                 # Kernel refused the fused lowering (e.g. a VMEM budget
                 # tightened after compile): degrade to the unfused path —
                 # one GEMM per link, storage dtype between links, exactly
@@ -672,6 +730,10 @@ def run(compiled: CompiledPlan, tensors: Sequence[jax.Array],
                 res = jnp.transpose(res, op.out_perm)
             out_slot = op.second.out
         slots[out_slot] = res.astype(out_dtype)
+        if _trace:
+            kind = ("einsum" if isinstance(op, EinsumOp)
+                    else "gemm" if isinstance(op, GemmOp) else "chain")
+            tm.complete_span(f"exec.{kind}", _t0, tm.now_us(), op_index=t)
         for slot in _op_reads(op):
             if slot != out_slot and last_use[slot] == t and slot in slots:
                 del slots[slot]
@@ -804,7 +866,8 @@ def _run_quantized(compiled: CompiledPlan, tensors: Sequence[jax.Array], *,
                 res = chain_n_pallas(x2, w2s, out_dtype=jnp.float32,
                                      interpret=interpret, scales=scales,
                                      **tile_kw)
-            except ChainLoweringError:
+            except ChainLoweringError as err:
+                _degrade("runtime_quantized", err)
                 # Unfused fallback mirroring the kernel's link math exactly
                 # (f32 first dot, bf16 intermediates, per-link scales,
                 # row regrouping as an HBM-level reshape).

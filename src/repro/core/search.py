@@ -53,6 +53,7 @@ from dataclasses import dataclass, field
 
 import jax
 
+from repro import telemetry as tm
 from repro.core import csse, perf_model
 from repro.core.autotune import (
     SWEEP_VERSION, StepShape, TuneRecord, Tuner, analytic_step_s,
@@ -417,6 +418,41 @@ def joint_search(net: TensorNetwork,
                  finalist_candidates: int | None = 4
                  ) -> JointSearchResult:
     """Search (sequence × tile × fusion × precision × stash) jointly.
+
+    When tracing is enabled the whole search runs under a
+    ``search.joint`` span (budget in the args, CSSE/autotune child spans
+    beneath it) and the tuner trials actually spent are published as the
+    ``search.measurements`` counter — the trace-visible face of the
+    ``measurements``-vs-``measure_budget`` accounting below.
+
+    See :func:`_joint_search_impl` for the search itself.
+    """
+    kwargs = dict(hw=hw, space=space, model=model, cache_dir=cache_dir,
+                  tuner=tuner, measure_top=measure_top,
+                  measure_budget=measure_budget,
+                  finalist_candidates=finalist_candidates)
+    if not tm.enabled():
+        return _joint_search_impl(net, base, **kwargs)
+    with tm.span("search.joint", nodes=net.num_nodes,
+                 measure_top=measure_top,
+                 measure_budget=measure_budget):
+        res = _joint_search_impl(net, base, **kwargs)
+        tm.inc("search.measurements", res.measurements)
+        return res
+
+
+def _joint_search_impl(net: TensorNetwork,
+                       base: ExecutionPolicy | None = None, *,
+                       hw: perf_model.HardwareModel = perf_model.TPU_V5E,
+                       space: SearchSpace | None = None,
+                       model: CostModel | None = None,
+                       cache_dir: str | None = None,
+                       tuner: Tuner | None = None,
+                       measure_top: int = 1,
+                       measure_budget: int | None = None,
+                       finalist_candidates: int | None = 4
+                       ) -> JointSearchResult:
+    """The joint search body (see :func:`joint_search`).
 
     For every combo in ``space`` the CSSE sequence search re-runs under
     that combo's fusion/precision/mesh axes (the coupling per-axis search

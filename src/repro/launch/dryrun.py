@@ -30,6 +30,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tm
 from repro.analysis import roofline
 from repro.configs import base as cfgbase
 from repro.distributed import sharding
@@ -41,6 +42,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
+
+_log = tm.get_logger("dryrun")
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +163,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
                "status": "SKIP", "reason": reason}
         if verbose:
-            print(f"[dryrun] SKIP {cell}: {reason}")
+            _log.info(f"SKIP {cell}: {reason}")
         if save_json:
             _save(rec, arch_id, shape_name, mesh_name, tnn)
         return rec
@@ -285,10 +288,10 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     fits = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) < 16 * 2**30
     rec["fits_16g_hbm"] = bool(fits)
     if verbose:
-        print(f"[dryrun] OK   {cell}  lower={t_lower:.1f}s "
-              f"compile={t_compile:.1f}s  "
-              f"args={rec['memory']['argument_gb']:.2f}G "
-              f"temp={rec['memory']['temp_gb']:.2f}G fits={fits}")
+        _log.info(f"OK   {cell}  lower={t_lower:.1f}s "
+                  f"compile={t_compile:.1f}s  "
+                  f"args={rec['memory']['argument_gb']:.2f}G "
+                  f"temp={rec['memory']['temp_gb']:.2f}G fits={fits}")
         print("         " + report.summary())
     if save_json:
         _save(rec, arch_id, shape_name, mesh_name, tnn)
@@ -332,12 +335,13 @@ def main() -> None:
                              fsdp=args.fsdp)
                 except Exception as e:  # noqa: BLE001
                     failures.append((arch_id, shape_name, multi, repr(e)))
-                    print(f"[dryrun] FAIL {arch_id} x {shape_name} x "
-                          f"{'2pod' if multi else '1pod'}: {e}")
+                    _log.info(f"FAIL {arch_id} x {shape_name} x "
+                              f"{'2pod' if multi else '1pod'}: {e}")
                     traceback.print_exc()
                     if not args.keep_going:
                         raise
-    print(f"\n[dryrun] done; {len(failures)} failures")
+    print()
+    _log.info(f"done; {len(failures)} failures")
     for f in failures:
         print("  FAIL:", f)
     if failures:

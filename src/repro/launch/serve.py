@@ -21,6 +21,7 @@ import time
 import jax
 import numpy as np
 
+from repro import telemetry as tm
 from repro.configs import base as cfgbase
 from repro.distributed import sharding
 from repro.launch import steps as steps_lib
@@ -28,6 +29,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.memory.planner import format_bytes
 from repro.serving import profiles as profiles_lib
 from repro.serving.engine import Request, ServeEngine
+
+_log = tm.get_logger("serve")
 
 
 def main() -> None:
@@ -47,7 +50,17 @@ def main() -> None:
                     help="prompt tokens a slot ingests per tick")
     ap.add_argument("--serve-max-prefill-tokens", type=int, default=None,
                     help="global prefill token budget per tick")
+    ap.add_argument("--serve-trace", default=None, metavar="PATH",
+                    help="write a telemetry trace of the serving run: "
+                         "'*.jsonl' streams events, any other suffix "
+                         "writes Chrome trace-event JSON for Perfetto "
+                         "(per-request queue-wait/prefill/decode lanes, "
+                         "tick spans, occupancy samples — "
+                         "docs/OBSERVABILITY.md)")
     args = ap.parse_args()
+    owns_trace = bool(args.serve_trace) and not tm.enabled()
+    if owns_trace:
+        tm.configure(args.serve_trace)
 
     arch = cfgbase.get(args.arch)
     tnn_cfg = arch.tnn_default if args.tnn else None
@@ -61,6 +74,8 @@ def main() -> None:
     prof = profiles_lib.build_profiles(
         cfg, batch_size=args.batch, prefill_chunk=args.serve_prefill_chunk)
     if prof:
+        # raw print (no [serve] prefix historically): profile_summary is
+        # its own multi-line block
         print(profiles_lib.profile_summary(prof))
 
     engine = ServeEngine(
@@ -71,9 +86,9 @@ def main() -> None:
         max_prefill_tokens=args.serve_max_prefill_tokens,
         kv_policy=args.serve_kv_dtype,
         memory_budget=args.serve_memory_budget)
-    print(f"[serve] slot KV: {format_bytes(engine.slot_cost['total'])} "
-          f"({args.serve_kv_dtype}), capacity {engine.capacity}/"
-          f"{args.batch} slots")
+    _log.info(f"slot KV: {format_bytes(engine.slot_cost['total'])} "
+              f"({args.serve_kv_dtype}), capacity {engine.capacity}/"
+              f"{args.batch} slots")
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -87,11 +102,13 @@ def main() -> None:
     done = engine.run()
     dt = time.time() - t0
     total_new = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {len(done)} requests, {total_new} tokens "
-          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s), "
-          f"{engine.tick} ticks, peak occupancy {engine.max_occupancy}")
+    _log.info(f"{len(done)} requests, {total_new} tokens "
+              f"in {dt:.2f}s ({total_new/dt:.1f} tok/s), "
+              f"{engine.tick} ticks, peak occupancy {engine.max_occupancy}")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:12]}...")
+    if owns_trace:
+        tm.finalize()
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import memory
+from repro import telemetry as tm
 from repro.checkpoint import store
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import base as cfgbase
@@ -31,6 +32,8 @@ from repro.distributed import sharding
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.optim.adamw import AdamW
+
+_log = tm.get_logger("train")
 
 
 def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
@@ -44,7 +47,14 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           tnn_remat: str | None = None,
           tnn_memory_budget=None,
           tnn_search: str = "per-axis",
-          loss_scale: float = 1.0) -> dict:
+          loss_scale: float = 1.0,
+          trace_path: str | None = None) -> dict:
+    # --tnn-trace: enable the telemetry tracer for this run (unless the
+    # caller — or REPRO_TRACE — already did, in which case the run joins
+    # the existing trace and does not own finalization).
+    owns_trace = bool(trace_path) and not tm.enabled()
+    if owns_trace:
+        tm.configure(trace_path)
     arch = cfgbase.get(arch_id)
     mesh = (make_production_mesh() if production_mesh else make_host_mesh())
     tnn_cfg = arch.tnn_default if tnn else None
@@ -113,9 +123,9 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
         tnn_cfg = dataclasses.replace(
             tnn_cfg, fused_chain=win.fused_chain, precision=win.precision,
             remat=win.stash.tag())
-        print(f"[train] joint plan search: fused_chain={win.fused_chain} "
-              f"precision={win.precision.tag} stash={win.stash.tag()}"
-              f"{' (flipped vs per-axis)' if res.flipped else ''}")
+        _log.info(f"joint plan search: fused_chain={win.fused_chain} "
+                  f"precision={win.precision.tag} stash={win.stash.tag()}"
+                  f"{' (flipped vs per-axis)' if res.flipped else ''}")
     model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=smoke)
     shard = sharding.make_sharder(mesh)
 
@@ -137,17 +147,18 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
                 cfg, global_batch, seq_len, budget, stash_policy,
                 at_least=microbatches, shards=dp)
             if planned != microbatches:
-                print(f"[train] memory planner: budget "
-                      f"{memory.format_bytes(budget)} -> "
-                      f"{planned} microbatches "
-                      f"(stash {memory.format_bytes(report.peak_bytes)})")
+                _log.info(f"memory planner: budget "
+                          f"{memory.format_bytes(budget)} -> "
+                          f"{planned} microbatches "
+                          f"(stash {memory.format_bytes(report.peak_bytes)})")
                 microbatches = planned
         mem_probe = memory.probe_training(cfg, global_batch, seq_len,
                                           microbatches, stash_policy,
                                           shards=dp)
-        print(f"[train] activation stash [{stash_policy.tag()}]: "
-              f"{memory.format_bytes(mem_probe.peak_bytes)}/device "
-              f"({mem_probe.source})")
+        _log.info(f"activation stash [{stash_policy.tag()}]: "
+                  f"{memory.format_bytes(mem_probe.peak_bytes)}/device "
+                  f"({mem_probe.source})")
+        tm.sample("train.peak_activation_bytes", mem_probe.peak_bytes)
 
     data = SyntheticLM(DataConfig(
         vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
@@ -178,32 +189,40 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
     start = 0
     if ckpt_dir and resume and store.latest_step(ckpt_dir) is not None:
         start, state = store.restore(ckpt_dir, state, shardings=state_shard)
-        print(f"[train] resumed from step {start}")
+        _log.info(f"resumed from step {start}")
 
     watchdog = ft.StepWatchdog()
     history = []
     t_start = time.time()
     for step in range(start, steps):
-        batch = data.batch(step)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        t0 = time.time()
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        dur = time.time() - t0
+        # Per-step phase breakdown: one train.step span with data-load
+        # and step-fn (dispatch + the blocking loss fetch) children.
+        with tm.span("train.step", step=step):
+            with tm.span("train.data"):
+                batch = data.batch(step)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            with tm.span("train.step_fn"):
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+            dur = time.time() - t0
         watchdog.observe(step, dur)
         history.append(loss)
         if manager:
-            manager.maybe_save(step + 1, state)
+            with tm.span("train.checkpoint", step=step):
+                manager.maybe_save(step + 1, state)
         if step % log_every == 0 or step == steps - 1:
             tok_s = global_batch * seq_len / max(dur, 1e-9)
-            print(f"[train] step {step:5d} loss {loss:8.4f} "
-                  f"gnorm {float(metrics['grad_norm']):7.3f} "
-                  f"lr {float(metrics['lr']):.2e} {dur*1e3:7.1f}ms "
-                  f"({tok_s:,.0f} tok/s)")
+            _log.info(f"step {step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):7.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dur*1e3:7.1f}ms "
+                      f"({tok_s:,.0f} tok/s)")
     if manager:
         manager.maybe_save(steps, state, force=True)
         manager.close()
     wall = time.time() - t_start
+    if owns_trace:
+        tm.finalize()
     return {"losses": history, "final_loss": history[-1] if history else None,
             "wall_s": wall, "stragglers": len(watchdog.straggler_events),
             "peak_activation_bytes": (mem_probe.peak_bytes
@@ -271,6 +290,14 @@ def main() -> None:
                          "contraction sequence under every fusion x "
                          "precision x stash combo and the winning combo "
                          "overrides those flags — docs/SEARCH.md)")
+    ap.add_argument("--tnn-trace", default=None, metavar="PATH",
+                    help="write a telemetry trace of the run: '*.jsonl' "
+                         "streams events as recorded, any other suffix "
+                         "writes Chrome trace-event JSON loadable in "
+                         "Perfetto (spans for CSSE/autotune/plan "
+                         "compile/kernel dispatch and per-train-step "
+                         "phases, counters, model-vs-measured drift "
+                         "records — docs/OBSERVABILITY.md)")
     ap.add_argument("--loss-scale", type=float, default=1.0,
                     help="static loss scaling for low-precision training: "
                          "the loss is multiplied by this before backward "
@@ -320,13 +347,19 @@ def main() -> None:
                     tnn_remat=args.tnn_remat,
                     tnn_memory_budget=args.tnn_memory_budget,
                     tnn_search=args.tnn_search,
-                    loss_scale=args.loss_scale)
-        print(f"[train] done: final loss {out['final_loss']:.4f} "
-              f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")
+                    loss_scale=args.loss_scale,
+                    trace_path=args.tnn_trace)
+        _log.info(f"done: final loss {out['final_loss']:.4f} "
+                  f"in {out['wall_s']:.1f}s, stragglers={out['stragglers']}")
         return args.steps
 
-    ft.run_with_restarts(run, max_restarts=2,
-                         on_failure=lambda e: print(f"[train] RESTART: {e}"))
+    try:
+        ft.run_with_restarts(
+            run, max_restarts=2,
+            on_failure=lambda e: _log.info(f"RESTART: {e}"))
+    finally:
+        # A run that died mid-trace still flushes what it recorded.
+        tm.finalize()
 
 
 if __name__ == "__main__":

@@ -27,9 +27,28 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tm
 from repro.precision.policy import (
     QuantPolicy, amax_of, compute_scale, tile_amax,
 )
+
+
+def _observe_saturation(x: jax.Array, scale: jax.Array,
+                        policy: QuantPolicy) -> None:
+    """Count delayed-scaling saturation: a caller-provided (history-
+    derived) scale too small for this step's values means ``_cast`` is
+    about to clip.  Host telemetry can only read *eager* values — under
+    jit ``x`` is a tracer and the check is skipped, so the counter
+    reflects eager paths (tests, reference runs), which is where amax-
+    history bugs surface first."""
+    if not tm.enabled() or isinstance(x, jax.core.Tracer):
+        return
+    limit = float(jnp.max(jnp.asarray(scale, jnp.float32))) * policy.qmax
+    amax = float(jnp.max(jnp.abs(x.astype(jnp.float32))))
+    if amax > limit:
+        tm.inc("quant.amax_saturation")
+        tm.event("quant.amax_saturation", amax=amax, limit=limit,
+                 dtype=policy.dtype)
 
 
 def expand_row_scales(scale: jax.Array, rows: int) -> jax.Array:
@@ -100,6 +119,7 @@ def quantize(x: jax.Array, policy: QuantPolicy,
         scale = compute_scale(amax, policy.qmax, policy.margin)
     else:
         scale = jnp.asarray(scale, jnp.float32)
+        _observe_saturation(x, scale, policy)
     return QTensor(q=_cast(x, scale, policy), scale=scale)
 
 

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tm
 from repro.memory.planner import parse_budget
 from repro.precision.policy import QuantPolicy
 from repro.serving import kv_cache as kvq
@@ -63,6 +64,7 @@ class Request:
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float | None = None   # wall-clock hooks for the bench
+    t_admit: float | None = None
     t_first: float | None = None
     t_done: float | None = None
 
@@ -139,6 +141,7 @@ class ServeEngine:
         self.events: list[tuple[int, str, int]] = []
         self.max_occupancy = 0
         self.completed: list[Request] = []
+        self._slot_of: dict[int, int] = {}   # rid -> slot (for the trace)
 
         # prefill writes a full chunk of (masked) positions starting at a
         # slot's current length, so the buffer carries chunk-width slack —
@@ -289,6 +292,10 @@ class ServeEngine:
     def warmup(self) -> None:
         """Compile the tick functions outside the serving clock, then
         reset device state."""
+        with tm.span("serve.warmup"):
+            self._warmup()
+
+    def _warmup(self) -> None:
         B, C = self.batch, self.prefill_chunk
         key0 = self.key           # warmup must not advance the sample stream
         zl = jnp.zeros(B, jnp.int32)
@@ -316,6 +323,7 @@ class ServeEngine:
             if self.phase[slot] != FREE or self.occupancy >= self.capacity:
                 continue
             req = self.queue.popleft()
+            req.t_admit = time.monotonic()
             self.slot_req[slot] = req
             self.phase[slot] = PREFILL
             self.lengths[slot] = 0
@@ -323,12 +331,16 @@ class ServeEngine:
             self._admit_seq[slot] = self._seq
             self._seq += 1
             self.events.append((self.tick, "admit", req.rid))
+            self._slot_of[req.rid] = slot
             admitted.append(slot)
         if admitted and self._zero_fn is not None:
             mask = np.zeros(self.batch, bool)
             mask[admitted] = True
             self._set_state(self._zero_fn(self._state(), jnp.asarray(mask)))
         self.max_occupancy = max(self.max_occupancy, self.occupancy)
+        if admitted:
+            tm.inc("serve.admitted", len(admitted))
+        tm.sample("serve.occupancy", self.occupancy)
         return admitted
 
     def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
@@ -360,8 +372,42 @@ class ServeEngine:
         req.t_done = time.monotonic()
         self.completed.append(req)
         self.events.append((self.tick, "finish", req.rid))
+        self._emit_request_trace(req, slot)
         self.slot_req[slot] = None
         self.phase[slot] = FREE
+
+    def _emit_request_trace(self, req: Request, slot: int) -> None:
+        """Reconstruct the finished request's lifecycle as trace spans.
+
+        The engine keeps monotonic stamps (submit/admit/first/done); at
+        finish they are re-anchored onto the tracer clock — "now" maps
+        to now, deltas are preserved — and laid out on virtual lanes:
+        queue-wait on the shared ``queue`` lane, prefill (admission to
+        first token) and decode on the request's ``slot<n>`` lane, so
+        overlapping requests render side by side in Perfetto."""
+        if not tm.enabled() or req.t_submit is None:
+            return
+        mono, now = time.monotonic(), tm.now_us()
+
+        def at(t: float) -> float:
+            return now - (mono - t) * 1e6
+
+        lane = f"slot{slot}"
+        if req.t_admit is not None:
+            tm.complete_span("serve.queue_wait", at(req.t_submit),
+                             at(req.t_admit), lane="queue", rid=req.rid)
+            if req.t_first is not None:
+                tm.complete_span("serve.prefill", at(req.t_admit),
+                                 at(req.t_first), lane=lane, rid=req.rid,
+                                 ttft_s=req.ttft_s)
+        if req.t_first is not None:
+            tm.complete_span("serve.decode", at(req.t_first),
+                             at(req.t_done), lane=lane, rid=req.rid,
+                             tokens=len(req.out_tokens))
+        tm.inc("serve.completed")
+        tm.event("serve.request_done", rid=req.rid,
+                 tokens=len(req.out_tokens), ttft_s=req.ttft_s,
+                 total_s=req.t_done - req.t_submit)
 
     def _prefill_tick(self) -> None:
         B, C = self.batch, self.prefill_chunk
@@ -384,10 +430,13 @@ class ServeEngine:
         if not valid.any():
             return
         active = valid > 0
-        logits, state = self._extend_fn(
-            self.params, jnp.asarray(toks), self._state(),
-            jnp.asarray(self.lengths), jnp.asarray(valid),
-            jnp.asarray(active))
+        tm.inc("serve.prefill_tokens", int(valid.sum()))
+        with tm.span("serve.prefill_chunk", tick=self.tick,
+                     tokens=int(valid.sum()), slots=int(active.sum())):
+            logits, state = self._extend_fn(
+                self.params, jnp.asarray(toks), self._state(),
+                jnp.asarray(self.lengths), jnp.asarray(valid),
+                jnp.asarray(active))
         self._set_state(state)
         self.lengths[active] += valid[active]
         self.prefill_pos[active] += valid[active]
@@ -411,9 +460,12 @@ class ServeEngine:
         active = self.phase == DECODE
         if not active.any():
             return
-        logits, state = self._decode_fn(
-            self.params, jnp.asarray(self.next_tok), self._state(),
-            jnp.asarray(self.lengths), jnp.asarray(active))
+        tm.inc("serve.decode_tokens", int(active.sum()))
+        with tm.span("serve.decode_step", tick=self.tick,
+                     slots=int(active.sum())):
+            logits, state = self._decode_fn(
+                self.params, jnp.asarray(self.next_tok), self._state(),
+                jnp.asarray(self.lengths), jnp.asarray(active))
         self._set_state(state)
         self.lengths[active] += 1
         temps = np.array([self.slot_req[s].temperature if active[s] else 0.0

@@ -1,0 +1,34 @@
+"""Mirror tracer spans into ``jax.profiler.TraceAnnotation``.
+
+When a jax profiler trace is being captured (``jax.profiler.trace`` or
+TensorBoard's capture button), TraceAnnotation rows make the planning
+stack's host-side phases — CSSE stages, autotune sweeps, plan compiles —
+visible on the profiler's host timeline next to the device ops they
+caused.  The bridge is opt-in (``configure(jax_bridge=True)`` or
+``REPRO_TRACE_JAX=1``): jax has no public "is a profiler active" probe,
+and an always-on annotation would put jax imports and annotation
+overhead on the disabled-tracer fast path.  jax itself is imported
+lazily and only on the first bridged span, so the telemetry package
+stays importable (and the logger usable) in jax-free contexts.
+"""
+
+from __future__ import annotations
+
+_TraceAnnotation = None
+_import_failed = False
+
+
+def annotation(name: str):
+    """A ``TraceAnnotation`` context manager for ``name``, or None when
+    jax is unavailable (the bridge then degrades to a no-op)."""
+    global _TraceAnnotation, _import_failed
+    if _import_failed:
+        return None
+    if _TraceAnnotation is None:
+        try:
+            from jax.profiler import TraceAnnotation
+        except Exception:
+            _import_failed = True
+            return None
+        _TraceAnnotation = TraceAnnotation
+    return _TraceAnnotation(name)

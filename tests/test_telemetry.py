@@ -1,0 +1,402 @@
+"""Telemetry subsystem tests: tracer contract, exporters, and the exact
+counter guarantees the instrumented layers make.
+
+* disabled tracer is a strict no-op (shared noop span, no events, no
+  counters, no clock reads via ``now_us``);
+* spans parent correctly, including across the autotuner's measurement
+  worker thread (the explicit ``current_context``/``attach`` handoff);
+* JSONL stream -> Chrome trace-event JSON round-trips losslessly and
+  passes the structural Perfetto schema check;
+* CSSE winner-cache counters land exact values for hit / miss /
+  MODEL_VERSION-invalidation;
+* a chain kernel that refuses to lower degrades the compiled plan with
+  an exact, queryable degrade count (and still computes the right
+  answer);
+* the leveled logger keeps the historical ``[component] msg`` bytes and
+  switches to JSON under ``REPRO_LOG=json``.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import telemetry as tm
+from repro.core import autotune, csse, factorizations as F, plan_compiler
+from repro.core.plan_compiler import ChainLoweringError
+from repro.telemetry import export
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Every test starts and ends with a disabled, empty tracer and
+    zeroed module-level counters (they are process-global on purpose)."""
+    tm.reset()
+    plan_compiler.reset_degrade_counts()
+    csse.reset_cache_stats()
+    csse.clear_memo()
+    yield
+    tm.reset()
+    plan_compiler.reset_degrade_counts()
+    csse.reset_cache_stats()
+    csse.clear_memo()
+
+
+# ---------------------------------------------------------------------------
+# Tracer contract
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_is_noop():
+    assert not tm.enabled()
+    s1 = tm.span("a", x=1)
+    s2 = tm.span("b")
+    assert s1 is s2, "disabled span must be the shared no-op singleton"
+    with s1:
+        pass
+    tm.inc("some.counter", 5)
+    tm.sample("gauge", 1.0)
+    tm.event("evt", k=2)
+    tm.drift("d", predicted_s=1.0, measured_s=2.0)
+    tm.complete_span("c", 0.0, 1.0)
+    assert tm.counters() == {}
+    assert tm.snapshot() == []
+    assert tm.drift_records() == []
+    assert tm.now_us() == 0.0
+    assert tm.current_context() is None
+
+
+def test_span_nesting_and_counters():
+    tm.configure()
+    with tm.span("outer"):
+        with tm.span("inner", tag="x"):
+            tm.inc("n")
+        tm.inc("n")
+    evs = [e for e in tm.snapshot() if e["type"] == "span"]
+    # Spans record on exit: inner first, then outer.
+    inner, outer = evs
+    assert inner["name"] == "inner" and outer["name"] == "outer"
+    assert inner["parent"] == outer["id"]
+    assert outer["parent"] is None
+    assert inner["args"] == {"tag": "x"}
+    assert tm.counters() == {"n": 2}
+    assert tm.current_context() is None, "context must unwind"
+
+
+def test_span_context_restored_after_exception():
+    tm.configure()
+    with tm.span("outer"):
+        with pytest.raises(ValueError):
+            with tm.span("inner"):
+                raise ValueError("boom")
+        assert tm.current_context().name == "outer"
+
+
+def test_suspended_preserves_state():
+    tm.configure()
+    tm.inc("kept")
+    with tm.suspended():
+        assert not tm.enabled()
+        tm.inc("dropped")
+    assert tm.enabled()
+    assert tm.counters() == {"kept": 1}
+
+
+def test_autotune_worker_thread_span_parenting(tmp_path):
+    """The sweep span recorded on the tuner's worker thread must parent
+    under the caller's span — the current_context/attach handoff."""
+    tm.configure()
+    tuner = autotune.Tuner(cache_dir=str(tmp_path))
+    with tm.span("caller") as caller:
+        tuner.record(autotune.StepShape("gemm", (8, 16, 4)))
+        caller_id = caller.span_id
+    spans = {e["name"]: e for e in tm.snapshot() if e["type"] == "span"}
+    sweep = spans["autotune.sweep"]
+    assert sweep["parent"] == caller_id
+    assert sweep["tid"] != spans["caller"]["tid"], (
+        "sweep runs on the worker thread, so it must land on its own lane"
+    )
+    assert tm.counters()["autotune.measured"] == 1
+    assert tm.drift_records(), "a measured sweep must emit a drift record"
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+
+def _emit_one_of_each():
+    with tm.span("parent"):
+        with tm.span("child", k=1):
+            pass
+    tm.inc("hits", 3)
+    tm.sample("occupancy", 2.0)
+    tm.event("mark", rid=7)
+    tm.drift("model", predicted_s=0.5, measured_s=1.5, kind="gemm")
+    tm.complete_span("lifecycle", 10.0, 20.0, lane="slot0", rid=7)
+
+
+def test_jsonl_to_chrome_round_trip(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    tm.configure(path)
+    _emit_one_of_each()
+    tm.finalize()
+
+    events = export.load_trace(path)
+    kinds = [e["type"] for e in events]
+    assert kinds.count("span") == 3
+    assert "counters" in kinds and "drift" in kinds and "instant" in kinds
+
+    chrome = export.to_chrome(events, thread_names={0: "main"})
+    assert export.validate_chrome(chrome) == []
+    phases = [e["ph"] for e in chrome["traceEvents"]]
+    assert phases.count("X") == 3
+    assert "C" in phases and "M" in phases
+
+    back = export.from_chrome(chrome)
+    spans = {e["name"]: e for e in back if e["type"] == "span"}
+    assert spans["child"]["parent"] == spans["parent"]["id"]
+    assert spans["child"]["args"] == {"k": 1}
+    assert spans["lifecycle"]["args"]["rid"] == 7
+    (drift,) = [e for e in back if e["type"] == "drift"]
+    assert drift["predicted_s"] == 0.5 and drift["measured_s"] == 1.5
+    assert drift["args"] == {"kind": "gemm"}
+    # The finalize counter snapshot survives as per-name counter samples.
+    assert {e["name"]: e["value"] for e in back if e["type"] == "counter"}["hits"] == 3
+
+
+def test_chrome_file_output_validates(tmp_path):
+    path = str(tmp_path / "trace.json")
+    tm.configure(path)
+    _emit_one_of_each()
+    tm.finalize()
+    with open(path) as f:
+        obj = json.load(f)
+    assert export.validate_chrome(obj) == []
+    names = {e["args"]["name"] for e in obj["traceEvents"] if e["ph"] == "M"}
+    assert "slot0" in names, "virtual lanes must be named for Perfetto"
+    assert export.load_trace(path), "Chrome files load back as events"
+
+
+def test_validate_chrome_catches_violations():
+    bad = {
+        "traceEvents": [
+            {"ph": "Z", "name": "x", "ts": 0, "pid": 1, "tid": 0},
+            {"ph": "X", "name": "y", "ts": -1, "pid": 1, "tid": 0},
+            {"ph": "X", "name": "", "ts": 0, "pid": 1, "tid": 0, "dur": 1},
+        ],
+    }
+    errors = export.validate_chrome(bad)
+    assert len(errors) >= 3
+
+
+def test_trace_report_renders(tmp_path):
+    from repro.analysis import trace_report
+
+    path = str(tmp_path / "trace.json")
+    tm.configure(path)
+    _emit_one_of_each()
+    tm.finalize()
+    events = export.load_trace(path)
+    rows = trace_report.phase_table(events)
+    assert {r["name"] for r in rows} == {"parent", "child", "lifecycle"}
+    assert trace_report.counter_values(events)["hits"] == 3
+    (drift,) = trace_report.drift_summary(events)
+    assert drift["name"] == "model" and drift["count"] == 1
+    assert drift["geomean_ratio"] == pytest.approx(3.0)
+    lines = []
+    trace_report.render(events, print_fn=lines.append)
+    assert any("lifecycle" in line for line in lines)
+    assert any("model" in line for line in lines)
+
+
+# ---------------------------------------------------------------------------
+# CSSE winner-cache counters
+# ---------------------------------------------------------------------------
+
+
+def _net():
+    fact = F.tt((4, 4), (4, 4), 4)
+    return fact.forward_network(batch_axes=(("b", 8),))
+
+
+OPTS = csse.SearchOptions(objective="edp")
+
+
+def test_cache_counters_exact(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CSSE_CACHE", str(tmp_path))
+    tm.configure()
+
+    first = csse.search(_net(), OPTS)
+    assert first.stats["cache_stats"] == {
+        "memo_hits": 0,
+        "disk_hits": 0,
+        "misses": 1,
+        "invalidations": 0,
+    }
+
+    second = csse.search(_net(), OPTS)
+    assert second.stats["cache_stats"]["memo_hits"] == 1
+
+    csse.clear_memo()
+    third = csse.search(_net(), OPTS)
+    assert third.stats["cache_stats"]["disk_hits"] == 1
+
+    assert csse.CACHE_STATS == {
+        "memo_hits": 1,
+        "disk_hits": 1,
+        "misses": 1,
+        "invalidations": 0,
+    }
+    counters = tm.counters()
+    assert counters["csse.cache.misses"] == 1
+    assert counters["csse.cache.memo_hits"] == 1
+    assert counters["csse.cache.disk_hits"] == 1
+    assert "csse.cache.invalidations" not in counters
+
+
+def test_model_version_invalidates_memo_and_disk(tmp_path, monkeypatch):
+    from repro.core import perf_model
+
+    monkeypatch.setenv("REPRO_CSSE_CACHE", str(tmp_path))
+    tm.configure()
+
+    csse.search(_net(), OPTS)
+    assert csse.CACHE_STATS["misses"] == 1
+
+    # A model-semantics bump invalidates BOTH stale entries on the next
+    # search: the in-process memo one, then the disk file it falls
+    # through to (each ranked under the old version).
+    monkeypatch.setattr(perf_model, "MODEL_VERSION", perf_model.MODEL_VERSION + 1)
+    res = csse.search(_net(), OPTS)
+    assert csse.CACHE_STATS["invalidations"] == 2
+    assert csse.CACHE_STATS["misses"] == 2
+    assert res.stats["cache_stats"]["invalidations"] == 2
+
+    # The fresh search rewrote the disk entry under the new version:
+    # another bump plus a cleared memo exercises the disk-only path.
+    monkeypatch.setattr(perf_model, "MODEL_VERSION", perf_model.MODEL_VERSION + 1)
+    csse.clear_memo()
+    csse.search(_net(), OPTS)
+    assert csse.CACHE_STATS["invalidations"] == 3
+    assert tm.counters()["csse.cache.invalidations"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Chain-degrade accounting
+# ---------------------------------------------------------------------------
+
+
+def _chain_plan():
+    fact = F.tt((16,), (16,), 8)
+    net = fact.forward_network(batch_axes=(("b", 64),))
+    plan = csse.search(net, csse.SearchOptions(fused_chain=True)).plan
+    arrays = [
+        jax.random.normal(jax.random.key(i), net.node_shape(i), jnp.float32)
+        for i in range(net.num_nodes)
+    ]
+    return plan, arrays
+
+
+def _refuse(*args, **kwargs):
+    raise ChainLoweringError("test kernel refuses every chain")
+
+
+def test_runtime_chain_degrade_exact_count(monkeypatch):
+    plan, arrays = _chain_plan()
+    compiled = plan_compiler.compile_plan(plan)
+    num_chain = compiled.report()["num_chain"]
+    assert num_chain >= 1
+    want = plan_compiler.run(compiled, arrays)
+
+    tm.configure()
+    monkeypatch.setattr(plan_compiler, "chain_n_pallas", _refuse)
+    got = plan_compiler.run(compiled, arrays)
+
+    assert plan_compiler.DEGRADE_COUNTS["runtime"] == num_chain
+    assert plan_compiler.DEGRADE_COUNTS["compile"] == 0
+    assert tm.counters()["plan_compiler.chain_degrade.runtime"] == num_chain
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+    # Every occurrence is counted: a second run doubles the figure.
+    plan_compiler.run(compiled, arrays)
+    assert plan_compiler.DEGRADE_COUNTS["runtime"] == 2 * num_chain
+    assert tm.counters()["plan_compiler.chain_degrade.runtime"] == 2 * num_chain
+
+
+def test_compile_chain_degrade_exact_count(monkeypatch):
+    plan, arrays = _chain_plan()
+    num_chain = plan_compiler.compile_plan(plan).report()["num_chain"]
+    assert num_chain >= 1
+
+    tm.configure()
+    monkeypatch.setattr(plan_compiler, "_build_chain", _refuse)
+    compiled = plan_compiler.compile_plan(plan)
+
+    assert compiled.report()["num_chain"] == 0
+    assert plan_compiler.DEGRADE_COUNTS["compile"] == num_chain
+    assert tm.counters()["plan_compiler.chain_degrade.compile"] == num_chain
+    want = plan_compiler.run(plan_compiler.compile_plan(plan, fuse=False), arrays)
+    got = plan_compiler.run(compiled, arrays)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_degrade_counts_without_tracer(monkeypatch):
+    """DEGRADE_COUNTS must count even with telemetry disabled — silent
+    degrades are the failure mode this PR exists to kill."""
+    plan, arrays = _chain_plan()
+    compiled = plan_compiler.compile_plan(plan)
+    num_chain = compiled.report()["num_chain"]
+    monkeypatch.setattr(plan_compiler, "chain_n_pallas", _refuse)
+    assert not tm.enabled()
+    plan_compiler.run(compiled, arrays)
+    assert plan_compiler.DEGRADE_COUNTS["runtime"] == num_chain
+    assert tm.counters() == {}
+
+
+# ---------------------------------------------------------------------------
+# Leveled logger
+# ---------------------------------------------------------------------------
+
+
+def test_logger_default_format_is_byte_identical(capsys, monkeypatch):
+    monkeypatch.delenv("REPRO_LOG", raising=False)
+    tm.get_logger("train").info("step 3 loss 1.25")
+    assert capsys.readouterr().out == "[train] step 3 loss 1.25\n"
+
+
+def test_logger_json_mode(capsys, monkeypatch):
+    monkeypatch.setenv("REPRO_LOG", "json")
+    tm.get_logger("serve").info("request done")
+    rec = json.loads(capsys.readouterr().out)
+    assert rec["component"] == "serve"
+    assert rec["level"] == "info"
+    assert rec["msg"] == "request done"
+
+
+def test_logger_level_threshold(capsys, monkeypatch):
+    monkeypatch.setenv("REPRO_LOG", "warn")
+    log = tm.get_logger("train")
+    log.info("hidden")
+    log.warn("shown")
+    out = capsys.readouterr().out
+    assert "hidden" not in out
+    assert out == "[train] WARN: shown\n"
+
+
+def test_warn_once_mirrors_into_trace(capsys, monkeypatch):
+    monkeypatch.delenv("REPRO_LOG", raising=False)
+    tm.configure()
+    log = tm.get_logger("plan_compiler")
+    log.warn_once("key", "degraded")
+    log.warn_once("key", "degraded")
+    out = capsys.readouterr().out
+    assert out.count("WARN") == 1
+    events = [e for e in tm.snapshot() if e["type"] == "instant"]
+    assert len(events) == 1 and events[0]["name"] == "log.warn"
