@@ -99,6 +99,29 @@ rows.append({
                                              pm.TPU_V5E).bytes_ici,
     "devices": jax.device_count(),
 })
+
+# Pipeline bubble: 1F1B staged execution on this mesh, modeled (S-1)/(M+S-1)
+# vs measured idle fraction (docs/DISTRIBUTED.md).  The report is the best
+# warm step (per-stage jits compile on step 0); the drift also rides the
+# telemetry drift channel, counted here so the record's presence is gated.
+from repro import telemetry as tm
+from repro.distributed import pipeline as pipe
+tm.configure()
+prep = pipe._demo_report(2, 4, 4)["report"]
+ndrift = len([r for r in tm.drift_records()
+              if r["name"] == "pipeline.bubble"])
+rows.append({
+    "name": "sharded/pipeline/bubble",
+    "wall_s": prep["makespan_s"],
+    "fusion_hit_rate": None,
+    "num_stages": prep["num_stages"],
+    "num_microbatches": prep["num_microbatches"],
+    "modeled_bubble": prep["modeled_bubble"],
+    "measured_bubble": prep["measured_bubble"],
+    "bubble_drift": prep["drift"],
+    "drift_records": ndrift,
+    "devices": jax.device_count(),
+})
 print("ROWS=" + json.dumps(rows))
 """
 
@@ -124,6 +147,14 @@ def run(print_fn=print) -> list[dict]:
                 f"ici={r['collective_bytes']}B "
                 f"exec={r['wall_s']*1e3:.2f}ms "
                 f"parity={r['parity_rel_err']:.1e}")
+        elif "bubble_drift" in r:
+            print_fn(
+                f"{r['name']}: S={r['num_stages']} "
+                f"M={r['num_microbatches']} "
+                f"modeled={r['modeled_bubble']:.3f} "
+                f"measured={r['measured_bubble']:.3f} "
+                f"drift={r['bubble_drift']:.2f}x "
+                f"({r['drift_records']} drift records)")
         else:
             print_fn(f"{r['name']}: {r['policy_free']} -> "
                      f"{r['policy_aware']} "
@@ -148,6 +179,19 @@ def validate(rows) -> list[str]:
         if r["devices"] != 8:
             failures.append(f"{r['name']}: ran on {r['devices']} devices, "
                             "expected 8")
+    bubble = next((r for r in rows if "bubble_drift" in r), None)
+    if bubble is None:
+        failures.append("no pipeline bubble record")
+    else:
+        d = bubble["bubble_drift"]
+        if max(d, 1.0 / max(d, 1e-9)) > 1.5:
+            failures.append(
+                f"pipeline bubble drift {d:.2f}x outside the 1.5x gate "
+                f"(modeled {bubble['modeled_bubble']:.3f}, measured "
+                f"{bubble['measured_bubble']:.3f})")
+        if bubble["drift_records"] < 1:
+            failures.append("pipeline step emitted no pipeline.bubble "
+                            "telemetry drift record")
     policy = next(r for r in rows if r["name"].endswith("wg-policy"))
     if (policy["policy_free"], policy["policy_aware"]) != \
             ("shared", "indep"):

@@ -29,6 +29,8 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro import telemetry as tm
+
 # npz cannot round-trip non-native dtypes (bfloat16, fp8): store them as
 # uint views and restore by viewing back, driven by the template's dtype.
 _VIEW_AS = {np.dtype(ml_dtypes.bfloat16): np.uint16}
@@ -64,6 +66,10 @@ def save(root: str, step: int, state, *, extra: dict | None = None) -> str:
         "treedef": str(jax.tree_util.tree_structure(state)),
         "shapes": [list(np.shape(x)) for x in leaves],
         "dtypes": [str(np.asarray(jax.device_get(x)).dtype) for x in leaves],
+        # elastic-restore provenance: restore() compares these against the
+        # restoring topology and flags the mesh change (docs/DISTRIBUTED.md)
+        "device_count": jax.device_count(),
+        "process_count": jax.process_count(),
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "meta.json"), "w") as f:
@@ -100,6 +106,15 @@ def restore(root: str, like, *, step: int | None = None,
     path = os.path.join(root, f"step_{step:08d}")
     assert os.path.exists(os.path.join(path, "COMMITTED")), (
         f"checkpoint {path} is not committed")
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            saved_devices = json.load(f).get("device_count")
+    except (OSError, ValueError):
+        saved_devices = None  # pre-elastic checkpoints carry no topology
+    if saved_devices is not None and saved_devices != jax.device_count():
+        tm.event("checkpoint.elastic_restore", step=step,
+                 saved_devices=saved_devices,
+                 restore_devices=jax.device_count())
     data = np.load(os.path.join(path, f"shard_{jax.process_index():05d}.npz"))
     leaves, treedef = _flatten(like)
     out = []

@@ -1,3 +1,12 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The contraction planning stack — the paper's primary contribution.
+
+Tensor networks and factorizations (:mod:`~repro.core.tnetwork`,
+:mod:`~repro.core.factorizations`), the two-stage CSSE sequence search
+(:mod:`~repro.core.csse`), the analytic cost model
+(:mod:`~repro.core.perf_model`), plan execution and kernel lowering
+(:mod:`~repro.core.contraction`, :mod:`~repro.core.plan_compiler`),
+measurement-driven tuning (:mod:`~repro.core.autotune`), the unified
+:class:`~repro.core.policy.ExecutionPolicy`, and the joint cross-layer
+plan search (:mod:`~repro.core.search`).  Narrative:
+docs/ARCHITECTURE.md and docs/SEARCH.md.
+"""

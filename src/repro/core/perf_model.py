@@ -122,6 +122,84 @@ FETTA_EDGE = HardwareModel(
 
 
 # ---------------------------------------------------------------------------
+# Pipeline spec — the bubble + stage-boundary term of staged execution
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    """How a layer stack is cut into pipeline stages, for costing.
+
+    The pure-Python mirror of the 1F1B executor
+    (``repro.distributed.pipeline``), one level above :class:`MeshSpec`:
+    the mesh splits one contraction across devices, the pipeline splits
+    the *stack* across stage groups.  ``interconnect`` selects the
+    boundary-activation bandwidth — ``"ici"`` for stages within one pod
+    slice, ``"dcn"`` for the cross-host hop (``dcn_bw``), which is what
+    makes deeper pipelines the planner's answer to topologies whose
+    cross-host links are too slow for flat data-parallel all-reduces.
+    """
+
+    num_stages: int = 1
+    num_microbatches: int = 1
+    interconnect: str = "ici"      # "ici" | "dcn"
+    dcn_bw: float = 25e9           # cross-host bytes/s (v5e pod DCN-class)
+
+    def __post_init__(self):
+        if self.num_stages < 1:
+            raise ValueError(f"num_stages must be >= 1, got "
+                             f"{self.num_stages}")
+        if self.num_microbatches < 1:
+            raise ValueError(f"num_microbatches must be >= 1, got "
+                             f"{self.num_microbatches}")
+        if self.interconnect not in ("ici", "dcn"):
+            raise ValueError(f"interconnect must be 'ici' or 'dcn', got "
+                             f"{self.interconnect!r}")
+
+    def bubble_fraction(self) -> float:
+        """Modeled 1F1B fill+drain idle fraction: ``(S-1)/(M+S-1)``."""
+        return ((self.num_stages - 1)
+                / (self.num_microbatches + self.num_stages - 1))
+
+    def boundary_bw(self, hw: "HardwareModel") -> float:
+        return hw.ici_bw if self.interconnect == "ici" else self.dcn_bw
+
+    def signature_payload(self) -> tuple:
+        """Hash-stable tuple for disk-cache keys (csse/autotune)."""
+        return (self.num_stages, self.num_microbatches, self.interconnect,
+                self.dcn_bw)
+
+
+def pipeline_latency(base_s: float, act_bytes: int,
+                     pipe: "PipelineSpec | None",
+                     hw: "HardwareModel") -> float:
+    """Makespan of one step under pipeline parallelism.
+
+    ``base_s`` is the unpipelined whole-step latency (every per-plan term
+    the rest of this model already prices); ``act_bytes`` the boundary
+    activation a stage sends downstream per *global* batch.  Each of the
+    ``S`` stages works ``base_s / (S*M)`` per microbatch (the stack
+    divides across stage devices) plus the boundary send at
+    :meth:`PipelineSpec.boundary_bw` and one dispatch overhead, and 1F1B
+    fills/drains ``S-1`` extra slots::
+
+        makespan = (M + S - 1) * (base_s/(S*M) + act_bytes/(M*bw) + o)
+
+    so the returned latency embeds exactly
+    :meth:`PipelineSpec.bubble_fraction` of idle time — letting the joint
+    search trade stage-division gains against bubble + boundary traffic
+    (docs/DISTRIBUTED.md derives the tradeoff).
+    """
+    if pipe is None or pipe.num_stages <= 1:
+        return base_s
+    s, m = pipe.num_stages, pipe.num_microbatches
+    per_slot = (base_s / (s * m)
+                + (act_bytes / m) / pipe.boundary_bw(hw)
+                + hw.step_overhead_s)
+    return (m + s - 1) * per_slot
+
+
+# ---------------------------------------------------------------------------
 # Mesh spec — the pure-Python mirror of a jax device mesh
 # ---------------------------------------------------------------------------
 

@@ -68,7 +68,7 @@ class PolicyError(ValueError):
 def _validate(owner: str, *, objective, num_candidates, engine,
               dfs_max_nodes, mesh, precision, stash, memory_budget,
               tile_sweep, sweep_strategy, phase,
-              max_chain_len=2) -> None:
+              max_chain_len=2, pipeline=None) -> None:
     """Shared validator — ExecutionPolicy and the SearchOptions shim both
     funnel through here so the two surfaces can never drift."""
     def err(name, msg):
@@ -112,6 +112,10 @@ def _validate(owner: str, *, objective, num_candidates, engine,
     if not isinstance(max_chain_len, int) or max_chain_len < 2:
         err("max_chain_len", f"must be an int >= 2 (2 = historical "
             f"pairwise fusion), got {max_chain_len!r}")
+    if pipeline is not None and not isinstance(pipeline,
+                                               perf_model.PipelineSpec):
+        err("pipeline", f"expected a perf_model.PipelineSpec or None, "
+            f"got {type(pipeline).__name__}")
 
 
 @dataclass(frozen=True)
@@ -132,6 +136,9 @@ class ExecutionPolicy:
       swept (``full`` exhaustive vs ``halving`` successive-halving).
     * **mesh** — ``mesh``: the pure :class:`perf_model.MeshSpec` mirror
       stage 2 prices collectives against.
+    * **pipeline** — ``pipeline``: the :class:`perf_model.PipelineSpec`
+      mirror of 1F1B staged execution (None = unpipelined); stage 2 adds
+      the bubble + stage-boundary term for it.
     * **precision** — ``precision``: the :class:`QuantPolicy` both
       executors run under and every byte term reprices at.
     * **memory** — ``stash`` (fwd->bwd activation residual policy) and
@@ -156,6 +163,9 @@ class ExecutionPolicy:
     measure_dtype: str = "float32"
     # mesh axis
     mesh: perf_model.MeshSpec | None = None
+    # pipeline axis (None = unpipelined; a PipelineSpec prices the 1F1B
+    # bubble + stage-boundary traffic into every stage-2 objective)
+    pipeline: perf_model.PipelineSpec | None = None
     # precision axis
     precision: QuantPolicy = field(default_factory=QuantPolicy)
     # memory axis
@@ -172,7 +182,8 @@ class ExecutionPolicy:
                   memory_budget=self.memory_budget,
                   tile_sweep=self.tile_sweep,
                   sweep_strategy=self.sweep_strategy, phase=self.phase,
-                  max_chain_len=self.max_chain_len)
+                  max_chain_len=self.max_chain_len,
+                  pipeline=self.pipeline)
 
     # -- derived ------------------------------------------------------------
 
@@ -210,6 +221,10 @@ class ExecutionPolicy:
                if self.max_chain_len != 2 else {}),
             "mesh": (None if self.mesh is None
                      else list(self.mesh.signature_payload())),
+            # Unpipelined (the historical default) hashes as the absent
+            # key, so pre-pipeline cache entries stay valid.
+            **({"pipeline": list(self.pipeline.signature_payload())}
+               if self.pipeline is not None else {}),
             # bf16 hashes as None: byte-identical to the historical
             # unquantized path, so pre-policy cache entries stay valid.
             "precision": (None if not self.precision.quantized
@@ -240,6 +255,12 @@ class ExecutionPolicy:
             "sweep_strategy": self.sweep_strategy,
             "measure_dtype": self.measure_dtype,
             "mesh": None,
+            "pipeline": (None if self.pipeline is None else {
+                "num_stages": self.pipeline.num_stages,
+                "num_microbatches": self.pipeline.num_microbatches,
+                "interconnect": self.pipeline.interconnect,
+                "dcn_bw": self.pipeline.dcn_bw,
+            }),
             "precision": {
                 "dtype": self.precision.dtype,
                 "granularity": self.precision.granularity,
@@ -270,6 +291,14 @@ class ExecutionPolicy:
                 axis_sharding=tuple((a, tuple(ax)) for a, ax
                                     in m.get("axis_sharding", [])),
                 device_kind=m.get("device_kind", "unknown"))
+        pipe = None
+        if d.get("pipeline") is not None:
+            pp = d["pipeline"]
+            pipe = perf_model.PipelineSpec(
+                num_stages=int(pp.get("num_stages", 1)),
+                num_microbatches=int(pp.get("num_microbatches", 1)),
+                interconnect=pp.get("interconnect", "ici"),
+                dcn_bw=float(pp.get("dcn_bw", 25e9)))
         p = d.get("precision") or {}
         return cls(
             objective=d.get("objective", "edp"),
@@ -285,6 +314,7 @@ class ExecutionPolicy:
             sweep_strategy=d.get("sweep_strategy", "full"),
             measure_dtype=d.get("measure_dtype", "float32"),
             mesh=mesh,
+            pipeline=pipe,
             precision=QuantPolicy(
                 dtype=p.get("dtype", "bf16"),
                 granularity=p.get("granularity", "tensor"),

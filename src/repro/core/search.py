@@ -333,24 +333,44 @@ class SearchSpace:
     #: alone can misrank sequences whose fusable runs are longer than 2,
     #: which is why 3 rides in the default space.
     chain_lens: tuple[int, ...] = (2, 3)
+    #: pipeline stage counts (1 = unpipelined, the default space so the
+    #: historical combos are unchanged).  Widening this lets the joint
+    #: loop co-choose (mesh topology x stage count x sequence): every
+    #: candidate's objective gains the 1F1B bubble + stage-boundary term
+    #: (perf_model.pipeline_latency), so deeper pipelines win only when
+    #: stage division beats the bubble at the base policy's microbatch
+    #: count and interconnect.
+    pipeline_stages: tuple[int, ...] = (1,)
+
+    def _pipe(self, base: ExecutionPolicy, stages: int):
+        """The PipelineSpec for a combo: None stays None at 1 stage (the
+        historical signature), otherwise the base spec re-staged."""
+        if stages == 1 and base.pipeline is None:
+            return None
+        return dataclasses.replace(
+            base.pipeline or perf_model.PipelineSpec(),
+            num_stages=stages)
 
     def combos(self, base: ExecutionPolicy):
-        for f in self.fused:
-            lens = self.chain_lens if f else self.chain_lens[:1]
-            for ln in lens:
-                for p in self.precisions:
-                    for s in self.stashes:
-                        yield dataclasses.replace(
-                            base, fused_chain=f, max_chain_len=ln,
-                            precision=QuantPolicy.parse(p),
-                            stash=StashPolicy.parse(s))
+        for ps in self.pipeline_stages:
+            for f in self.fused:
+                lens = self.chain_lens if f else self.chain_lens[:1]
+                for ln in lens:
+                    for p in self.precisions:
+                        for s in self.stashes:
+                            yield dataclasses.replace(
+                                base, fused_chain=f, max_chain_len=ln,
+                                precision=QuantPolicy.parse(p),
+                                stash=StashPolicy.parse(s),
+                                pipeline=self._pipe(base, ps))
 
     def default_policy(self, base: ExecutionPolicy) -> ExecutionPolicy:
         return dataclasses.replace(
             base, fused_chain=self.fused[0],
             max_chain_len=self.chain_lens[0],
             precision=QuantPolicy.parse(self.precisions[0]),
-            stash=StashPolicy.parse(self.stashes[0]))
+            stash=StashPolicy.parse(self.stashes[0]),
+            pipeline=self._pipe(base, self.pipeline_stages[0]))
 
 
 @dataclass
@@ -395,6 +415,16 @@ def _score(net: TensorNetwork, plan: ContractionPlan,
     (memory budget exceeded by plan peak + stash) scores ``inf``."""
     base_s = model_plan_latency(plan, policy, model=model, hw=hw)
     pen_s, stash_b = stash_overhead(net, policy, hw, replay_s=base_s)
+    if policy.pipeline is not None:
+        # 1F1B term: divide the (unpipelined) plan latency across stages,
+        # pay the bubble and the boundary-activation transfer.  Boundary
+        # bytes = this network's output activation at the storage width,
+        # consistent with stash_overhead above.
+        act_elems = 1
+        for a in net.output:
+            act_elems *= net.sizes[a]
+        base_s = perf_model.pipeline_latency(
+            base_s, act_elems * hw.dtype_bytes, policy.pipeline, hw)
     if policy.memory_budget is not None:
         quant = policy.quant_policy
         qhw = perf_model.apply_policy(hw, quant)

@@ -1,1 +1,18 @@
-"""distributed subpackage."""
+"""Distributed execution: SPMD sharding, 1F1B pipeline stages, fault
+tolerance (docs/DISTRIBUTED.md).
+
+The three scale axes the training stack composes:
+
+* :mod:`~repro.distributed.sharding` — mesh placement rules
+  (parameters, batch, contraction operands) and the ``shard_map``
+  lowering of CSSE plans with one deferred ``psum``; driven by
+  ``--tnn-mesh`` (docs/SHARDING.md).
+* :mod:`~repro.distributed.pipeline` — 1F1B pipeline-parallel execution
+  of the layer stack: stage partitioning, the microbatch schedule, and
+  the modeled-vs-measured bubble report on the telemetry drift channel;
+  driven by ``--tnn-pipeline``.
+* :mod:`~repro.distributed.fault_tolerance` — step watchdog, straggler
+  detection, and the restart supervisor that re-meshes onto the devices
+  actually present and restores the last committed checkpoint
+  (elastic restore lives in ``repro.checkpoint.store``).
+"""

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the contraction hot path (docs/ARCHITECTURE.md,
+docs/MEGAKERNEL.md).
+
+MXU-tiled GEMMs with fused operand transpose, N-step on-chip contraction
+chains (``chain_n_pallas``), and the quantized (fp8/int8, scaled-epilogue)
+variants — reached through :mod:`repro.core.plan_compiler`, never called
+directly by model code.  :mod:`~repro.kernels.compat` shims the Pallas
+API surface across supported jax versions; interpret mode keeps every
+kernel CPU-runnable.
+"""

@@ -47,6 +47,7 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
           tnn_remat: str | None = None,
           tnn_memory_budget=None,
           tnn_search: str = "per-axis",
+          tnn_pipeline: int | None = None,
           loss_scale: float = 1.0,
           trace_path: str | None = None) -> dict:
     # --tnn-trace: enable the telemetry tracer for this run (unless the
@@ -179,10 +180,33 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
     state = jax.device_put(state, state_shard)
     bspec = NamedSharding(mesh, sharding.batch_spec(mesh))
 
-    step_fn = jax.jit(
-        steps_lib.make_train_step(model, opt, shard,
-                                  microbatches=microbatches),
-        in_shardings=(state_shard, None), donate_argnums=0)
+    pipe_step = None
+    if tnn_pipeline is not None and tnn_pipeline > 1:
+        # --tnn-pipeline: 1F1B staged execution of the layer stack
+        # (docs/DISTRIBUTED.md).  The pipeline step is eager orchestration
+        # over per-stage jits — same (state, batch) -> (state, metrics)
+        # contract, so the loop below is unchanged; each step additionally
+        # records a modeled-vs-measured bubble report through the
+        # telemetry drift channel.
+        from repro.distributed import pipeline as pipe_lib
+        if not hasattr(model, "apply_layers"):
+            raise SystemExit(
+                f"--tnn-pipeline: arch {arch_id!r} ({type(model).__name__}) "
+                f"has no stage-partitionable layer stack")
+        mb = max(microbatches, tnn_pipeline)
+        if mb != microbatches:
+            _log.info(f"pipeline: raising microbatches {microbatches} -> "
+                      f"{mb} (>= stages keeps the 1F1B bubble bounded)")
+            microbatches = mb
+        pipe_step = pipe_lib.make_pipeline_train_step(
+            model, opt, shard, num_stages=tnn_pipeline,
+            microbatches=microbatches)
+        step_fn = pipe_step
+    else:
+        step_fn = jax.jit(
+            steps_lib.make_train_step(model, opt, shard,
+                                      microbatches=microbatches),
+            in_shardings=(state_shard, None), donate_argnums=0)
 
     manager = (CheckpointManager(ckpt_dir, every=ckpt_every)
                if ckpt_dir else None)
@@ -229,6 +253,9 @@ def train(arch_id: str, *, smoke: bool, tnn: bool, steps: int,
                                       if mem_probe else None),
             "peak_source": mem_probe.source if mem_probe else None,
             "microbatches": microbatches,
+            "pipeline_bubble": (pipe_step.last_report.to_json()
+                                if pipe_step and pipe_step.last_report
+                                else None),
             "state": state}
 
 
@@ -290,6 +317,15 @@ def main() -> None:
                          "contraction sequence under every fusion x "
                          "precision x stash combo and the winning combo "
                          "overrides those flags — docs/SEARCH.md)")
+    ap.add_argument("--tnn-pipeline", type=int, default=None,
+                    metavar="STAGES",
+                    help="pipeline-parallel execution of the layer stack: "
+                         "partition into STAGES contiguous stages and "
+                         "stream microbatches through them under the 1F1B "
+                         "schedule; raises --microbatches to at least "
+                         "STAGES, and each step reports modeled-vs-"
+                         "measured pipeline bubble through the telemetry "
+                         "drift channel (docs/DISTRIBUTED.md)")
     ap.add_argument("--tnn-trace", default=None, metavar="PATH",
                     help="write a telemetry trace of the run: '*.jsonl' "
                          "streams events as recorded, any other suffix "
@@ -332,6 +368,11 @@ def main() -> None:
     if args.tnn_search != "per-axis" and not args.tnn:
         ap.error("--tnn-search requires --tnn (no tensorized plans to "
                  "search without it)")
+    if args.tnn_pipeline is not None and not args.tnn:
+        ap.error("--tnn-pipeline requires --tnn (the staged path "
+                 "partitions the tensorized layer stack)")
+    if args.tnn_pipeline is not None and args.tnn_pipeline < 1:
+        ap.error("--tnn-pipeline must be >= 1")
 
     def run(start_step: int) -> int:
         out = train(args.arch, smoke=args.smoke, tnn=args.tnn,
@@ -347,6 +388,7 @@ def main() -> None:
                     tnn_remat=args.tnn_remat,
                     tnn_memory_budget=args.tnn_memory_budget,
                     tnn_search=args.tnn_search,
+                    tnn_pipeline=args.tnn_pipeline,
                     loss_scale=args.loss_scale,
                     trace_path=args.tnn_trace)
         _log.info(f"done: final loss {out['final_loss']:.4f} "

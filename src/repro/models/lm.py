@@ -273,13 +273,20 @@ class LM:
 
     # -- full-sequence forward (training) --------------------------------------
 
-    def __call__(self, params: dict, inputs: jax.Array,
-                 shard: Shard = no_shard) -> tuple[jax.Array, dict]:
-        """inputs: [B, T] ids or [B, T, D] embeds -> (logits [B,T,V], aux)."""
+    def apply_layers(self, layers: dict, x: jax.Array, positions: jax.Array,
+                     shard: Shard = no_shard) -> tuple[jax.Array, dict]:
+        """Run a contiguous slice of the homogeneous layer stack.
+
+        ``layers`` is a stacked ``[L', ...]`` pytree — the full
+        ``params["layers"]`` in :meth:`__call__`, or a stage's slice of it
+        under pipeline parallelism (``repro.distributed.pipeline``).  The
+        scan/remat/remat-group lowering is identical either way, so a
+        partitioned stack computes the same per-layer values as the
+        monolithic forward.  Hybrid (shared-block) stacks interleave
+        non-stack params and stay in :meth:`__call__`.
+        """
         c = self.cfg
-        B, T = inputs.shape[:2]
-        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-        x = self._embed(params, inputs, shard)
+        n = jax.tree.leaves(layers)[0].shape[0]
 
         def layer_fn(x, lp):
             if c.block == "attn":
@@ -292,20 +299,9 @@ class LM:
             layer_fn = jax.checkpoint(
                 layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
 
-        if c.hybrid:
-            g = c.hybrid.shared_every
-            n_groups = c.num_layers // g
-            grouped = jax.tree.map(
-                lambda p: p.reshape((n_groups, g) + p.shape[1:]),
-                params["layers"])
-            for gi in range(n_groups):
-                gp = jax.tree.map(lambda p: p[gi], grouped)
-                x, _ = jax.lax.scan(layer_fn, x, gp)
-                x = self._shared_block(params["shared"], x, positions, shard)
-            aux = {}
-        elif c.scan_layers:
+        if c.scan_layers:
             g = max(1, c.remat_group)
-            if g > 1 and c.num_layers % g == 0:
+            if g > 1 and n % g == 0:
                 def group_fn(x, gp):
                     aux = None
                     for li in range(g):
@@ -317,19 +313,47 @@ class LM:
                         group_fn,
                         policy=jax.checkpoint_policies.nothing_saveable)
                 grouped = jax.tree.map(
-                    lambda p: p.reshape((c.num_layers // g, g) + p.shape[1:]),
-                    params["layers"])
+                    lambda p: p.reshape((n // g, g) + p.shape[1:]),
+                    layers)
                 x, aux = jax.lax.scan(group_fn, x, grouped)
             else:
-                x, aux = jax.lax.scan(layer_fn, x, params["layers"])
+                x, aux = jax.lax.scan(layer_fn, x, layers)
         else:
             auxes = []
-            for li in range(c.num_layers):
-                lp = jax.tree.map(lambda p: p[li], params["layers"])
+            for li in range(n):
+                lp = jax.tree.map(lambda p: p[li], layers)
                 x, a = layer_fn(x, lp)
                 auxes.append(a)
             aux = (jax.tree.map(lambda *a: jnp.stack(a), *auxes)
                    if auxes and auxes[0] else {})
+        return x, aux
+
+    def __call__(self, params: dict, inputs: jax.Array,
+                 shard: Shard = no_shard) -> tuple[jax.Array, dict]:
+        """inputs: [B, T] ids or [B, T, D] embeds -> (logits [B,T,V], aux)."""
+        c = self.cfg
+        B, T = inputs.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        x = self._embed(params, inputs, shard)
+
+        if c.hybrid:
+            def layer_fn(x, lp):
+                return self._mamba_layer(lp, x, shard)
+            if c.remat:
+                layer_fn = jax.checkpoint(
+                    layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+            g = c.hybrid.shared_every
+            n_groups = c.num_layers // g
+            grouped = jax.tree.map(
+                lambda p: p.reshape((n_groups, g) + p.shape[1:]),
+                params["layers"])
+            for gi in range(n_groups):
+                gp = jax.tree.map(lambda p: p[gi], grouped)
+                x, _ = jax.lax.scan(layer_fn, x, gp)
+                x = self._shared_block(params["shared"], x, positions, shard)
+            aux = {}
+        else:
+            x, aux = self.apply_layers(params["layers"], x, positions, shard)
 
         x = rmsnorm(params["ln_f"], x, c.norm_eps)
         logits = self._logits(params, x)
@@ -337,10 +361,11 @@ class LM:
 
     # -- loss -------------------------------------------------------------------
 
-    def loss(self, params: dict, batch: dict, shard: Shard = no_shard
-             ) -> tuple[jax.Array, dict]:
-        """batch: {"inputs": [B,T] or [B,T,D], "targets": [B,T], "mask": [B,T]}"""
-        logits, aux = self(params, batch["inputs"], shard)
+    def token_loss(self, logits: jax.Array, batch: dict
+                   ) -> tuple[jax.Array, dict]:
+        """Masked next-token NLL from precomputed logits — the reduction
+        half of :meth:`loss`, reused by the pipeline's last stage so staged
+        and monolithic execution share one loss definition."""
         targets = batch["targets"]
         mask = batch.get("mask")
         if mask is None:
@@ -358,7 +383,13 @@ class LM:
         nll = (lse - gold) * mask
         denom = jnp.maximum(jnp.sum(mask), 1.0)
         loss = jnp.sum(nll) / denom
-        metrics = {"nll": loss, "tokens": jnp.sum(mask)}
+        return loss, {"nll": loss, "tokens": jnp.sum(mask)}
+
+    def loss(self, params: dict, batch: dict, shard: Shard = no_shard
+             ) -> tuple[jax.Array, dict]:
+        """batch: {"inputs": [B,T] or [B,T,D], "targets": [B,T], "mask": [B,T]}"""
+        logits, aux = self(params, batch["inputs"], shard)
+        loss, metrics = self.token_loss(logits, batch)
         if aux and "lb_loss" in aux:
             lb = jnp.mean(aux["lb_loss"])
             zl = jnp.mean(aux["z_loss"])

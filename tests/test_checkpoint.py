@@ -1,6 +1,12 @@
 """Checkpoint round-trip coverage: quant_amax leaves, f32 master weights,
-the pre-precision-checkpoint compat path, and resume-under-remat.
+the pre-precision-checkpoint compat path, resume-under-remat, and elastic
+save-on-N / restore-on-M device-count changes.
 """
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -146,3 +152,136 @@ def test_resume_under_quantized_remat(tmp_path):
     out2 = train("tinyllama_1_1b", steps=12, resume=True, **kw)
     assert len(out2["losses"]) == 6, "resume must continue from step 6"
     assert out2["final_loss"] < out1["losses"][0], "no learning across resume"
+
+
+# -- elastic restore: save on N devices, restore on M -----------------------
+
+# Each phase runs in a subprocess with a forced host device count (the
+# XLA flag must be set before jax initializes).  The saver trains a
+# quantized tensorized model for two steps (advancing amax history and the
+# quantized-stash path) and checkpoints; the restorer rebuilds the state
+# template on a *different* device count, restores sharded onto its own
+# mesh, re-saves, and runs one step.  The parent asserts the two
+# checkpoints are bitwise-identical leaf-by-leaf and the one-step losses
+# agree (data batches are a pure function of step, so both sides consume
+# the same batch for step 2).
+
+_SAVER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count={n}")
+    from repro.launch.train import train
+    out = train("tinyllama_1_1b", smoke=True, tnn=True, steps=3,
+                global_batch=8, seq_len=32, lr=3e-3,
+                ckpt_dir={dir1!r}, ckpt_every=2, microbatches=2,
+                production_mesh=False, log_every=100,
+                tnn_precision="fp8", tnn_remat="quantized")
+    print("STEP2_LOSS", repr(out["losses"][2]))
+""")
+
+_RESTORER = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count={m}")
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import telemetry as tm
+    from repro.checkpoint import store
+    from repro.configs import base as cfgbase
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.distributed import sharding
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim.adamw import AdamW
+    from repro.precision import QuantPolicy
+
+    assert jax.device_count() == {m}
+    tm.configure()
+    arch = cfgbase.get("tinyllama_1_1b")
+    tnn_cfg = dataclasses.replace(
+        arch.tnn_default, precision=QuantPolicy.parse("fp8"),
+        remat="quantized")
+    model, cfg = steps_lib.build_model(arch, tnn=tnn_cfg, smoke=True)
+    mesh = make_host_mesh()
+    shard = sharding.make_sharder(mesh)
+    # Same opt hyperparameters as the saver's train(steps=3, lr=3e-3).
+    opt = AdamW(lr=3e-3, total_steps=3, warmup_steps=3, loss_scale=1.0)
+    params = model.init(jax.random.key(0))
+    state = {{"params": params, "opt": opt.init(params)}}
+    pspecs = sharding.param_specs(
+        jax.eval_shape(lambda: state["params"]), mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    state_shard = {{"params": pshard,
+                   "opt": type(state["opt"])(
+                       m=pshard, v=pshard,
+                       step=NamedSharding(mesh, P()))}}
+    step, state = store.restore({dir1!r}, state, step=2,
+                                shardings=state_shard)
+    assert step == 2, step
+    if {n} != {m}:
+        names = [e.get("name") for e in tm.snapshot()]
+        assert "checkpoint.elastic_restore" in names, names
+    store.save({dir2!r}, 2, state)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                  global_batch=8))
+    batch = {{k: jnp.asarray(v) for k, v in data.batch(2).items()}}
+    step_fn = jax.jit(steps_lib.make_train_step(model, opt, shard,
+                                                microbatches=2))
+    state, metrics = step_fn(state, batch)
+    print("STEP2_LOSS", repr(float(metrics["loss"])))
+""")
+
+
+def _run_phase(code: str) -> str:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=repo,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _step2_loss(stdout: str) -> float:
+    for line in stdout.splitlines():
+        if line.startswith("STEP2_LOSS"):
+            return float(line.split(None, 1)[1])
+    raise AssertionError(f"no STEP2_LOSS in output:\n{stdout}")
+
+
+def _assert_ckpt_bitwise_equal(dir1, dir2, step=2):
+    import json
+
+    a = np.load(os.path.join(dir1, f"step_{step:08d}", "shard_00000.npz"))
+    b = np.load(os.path.join(dir2, f"step_{step:08d}", "shard_00000.npz"))
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    with open(os.path.join(dir1, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize(
+    "n,m",
+    [
+        pytest.param(1, 2, id="1to2"),
+        pytest.param(2, 8, id="2to8", marks=pytest.mark.slow),
+        pytest.param(8, 2, id="8to2", marks=pytest.mark.slow),
+    ],
+)
+def test_elastic_save_restore_across_device_counts(tmp_path, n, m):
+    dir1, dir2 = str(tmp_path / "save"), str(tmp_path / "resave")
+    out_a = _run_phase(_SAVER.format(n=n, dir1=dir1))
+    out_b = _run_phase(_RESTORER.format(n=n, m=m, dir1=dir1, dir2=dir2))
+    meta = _assert_ckpt_bitwise_equal(dir1, dir2)
+    assert meta["device_count"] == n
+    loss_a, loss_b = _step2_loss(out_a), _step2_loss(out_b)
+    # Same state, same step-2 batch; only the data-parallel reduction
+    # order differs across device counts.
+    assert abs(loss_a - loss_b) <= 1e-5 * max(1.0, abs(loss_a)), (loss_a, loss_b)

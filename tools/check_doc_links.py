@@ -1,9 +1,19 @@
-"""Verify every relative markdown link in README.md and docs/ resolves.
+"""Verify the documentation set is connected and current.
 
-CI's lint job runs this so a renamed doc page or module can't leave
-dangling ``[text](path)`` references behind.  External links (http/https/
-mailto) and pure in-page anchors (``#...``) are skipped; ``path#anchor``
-links are checked for the file half only.
+Three checks, all run by CI's lint job:
+
+1. **Links resolve** — every relative ``[text](path)`` in README.md and
+   docs/ points at an existing file.  External links (http/https/mailto)
+   and pure in-page anchors (``#...``) are skipped; ``path#anchor`` links
+   are checked for the file half only.
+2. **Index reachability** — every ``docs/*.md`` page is reachable from
+   ``docs/INDEX.md`` by following relative links transitively, so a new
+   doc cannot be orphaned off the index.
+3. **Flags are real** — every ``--tnn-*`` / ``--serve-*`` flag a doc or
+   README mentions is actually accepted by ``launch/train.py`` /
+   ``launch/serve.py`` (extracted statically from their
+   ``add_argument("--...")`` calls), so docs cannot describe flags the
+   CLIs dropped or renamed.
 
     python tools/check_doc_links.py [root]
 """
@@ -48,17 +58,87 @@ def broken_links(path: str) -> list[str]:
     return out
 
 
+def _md_targets(path: str) -> set[str]:
+    """Absolute paths of the relative .md files ``path`` links to."""
+    base = os.path.dirname(path)
+    out: set[str] = set()
+    with open(path) as f:
+        for line in f:
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if rel.endswith(".md"):
+                    out.add(os.path.normpath(os.path.join(base, rel)))
+    return out
+
+
+def unreachable_docs(root: str) -> list[str]:
+    """docs/*.md pages not reachable from docs/INDEX.md via relative
+    links (followed transitively)."""
+    index = os.path.join(root, "docs", "INDEX.md")
+    if not os.path.isfile(index):
+        return [f"{index}: missing — docs/ has no index page"]
+    index = os.path.normpath(index)
+    seen, frontier = {index}, [index]
+    while frontier:
+        for target in _md_targets(frontier.pop()):
+            if target not in seen and os.path.isfile(target):
+                seen.add(target)
+                frontier.append(target)
+    docs = os.path.join(root, "docs")
+    return [
+        f"{p}: unreachable from docs/INDEX.md"
+        for f in sorted(os.listdir(docs)) if f.endswith(".md")
+        if (p := os.path.normpath(os.path.join(docs, f))) not in seen]
+
+
+# Flags the docs may mention: the --tnn-*/--serve-* namespaces owned by
+# the train/serve CLIs.  Generic flags (--steps, --arch, ...) are not
+# checked — they are shared with ad-hoc scripts and benchmarks.
+_DOC_FLAG = re.compile(r"--(?:tnn|serve)-[a-z][a-z0-9-]*")
+_ARGPARSE_FLAG = re.compile(r"add_argument\(\s*\"(--[a-z][a-z0-9-]*)\"")
+
+
+def cli_flags(root: str) -> set[str]:
+    """Flags train.py/serve.py accept (static add_argument scan)."""
+    out: set[str] = set()
+    for cli in ("train.py", "serve.py"):
+        path = os.path.join(root, "src", "repro", "launch", cli)
+        with open(path) as f:
+            out |= set(_ARGPARSE_FLAG.findall(f.read()))
+    return out
+
+
+def stale_flags(path: str, accepted: set[str]) -> list[str]:
+    out = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            for flag in _DOC_FLAG.findall(line):
+                if flag not in accepted:
+                    out.append(f"{path}:{lineno}: mentions {flag}, which "
+                               "neither train.py nor serve.py accepts")
+    return out
+
+
 def main(argv: list[str]) -> int:
     root = argv[1] if len(argv) > 1 else os.path.dirname(
         os.path.dirname(os.path.abspath(__file__)))
     failures: list[str] = []
     files = doc_files(root)
+    accepted = cli_flags(root)
     for f in files:
         failures += broken_links(f)
+        failures += stale_flags(f, accepted)
+    failures += unreachable_docs(root)
     for msg in failures:
         print(msg)
-    print(f"checked {len(files)} files: "
-          f"{'FAIL' if failures else 'all links resolve'}")
+    verdict = ("FAIL" if failures
+               else "all links resolve, docs reachable, flags current")
+    print(f"checked {len(files)} files "
+          f"({len(accepted)} CLI flags known): {verdict}")
     return 1 if failures else 0
 
 
